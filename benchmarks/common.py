@@ -1,0 +1,111 @@
+"""Shared benchmark substrate: a small trained LM + calibration/eval data +
+the PTQ->perplexity pipeline every paper-table benchmark reuses.
+
+The paper measures perplexity of HF checkpoints on WikiText-2/PTB/C4; those
+are unavailable offline, so each table is reproduced on an in-framework
+OPT-style model trained on the synthetic corpus (DESIGN.md §7). Directional
+claims (FP8 vs INT8, FP4 vs INT4, LoRC, M1/M2) are asserted on this testbed.
+
+The trained checkpoint is cached under .bench_cache/ so repeated benchmark
+runs are fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.checkpoint.manager import latest_step, restore, save
+from repro.core.policy import QuantPolicy
+from repro.core.ptq import gptq_quantize_lm
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.config import ArchConfig
+from repro.models.losses import chunked_xent
+from repro.optimizer import AdamWConfig
+from repro.runtime.train import TrainLoopConfig, train_loop
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", ".bench_cache")
+
+# OPT-mini: the paper family's shape at benchmark scale
+BENCH_CFG = ArchConfig(
+    name="opt-mini",
+    family="dense",
+    n_layers=4,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=1024,
+    vocab_size=4096,
+    attn_kind="gqa",
+    norm_kind="layernorm",
+    act_kind="relu",
+    mlp_gated=False,
+    use_bias=True,
+    pos_embedding="learned",
+    tie_embeddings=True,
+    max_position=512,
+    attn_chunk=512,
+)
+SEQ = 128
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "600"))
+
+
+def data_cfg(seed=0):
+    return DataConfig(vocab_size=BENCH_CFG.vocab_size, seq_len=SEQ,
+                      global_batch=16, seed=seed)
+
+
+def trained_params(refresh: bool = False):
+    """Train (or load cached) the benchmark model."""
+    os.makedirs(CACHE, exist_ok=True)
+    ckpt_dir = os.path.join(CACHE, f"opt_mini_{TRAIN_STEPS}")
+    init = models.init_params(BENCH_CFG, jax.random.PRNGKey(0))
+    if not refresh and latest_step(ckpt_dir) is not None:
+        return restore(ckpt_dir, init)
+    oc = AdamWConfig(lr=6e-3, warmup=50, total_steps=TRAIN_STEPS)
+    lc = TrainLoopConfig(steps=TRAIN_STEPS, log_every=50)
+    state, hist = train_loop(BENCH_CFG, data_cfg(), oc, lc)
+    save(ckpt_dir, TRAIN_STEPS, state.params)
+    print(f"  [trained opt-mini: nll {hist[0]['nll']:.3f} -> {hist[-1]['nll']:.3f}]")
+    return state.params
+
+
+def calib_batches(n=8, seed=99):
+    src = SyntheticLM(data_cfg(seed))
+    return [{"tokens": src.batch(i)["tokens"]} for i in range(n)]
+
+
+def eval_ppl(params, cfg=BENCH_CFG, a_fmt=None, n_batches=4, seed=1777) -> float:
+    """Perplexity on held-out synthetic batches; a_fmt simulates the
+    token-wise activation quantization at eval (the paper's A8)."""
+    src = SyntheticLM(data_cfg(seed))
+    total_nll, total_tok = 0.0, 0.0
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    for i in range(n_batches):
+        b = src.batch(i)
+        hidden, _, _ = models.forward_hidden(params, cfg, b, a_fmt=a_fmt)
+        nll, ntok = chunked_xent(hidden, head, b["labels"])
+        total_nll += float(nll) * float(ntok)
+        total_tok += float(ntok)
+    return float(np.exp(total_nll / total_tok))
+
+
+def quantize_with_policy(params, policy: QuantPolicy, calib=None):
+    """The paper's pipeline on the benchmark model (GPTQ layer-by-layer,
+    optional LoRC / scale constraints), returning dense fake-quant params."""
+    calib = calib if calib is not None else calib_batches()
+    return gptq_quantize_lm(params, BENCH_CFG, calib, policy)
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us

@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run artifacts (dryrun_results.json).
+
+Prints the per-(arch x shape x mesh) three-term roofline and emits CSV rows.
+This consumes the REQUIRED multi-pod dry-run output; run
+``PYTHONPATH=src python -m repro.launch.dryrun --mesh both`` first (or let
+benchmarks.run use the checked-in results).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def roofline_table(path: str = RESULTS):
+    if not os.path.exists(path):
+        print(f"[roofline] {path} missing — run repro.launch.dryrun first")
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    print("\n== Roofline (per device; v5e: 197 TF/s, 819 GB/s HBM, 50 GB/s ICI) ==")
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':6s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'bound':>10s} {'useful':>7s} {'roofline':>9s}")
+    print(hdr)
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r.get("mesh", ""))):
+        if r["status"] == "skipped":
+            print(f"{r['arch']:18s} {r['shape']:12s} {'-':6s} "
+                  f"{'skipped: ' + r['reason'][:48]}")
+            continue
+        if r["status"] != "ok":
+            print(f"{r['arch']:18s} {r['shape']:12s} ERROR {r.get('error', '')[:60]}")
+            continue
+        t = r["roofline"]
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{t['compute_s']*1e3:8.1f}m {t['memory_s']*1e3:8.1f}m "
+              f"{t['collective_s']*1e3:8.1f}m {t['dominant']:>10s} "
+              f"{t.get('useful_ratio', 0):7.2%} {t.get('roofline_fraction', 0):8.2%}")
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            t.get("roofline_fraction", 0.0),
+        ))
+    return rows

@@ -1,0 +1,102 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline table and kernel microbenchmarks.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel_microbench():
+    """us/call of the quantization primitives (CPU timings — relative cost
+    of ref vs pallas-interpret paths; TPU wall-time needs real hardware)."""
+    from repro.core.policy import QuantPolicy
+    from repro.core.ptq import pack_linear
+    from repro.kernels import ref
+    from repro.kernels.act_quant import act_quant_pallas
+    from repro.kernels.w4a8_matmul import w4a8_matmul_pallas
+    from .common import timed
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(1024, 1024)).astype(np.float32) * 0.05)
+    pl_w = pack_linear(w, QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3",
+                                      group_size=256, scale_mode="m2"))
+    xq = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32)).astype(jnp.bfloat16)
+
+    rows = []
+    print("\n== kernel microbench (CPU) ==")
+    aq_ref = jax.jit(lambda v: ref.act_quant_ref(v, "fp8_e4m3"))
+    t = timed(aq_ref, x)
+    rows.append(("kernel/act_quant_ref", t, 0.0))
+    t2 = timed(lambda v: act_quant_pallas(v, "fp8_e4m3", interpret=True), x)
+    rows.append(("kernel/act_quant_pallas_interp", t2, 0.0))
+    mm_ref = jax.jit(lambda v: ref.w4a8_matmul_ref(v, pl_w.codes, pl_w.scale))
+    t3 = timed(mm_ref, xq)
+    rows.append(("kernel/w4a8_matmul_ref", t3, 0.0))
+    t4 = timed(lambda v: w4a8_matmul_pallas(v, pl_w.codes, pl_w.scale,
+                                            s_max=pl_w.s_max, shifts=pl_w.shifts,
+                                            interpret=True), xq)
+    rows.append(("kernel/w4a8_matmul_pallas_interp", t4, 0.0))
+    for name, us, _ in rows:
+        print(f"{name:36s} {us:10.1f} us/call")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter of benchmarks")
+    ap.add_argument("--skip-tables", action="store_true",
+                    help="skip the (slow) trained-model paper tables")
+    args = ap.parse_args()
+
+    from . import paper_tables as pt
+    from .roofline_table import roofline_table
+
+    benches = [
+        ("fig2", pt.fig2_outlier_vector),
+        ("fig1", pt.fig1_activation_stats),
+        ("table1", pt.table1_act_quant),
+        ("table2", pt.table2_quant_matrix),
+        ("table3", pt.table3_scale_constraints),
+        ("tableA1", pt.table_a1_fp4_formats),
+        ("roofline", roofline_table),
+        ("kernels", kernel_microbench),
+    ]
+    slow = {"fig1", "table1", "table2", "table3", "tableA1"}
+
+    rows = []
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        if args.skip_tables and name in slow:
+            continue
+        t0 = time.time()
+        try:
+            rows.extend(fn() or [])
+            print(f"[{name} done in {time.time() - t0:.0f}s]")
+        except AssertionError as e:  # directional-claim violation
+            failures.append((name, str(e)))
+            print(f"[{name} CLAIM FAILED: {e}]")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, f"{type(e).__name__}: {e}"))
+            print(f"[{name} ERROR: {e}]")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.6g}")
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) failed: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

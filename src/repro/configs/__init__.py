@@ -1,0 +1,52 @@
+"""Architecture registry: one module per assigned arch, exact published
+configs + reduced smoke variants. ``get_config(name)`` / ``get_smoke(name)``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "whisper_tiny",
+    "minitron_8b",
+    "nemotron_4_340b",
+    "minicpm3_4b",
+    "olmo_1b",
+    "xlstm_125m",
+    "deepseek_v3_671b",
+    "olmoe_1b_7b",
+    "llava_next_34b",
+    "zamba2_1p2b",
+    # the paper's own experimental family (OPT-style, used by examples)
+    "opt_125m",
+]
+
+_ALIASES = {
+    "whisper-tiny": "whisper_tiny",
+    "minitron-8b": "minitron_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "minicpm3-4b": "minicpm3_4b",
+    "olmo-1b": "olmo_1b",
+    "xlstm-125m": "xlstm_125m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "llava-next-34b": "llava_next_34b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "opt-125m": "opt_125m",
+}
+
+
+def _module(name: str):
+    key = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def all_arch_names():
+    return [a for a in ARCHS if a != "opt_125m"]

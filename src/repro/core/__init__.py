@@ -1,0 +1,46 @@
+"""repro.core — the paper's contribution: FP-format post-training quantization.
+
+Public surface:
+  formats   — ExMy grids (E4M3/E5M2/E2M1/E3M0), INT grids, encode/decode
+  quantize  — FGQ group-wise weight quant, token-wise activation quant
+  gptq      — Hessian-guided one-shot weight rounding with error feedback
+  lorc      — low-rank compensation of quantization error
+  scales    — power-of-2 scale constraints (M1/M2) for FP4->FP8 casting
+  policy    — QuantPolicy presets mirroring the paper's experiment matrix
+  ptq       — whole-model PTQ driver (calibrate -> GPTQ -> LoRC -> pack)
+"""
+from .formats import (
+    FORMATS,
+    FloatFormat,
+    IntFormat,
+    fp_decode,
+    fp_encode,
+    get_format,
+    pack_nibbles,
+    quantize_to_grid,
+    unpack_nibbles,
+    value_grid,
+)
+from .gptq import HessianState, gptq_quantize, hessian_init, hessian_update
+from .lorc import LorcFactors, lorc_apply, lorc_compensate
+from .policy import PRESETS, QuantPolicy
+from .quantize import (
+    QuantizedTensor,
+    dequantize_weight,
+    fake_quantize_act,
+    fake_quantize_weight,
+    quantize_act_tokenwise,
+    quantize_weight,
+)
+from .scales import M2Scales, apply_scale_constraint, constrain_scales_m1, constrain_scales_m2
+
+__all__ = [
+    "FORMATS", "FloatFormat", "IntFormat", "fp_decode", "fp_encode",
+    "get_format", "pack_nibbles", "quantize_to_grid", "unpack_nibbles",
+    "value_grid", "HessianState", "gptq_quantize", "hessian_init",
+    "hessian_update", "LorcFactors", "lorc_apply", "lorc_compensate",
+    "PRESETS", "QuantPolicy", "QuantizedTensor", "dequantize_weight",
+    "fake_quantize_act", "fake_quantize_weight", "quantize_act_tokenwise",
+    "quantize_weight", "M2Scales", "apply_scale_constraint",
+    "constrain_scales_m1", "constrain_scales_m2",
+]

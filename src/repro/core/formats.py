@@ -1,0 +1,251 @@
+"""Numeric formats for ZeroQuant-FP.
+
+Implements the ExMy floating-point grids the paper uses (E4M3, E5M2 for FP8;
+E2M1, E3M0 for FP4) plus INT4/INT8 integer grids, with round-to-nearest-even
+quantization onto the exact representable value set.
+
+Conventions (documented in DESIGN.md §2):
+  * qtorch-style saturating grids: no inf/NaN codes, values clamp to the
+    max-magnitude representable number (the paper used the qtorch package;
+    footnote 3 of the paper).
+  * subnormals are represented exactly — at 4 bits they carry a large
+    fraction of the usable grid.
+  * rounding is round-to-nearest, ties-to-even on the mantissa grid.
+
+Everything here is pure jnp and jit-safe; these functions are also the
+oracles for the Pallas kernels (kernels/ref.py re-exports them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FloatFormat",
+    "IntFormat",
+    "FORMATS",
+    "get_format",
+    "quantize_to_grid",
+    "fp_encode",
+    "fp_decode",
+    "value_grid",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A saturating ExMy mini-float format (sign + exp_bits + man_bits)."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    bias: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def min_exp(self) -> int:
+        # exponent of the smallest *normal* number
+        return 1 - self.bias
+
+    @property
+    def max_exp(self) -> int:
+        # all-ones exponent is a normal value (saturating grid, no inf/nan)
+        return (2**self.exp_bits - 1) - self.bias
+
+    @property
+    def max_value(self) -> float:
+        # largest magnitude: max exponent, full mantissa
+        return float(2.0 ** self.max_exp * (2.0 - 2.0 ** (-self.man_bits)))
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.min_exp - self.man_bits))
+
+    def quantize(self, x):
+        """Round x (any float array) to the nearest representable value."""
+        return quantize_to_grid(x, self)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat:
+    """A b-bit integer grid. Symmetric uses [-2^(b-1)+1, 2^(b-1)-1]."""
+
+    name: str
+    bits: int
+    symmetric: bool = True
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def qmin(self) -> int:
+        if self.symmetric:
+            return -(2 ** (self.bits - 1) - 1)
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def levels(self) -> int:
+        return 2**self.bits - 1 if self.symmetric else 2**self.bits
+
+
+# ---------------------------------------------------------------------------
+# Registry. E3M0 with bias 3 gives magnitudes {0.25 .. 16} (pure powers of
+# two) per the paper's FP4 alternative; E2M1 bias 1 gives the paper's grid
+# {0, .5, 1, 1.5, 2, 3, 4, 6}.
+# ---------------------------------------------------------------------------
+FORMATS = {
+    "fp8_e4m3": FloatFormat("fp8_e4m3", exp_bits=4, man_bits=3, bias=7),
+    "fp8_e5m2": FloatFormat("fp8_e5m2", exp_bits=5, man_bits=2, bias=15),
+    "fp4_e2m1": FloatFormat("fp4_e2m1", exp_bits=2, man_bits=1, bias=1),
+    "fp4_e3m0": FloatFormat("fp4_e3m0", exp_bits=3, man_bits=0, bias=3),
+    "fp16": FloatFormat("fp16", exp_bits=5, man_bits=10, bias=15),
+    "bf16": FloatFormat("bf16", exp_bits=8, man_bits=7, bias=127),
+    "int8": IntFormat("int8", bits=8, symmetric=True),
+    "int8_asym": IntFormat("int8_asym", bits=8, symmetric=False),
+    "int4": IntFormat("int4", bits=4, symmetric=True),
+    "int4_asym": IntFormat("int4_asym", bits=4, symmetric=False),
+}
+
+
+def get_format(name: str):
+    if name in ("none", "fp32", None):
+        return None
+    return FORMATS[name]
+
+
+# ---------------------------------------------------------------------------
+# Exact powers of two.
+# XLA CPU lowers exp2 to a polynomial approximation (exp2(13.0) == 8192.004!)
+# which corrupts grid arithmetic. Build 2^k exactly from the IEEE-754 bit
+# pattern instead: for integer k in [-126, 127], f32(2^k) = (k+127) << 23.
+# (This is also the idiom the Pallas kernels use on TPU: a VPU integer op.)
+# ---------------------------------------------------------------------------
+def pow2i(k):
+    """Exact 2**k for integer-valued k (array ok), clamped to f32 normals."""
+    k = jnp.clip(jnp.asarray(k, jnp.int32), -126, 127)
+    bits = (k + 127).astype(jnp.uint32) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Grid rounding
+# ---------------------------------------------------------------------------
+def quantize_to_grid(x, fmt: FloatFormat):
+    """Round-to-nearest-even onto the saturating ExMy grid of ``fmt``.
+
+    Works on any float dtype; computes in f32. The grid step at |x| in
+    [2^e, 2^(e+1)) is 2^(e - man_bits); below the smallest normal the step
+    is the subnormal step 2^(min_exp - man_bits). jnp.round implements
+    ties-to-even, giving RNE on the mantissa.
+    """
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    max_val = fmt.max_value
+
+    # exponent of each element, clamped to the normal range
+    # (for |x| < min normal we use min_exp => subnormal step)
+    safe = jnp.maximum(absx, jnp.float32(1e-38))
+    e = jnp.floor(jnp.log2(safe))
+    e = jnp.clip(e, fmt.min_exp, fmt.max_exp)
+    step = pow2i(e.astype(jnp.int32) - fmt.man_bits)
+    q = jnp.round(x / step) * step
+    # rounding can carry into the next binade (e.g. 1.96 -> 2.0); that value
+    # is still on the grid, but it may exceed max_val at the top binade.
+    q = jnp.clip(q, -max_val, max_val)
+    q = jnp.where(absx == 0, jnp.zeros_like(q), q)
+    return q.astype(orig_dtype)
+
+
+@lru_cache(maxsize=None)
+def value_grid(name: str) -> np.ndarray:
+    """All representable values of a float format, sorted (numpy, cached)."""
+    fmt = FORMATS[name]
+    assert isinstance(fmt, FloatFormat)
+    vals = [0.0]
+    for e in range(fmt.min_exp, fmt.max_exp + 1):
+        for m in range(2**fmt.man_bits):
+            vals.append(2.0**e * (1.0 + m / 2**fmt.man_bits))
+    # subnormals: exponent field 0 -> value = 2^min_exp * (m / 2^man_bits)
+    for m in range(1, 2**fmt.man_bits):
+        vals.append(2.0**fmt.min_exp * (m / 2**fmt.man_bits))
+    vals = sorted(set(vals))
+    return np.array([-v for v in reversed(vals) if v] + vals, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Code <-> value (used by the packed-weight serving path and Pallas kernels)
+# Code layout: [sign | exp_bits | man_bits], most significant bit = sign.
+# ---------------------------------------------------------------------------
+def fp_encode(x, fmt: FloatFormat):
+    """Encode floats to integer codes (uint8) of ``fmt``. x must already be
+    on the grid (i.e. pass through quantize_to_grid first)."""
+    x = x.astype(jnp.float32)
+    sign = (x < 0) | ((x == 0) & (jnp.signbit(x)))
+    absx = jnp.abs(x)
+    safe = jnp.maximum(absx, fmt.min_subnormal)
+    e = jnp.floor(jnp.log2(safe)).astype(jnp.int32)
+    e = jnp.clip(e, fmt.min_exp, fmt.max_exp)
+    is_subnormal = absx < 2.0**fmt.min_exp
+    exp_field = jnp.where(is_subnormal, 0, e + fmt.bias)
+    scale = pow2i(jnp.where(is_subnormal, fmt.min_exp, e))
+    frac = absx / scale  # in [1, 2) normal; [0, 1) subnormal
+    man = jnp.where(
+        is_subnormal,
+        jnp.round(frac * 2**fmt.man_bits),
+        jnp.round((frac - 1.0) * 2**fmt.man_bits),
+    ).astype(jnp.int32)
+    # mantissa overflow from rounding (can't happen if x is on-grid, but be safe)
+    carry = man >= 2**fmt.man_bits
+    man = jnp.where(carry, 0, man)
+    exp_field = jnp.where(carry, exp_field + 1, exp_field)
+    exp_field = jnp.clip(exp_field, 0, 2**fmt.exp_bits - 1)
+    code = (
+        sign.astype(jnp.int32) << (fmt.exp_bits + fmt.man_bits)
+        | (exp_field << fmt.man_bits)
+        | man
+    )
+    return code.astype(jnp.uint8)
+
+
+def fp_decode(code, fmt: FloatFormat):
+    """Decode integer codes back to float32 values."""
+    code = code.astype(jnp.int32)
+    man_mask = 2**fmt.man_bits - 1
+    exp_mask = 2**fmt.exp_bits - 1
+    man = code & man_mask
+    exp_field = (code >> fmt.man_bits) & exp_mask
+    sign = (code >> (fmt.exp_bits + fmt.man_bits)) & 1
+    is_subnormal = exp_field == 0
+    e = jnp.where(is_subnormal, fmt.min_exp, exp_field - fmt.bias)
+    frac = jnp.where(
+        is_subnormal,
+        man.astype(jnp.float32) / 2**fmt.man_bits,
+        1.0 + man.astype(jnp.float32) / 2**fmt.man_bits,
+    )
+    val = pow2i(e) * frac
+    return jnp.where(sign == 1, -val, val)
+
+
+def pack_nibbles(codes):
+    """Pack uint8 4-bit codes (last dim even) into half as many bytes.
+    Low nibble = even index, high nibble = odd index."""
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed):
+    """Inverse of pack_nibbles."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

@@ -1,0 +1,56 @@
+"""LoRC — Low Rank Compensation (ZeroQuant-V2, used by ZeroQuant-FP).
+
+Given W and its quantized estimate W_q, the error E = W - W_q is SVD'd and
+approximated by rank-r factors:
+
+    E ~= U_r diag(s_r) V_r^T  =  (U_r sqrt(s_r)) (sqrt(s_r) V_r^T) = A B
+
+At inference the effective weight is W_q + A B, applied as a fused low-rank
+side path:  y = W_q x + A (B x)  — two skinny GEMMs, negligible FLOPs/bytes
+for r << min(out, in). The paper uses r=8 (LLaMA) / 16..56 (OPT) and notes
+r>=8 is enough.
+
+Optionally the factors themselves are quantized to 8-bit (the deployment
+variant ZeroQuant-V2 describes); exposed via ``quantize_factors``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .quantize import fake_quantize_weight
+
+__all__ = ["LorcFactors", "lorc_compensate", "lorc_apply"]
+
+
+class LorcFactors(NamedTuple):
+    a: jnp.ndarray  # (out, r)
+    b: jnp.ndarray  # (r, in)
+
+
+def lorc_compensate(
+    w,
+    w_q,
+    rank: int,
+    quantize_factors: Optional[str] = None,
+    factor_group: int = 0,
+) -> LorcFactors:
+    """Rank-``rank`` SVD compensation of the quantization error W - W_q."""
+    err = (w - w_q).astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(err, full_matrices=False)
+    r = min(rank, s.shape[0])
+    sq = jnp.sqrt(s[:r])
+    a = u[:, :r] * sq[None, :]
+    b = sq[:, None] * vt[:r, :]
+    if quantize_factors:
+        a = fake_quantize_weight(a, quantize_factors, group_size=factor_group or a.shape[1])
+        b = fake_quantize_weight(b, quantize_factors, group_size=factor_group or b.shape[1])
+    return LorcFactors(a=a, b=b)
+
+
+def lorc_apply(w_q, factors: Optional[LorcFactors]):
+    """Effective dense weight W_q + A B (simulation path)."""
+    if factors is None:
+        return w_q
+    return w_q + factors.a @ factors.b

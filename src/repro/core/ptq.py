@@ -1,0 +1,342 @@
+"""Whole-model PTQ driver.
+
+Three entry points:
+  * ``pack_linear(w, policy)``       — one weight -> PackedLinear (RTN or a
+                                       pre-computed GPTQ QuantizedTensor).
+  * ``quantize_tree(params, defs, policy)`` — walk a model's param tree,
+                                       replace every quantizable leaf with
+                                       its W4A8 deployment form. RTN path
+                                       (no calibration); used for serving
+                                       dry-runs and as the GPTQ fallback.
+  * ``gptq_quantize_lm(params, cfg, calib, policy)`` — the paper's pipeline:
+                                       layer-by-layer GPTQ over a calibration
+                                       stream with error propagation through
+                                       the quantized prefix, capturing the
+                                       four module inputs of Fig. 1
+                                       (q_proj, out_proj, fc1, fc2)
+                                       [+ gate for gated MLPs], then LoRC.
+
+Quantizability of a leaf is decided from its ParamDef: a >=2-D 'normal'-init
+matrix whose trailing (out, in) dims are both >= 64, not an embedding /
+vocab-tied / conv / router weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import PackedLinear
+from repro.models.params import ParamDef
+
+from .formats import FORMATS, FloatFormat, fp_encode, pack_nibbles
+from .gptq import gptq_quantize, hessian_init, hessian_update
+from .lorc import lorc_compensate
+from .policy import QuantPolicy
+from .quantize import fake_quantize_weight, quantize_weight
+from .scales import constrain_scales_m2
+
+__all__ = [
+    "is_quantizable",
+    "effective_group",
+    "pack_linear",
+    "packed_def",
+    "quantize_tree",
+    "quantized_shape_tree",
+    "gptq_quantize_lm",
+]
+
+
+def is_quantizable(d: ParamDef, path: str = "") -> bool:
+    if not isinstance(d, ParamDef):
+        return False
+    if d.init != "normal" or len(d.shape) < 2:
+        return False
+    if "vocab" in d.axes or "conv" in d.axes:
+        return False
+    if "router" in path or "pos_embed" in path:
+        return False
+    out_f, in_f = d.shape[-2], d.shape[-1]
+    return out_f >= 64 and in_f >= 64 and in_f % 2 == 0
+
+
+def effective_group(in_features: int, group: int) -> int:
+    """Largest divisor of in_features that is <= group.
+    The paper adjusts group to the hidden size (e.g. 320 for LLaMA-3b)."""
+    g = min(group, in_features)
+    while g > 1 and in_features % g:
+        g -= 1
+    return max(g, 1)
+
+
+def _pack_fp(qvalues, scale, policy: QuantPolicy, group_size: int, lorc=None):
+    fmt = FORMATS[policy.w_fmt]
+    codes = pack_nibbles(fp_encode(qvalues, fmt))
+    s_max = shifts = None
+    if policy.scale_mode == "m2":
+        m2 = constrain_scales_m2(scale)
+        s_max, shifts = m2.s_max, m2.shifts.astype(jnp.int8)
+    return PackedLinear(
+        codes=codes,
+        scale=scale.astype(jnp.float32),
+        s_max=s_max,
+        shifts=shifts,
+        lorc_a=None if lorc is None else lorc.a.astype(jnp.bfloat16),
+        lorc_b=None if lorc is None else lorc.b.astype(jnp.bfloat16),
+        w_fmt=policy.w_fmt,
+        a_fmt=policy.a_fmt,
+        group_size=group_size,
+    )
+
+
+def pack_linear(w, policy: QuantPolicy, qt=None, with_lorc: Optional[bool] = None):
+    """Quantize + pack one (out, in) weight. ``qt`` may carry a GPTQ result.
+
+    FP4 weights -> nibble-packed PackedLinear. Other weight formats fall back
+    to fake-quantized dense bf16 (the paper's deployment target is FP4)."""
+    w = jnp.asarray(w)
+    gs = effective_group(w.shape[-1], policy.group_size)
+    if qt is None:
+        from .scales import apply_scale_constraint
+
+        qt0 = quantize_weight(w.astype(jnp.float32), policy.w_fmt, gs)
+        scale = apply_scale_constraint(qt0.scale, policy.scale_mode)
+        qt = quantize_weight(w.astype(jnp.float32), policy.w_fmt, gs, scale=scale)
+
+    use_lorc = policy.lorc_rank > 0 if with_lorc is None else with_lorc
+    lorc = None
+    if use_lorc:
+        w_hat = qt.dequantize()
+        lorc = lorc_compensate(w.astype(jnp.float32), w_hat, policy.lorc_rank,
+                               quantize_factors=policy.lorc_fmt)
+
+    if not str(policy.w_fmt).startswith("fp4"):
+        # dense fallback: fake-quantized weights (sim path)
+        return None
+    return _pack_fp(qt.values, qt.scale, policy, qt.group_size, lorc)
+
+
+def _pack_batched(w, policy: QuantPolicy):
+    """Quantize + pack a (..., out, in) stacked weight by vmapping RTN."""
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+
+    def one(wi):
+        pl = pack_linear(wi, policy)
+        return pl
+
+    packed = [one(flat[i]) for i in range(flat.shape[0])]
+    # restack fields
+    def stack(field):
+        vals = [getattr(p, field) for p in packed]
+        if vals[0] is None:
+            return None
+        return jnp.stack(vals).reshape(lead + vals[0].shape)
+
+    p0 = packed[0]
+    return PackedLinear(
+        codes=stack("codes"), scale=stack("scale"), s_max=stack("s_max"),
+        shifts=stack("shifts"), lorc_a=stack("lorc_a"), lorc_b=stack("lorc_b"),
+        w_fmt=p0.w_fmt, a_fmt=p0.a_fmt, group_size=p0.group_size,
+    )
+
+
+def packed_def(d: ParamDef, policy: QuantPolicy):
+    """ShapeDtypeStruct PackedLinear matching what quantize_tree produces —
+    the dry-run stand-in for a quantized checkpoint (no allocation)."""
+    lead = d.shape[:-2]
+    out_f, in_f = d.shape[-2], d.shape[-1]
+    gs = effective_group(in_f, policy.group_size)
+    ng = in_f // gs
+    sds = jax.ShapeDtypeStruct
+    m2 = policy.scale_mode == "m2"
+    r = policy.lorc_rank
+    return PackedLinear(
+        codes=sds(lead + (out_f, in_f // 2), jnp.uint8),
+        scale=sds(lead + (out_f, ng), jnp.float32),
+        s_max=sds(lead + (out_f, 1), jnp.float32) if m2 else None,
+        shifts=sds(lead + (out_f, ng), jnp.int8) if m2 else None,
+        lorc_a=sds(lead + (out_f, r), jnp.bfloat16) if r else None,
+        lorc_b=sds(lead + (r, in_f), jnp.bfloat16) if r else None,
+        w_fmt=policy.w_fmt, a_fmt=policy.a_fmt, group_size=gs,
+    )
+
+
+def _map_with_defs(fn, params, defs):
+    """tree.map over (params, defs) with path strings; defs leaves=ParamDef."""
+    is_def = lambda x: isinstance(x, ParamDef)
+    flat_defs, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_def)
+    flat_params = treedef.flatten_up_to(params)
+    out = []
+    for (path, d), p in zip(flat_defs, flat_params):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(fn(pstr, d, p))
+    return jax.tree.unflatten(treedef, out)
+
+
+def quantize_tree(params, defs, policy: QuantPolicy):
+    """RTN-quantize every quantizable leaf -> serving param tree.
+
+    Non-FP4 weight policies keep dense (fake-quantized) weights; FP4 leaves
+    become PackedLinear."""
+
+    def visit(path, d, p):
+        if not is_quantizable(d, path):
+            return p
+        if str(policy.w_fmt).startswith("fp4"):
+            if len(d.shape) == 2:
+                return pack_linear(p, policy)
+            return _pack_batched(p, policy)
+        gs = effective_group(d.shape[-1], policy.group_size)
+        if len(d.shape) == 2:
+            return fake_quantize_weight(p.astype(jnp.float32), policy.w_fmt, gs).astype(p.dtype)
+        flat = p.reshape((-1,) + p.shape[-2:]).astype(jnp.float32)
+        q = jnp.stack([fake_quantize_weight(flat[i], policy.w_fmt, gs) for i in range(flat.shape[0])])
+        return q.reshape(p.shape).astype(p.dtype)
+
+    return _map_with_defs(visit, params, defs)
+
+
+def quantized_shape_tree(defs, policy: QuantPolicy):
+    """ShapeDtypeStruct tree of the serving checkpoint (dry-run input)."""
+
+    def visit(path, d, _p):
+        if is_quantizable(d, path) and str(policy.w_fmt).startswith("fp4"):
+            return packed_def(d, policy)
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+
+    shapes = jax.tree.map(lambda d: d, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return _map_with_defs(visit, shapes, defs)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ pipeline for the dense (gqa + mlp) LM family — the paper's procedure
+# ---------------------------------------------------------------------------
+def gptq_quantize_lm(params, cfg, calib_batches: List, policy: QuantPolicy,
+                     progress: bool = False):
+    """Layer-by-layer GPTQ with error propagation (paper §3 / Appendix A).
+
+    Works on the dense transformer family (cfg.attn_kind == 'gqa', mlp ffn,
+    no moe/ssm). Captures the four Fig.-1 module inputs per layer:
+      attn.q_proj (shared for q/k/v), attn.out_proj, fc1 (+gate), fc2.
+    Returns a new params tree with quantized (packed or dense-fake) weights.
+    """
+    from repro.models import transformer as _tf
+    from repro.models.attention import attention
+    from repro.models.layers import linear as _linear
+    from repro.models.layers import activation as _act
+    from repro.models.layers import mlp as _mlp
+    from repro.models.layers import norm as _norm
+
+    assert cfg.attn_kind == "gqa" and cfg.moe is None and cfg.ssm is None
+    seg = _tf.segments_for(cfg)[0]
+    nk = cfg.norm_kind
+
+    # embed calibration tokens once
+    xs = []
+    for b in calib_batches:
+        x = _tf._embed_tokens(params, cfg, b["tokens"])
+        if cfg.pos_embedding == "learned":
+            x = x + params["pos_embed"][: x.shape[1]][None].astype(x.dtype)
+        xs.append(x)
+
+    stack = params["segments"][0]
+    n_layers = jax.tree.leaves(stack)[0].shape[0]
+    new_stack = jax.tree.map(lambda a: np.asarray(a).copy(), stack)
+
+    def quantize_one(w, hstate, name):
+        gs = effective_group(w.shape[-1], policy.group_size)
+        if policy.method == "gptq":
+            _, qt = gptq_quantize(
+                w.astype(jnp.float32), hstate.h, policy.w_fmt, group_size=gs,
+                scale_mode=policy.scale_mode, damp=policy.damp,
+                block=min(128, gs),
+            )
+        else:
+            from .scales import apply_scale_constraint
+
+            qt0 = quantize_weight(w.astype(jnp.float32), policy.w_fmt, gs)
+            s = apply_scale_constraint(qt0.scale, policy.scale_mode)
+            qt = quantize_weight(w.astype(jnp.float32), policy.w_fmt, gs, scale=s)
+        w_hat = qt.dequantize()
+        if policy.lorc_rank:
+            fac = lorc_compensate(w.astype(jnp.float32), w_hat, policy.lorc_rank,
+                                  quantize_factors=policy.lorc_fmt)
+            w_hat = w_hat + fac.a @ fac.b
+        return w_hat.astype(w.dtype)
+
+    for li in range(n_layers):
+        p_layer = jax.tree.map(lambda a: jnp.asarray(a[li]), new_stack)
+        pm, pf = p_layer["mixer"], p_layer["ffn"]
+
+        # ---- capture module inputs over the calibration stream ------------
+        caps = {k: None for k in ("qkv", "out", "fc1", "fc2")}
+
+        def upd(key, val):
+            st = caps[key] if caps[key] is not None else hessian_init(val.shape[-1])
+            caps[key] = hessian_update(st, val)
+
+        for x in xs:
+            b, s, _ = x.shape
+            pos = jnp.arange(s)
+            h_ln = _norm(pm["ln"], x, nk, cfg.norm_eps)
+            upd("qkv", h_ln)
+            # replicate attention internals to capture out_proj input
+            hd, h_q, kv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+            from repro.models.attention import block_mask, _repeat_kv, _sdpa_full
+            from repro.models.layers import apply_rope
+
+            q = _linear(pm["attn"]["wq"], h_ln, pm["attn"].get("bq")).reshape(b, s, h_q, hd)
+            k = _linear(pm["attn"]["wk"], h_ln).reshape(b, s, kv, hd)
+            v = _linear(pm["attn"]["wv"], h_ln, pm["attn"].get("bv")).reshape(b, s, kv, hd)
+            if cfg.pos_embedding == "rope":
+                q, k = apply_rope(q, pos, cfg.rope_theta), apply_rope(k, pos, cfg.rope_theta)
+            g = h_q // kv
+            o = _sdpa_full(q, _repeat_kv(k, g), _repeat_kv(v, g),
+                           block_mask(s, s, 0, 0, cfg.causal, 0)).reshape(b, s, h_q * hd)
+            upd("out", o)
+            attn_out = _linear(pm["attn"]["wo"], o, pm["attn"].get("bo"))
+            x_mid = x + attn_out
+            f_ln = _norm(pf["ln"], x_mid, nk, cfg.norm_eps)
+            upd("fc1", f_ln)
+            up = _linear(pf["mlp"]["up"], f_ln, pf["mlp"].get("up_b"))
+            if "gate" in pf["mlp"]:
+                hmid = _act(_linear(pf["mlp"]["gate"], f_ln), cfg.act_kind) * up
+            else:
+                hmid = _act(up, cfg.act_kind)
+            upd("fc2", hmid)
+
+        # ---- quantize this layer's weights --------------------------------
+        wmap = [
+            (("mixer", "attn", "wq"), "qkv"), (("mixer", "attn", "wk"), "qkv"),
+            (("mixer", "attn", "wv"), "qkv"), (("mixer", "attn", "wo"), "out"),
+            (("ffn", "mlp", "up"), "fc1"), (("ffn", "mlp", "down"), "fc2"),
+        ]
+        if "gate" in p_layer["ffn"]["mlp"]:
+            wmap.append((("ffn", "mlp", "gate"), "fc1"))
+        for keys, cap in wmap:
+            node = new_stack
+            for k in keys[:-1]:
+                node = node[k]
+            w_old = jnp.asarray(node[keys[-1]][li])
+            w_new = quantize_one(w_old, caps[cap], "/".join(keys))
+            node[keys[-1]][li] = np.asarray(w_new)
+
+        # ---- propagate quantized layer outputs ----------------------------
+        p_q = jax.tree.map(lambda a: jnp.asarray(a[li]), new_stack)
+        xs_new = []
+        for x in xs:
+            b, s, _ = x.shape
+            pos = jnp.arange(s)
+            y, _, _ = _tf.block_apply(p_q, x, cfg, seg, pos)
+            xs_new.append(y)
+        xs = xs_new
+        if progress:
+            print(f"  gptq layer {li + 1}/{n_layers} done")
+
+    out = dict(params)
+    out["segments"] = [jax.tree.map(jnp.asarray, new_stack)]
+    return out

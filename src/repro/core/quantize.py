@@ -1,0 +1,172 @@
+"""Quantizers: fine-grained (group-wise) weight quantization and token-wise
+activation quantization, for both integer and floating-point grids.
+
+Weight convention follows GPTQ / ZeroQuant-V2 FGQ: a weight matrix is
+``(out_features, in_features)``; groups of ``group_size`` consecutive input
+channels share a scale *per output row*, so scales have shape
+``(out_features, in_features // group_size)``. The paper uses group 256.
+
+Activation convention is token-wise (per row of the flattened ``(tokens,
+features)`` activation), matching the paper's latency-friendly scheme.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .formats import FloatFormat, IntFormat, get_format, quantize_to_grid
+
+__all__ = [
+    "QuantizedTensor",
+    "compute_scales",
+    "quantize_weight",
+    "dequantize_weight",
+    "fake_quantize_weight",
+    "quantize_act_tokenwise",
+    "fake_quantize_act",
+]
+
+_EPS = 1e-12
+
+
+class QuantizedTensor(NamedTuple):
+    """Quant-sim container: values on the target grid (pre-scale), + scales.
+
+    ``values`` are the *normalized* on-grid numbers q (so w_hat = q * scale,
+    broadcast per group). ``zero_point`` is None for symmetric schemes.
+    """
+
+    values: jnp.ndarray  # same shape as the source tensor, f32 on-grid
+    scale: jnp.ndarray  # (out, n_groups) for weights; (tokens, 1) for acts
+    zero_point: Optional[jnp.ndarray]
+    group_size: int
+    fmt_name: str
+
+    def dequantize(self) -> jnp.ndarray:
+        return dequantize_weight(self)
+
+
+def _grid_max(fmt) -> float:
+    if isinstance(fmt, FloatFormat):
+        return fmt.max_value
+    return float(fmt.qmax)
+
+
+def _round_to_fmt(x, fmt):
+    """Round pre-scaled x onto the format grid."""
+    if isinstance(fmt, FloatFormat):
+        return quantize_to_grid(x, fmt)
+    # integer: RNE then clamp
+    return jnp.clip(jnp.round(x), fmt.qmin, fmt.qmax)
+
+
+def compute_scales(w_groups, fmt, symmetric: bool = True):
+    """Scales (and zero points) for grouped weights.
+
+    w_groups: (..., group_size) — the last axis is the group.
+    Returns (scale, zero_point) broadcastable against w_groups.
+    """
+    if symmetric or isinstance(fmt, FloatFormat):
+        absmax = jnp.max(jnp.abs(w_groups), axis=-1, keepdims=True)
+        # multiply by the f32 reciprocal instead of dividing: bit-identical
+        # between eager, jit and pallas-interpret execution (divisions by a
+        # constant are reciprocal-rewritten inconsistently across backends)
+        scale = absmax * jnp.float32(1.0 / _grid_max(fmt))
+        scale = jnp.maximum(scale, _EPS)
+        return scale, None
+    # asymmetric integer
+    wmax = jnp.max(w_groups, axis=-1, keepdims=True)
+    wmin = jnp.min(w_groups, axis=-1, keepdims=True)
+    scale = (wmax - wmin) / fmt.levels
+    scale = jnp.maximum(scale, _EPS)
+    zero = jnp.round(-wmin / scale) + fmt.qmin
+    return scale, zero
+
+
+def quantize_weight(
+    w,
+    fmt_name: str,
+    group_size: int = 256,
+    scale: Optional[jnp.ndarray] = None,
+) -> QuantizedTensor:
+    """FGQ group-wise quantization of a (out, in) weight matrix.
+
+    If ``scale`` (out, n_groups) is provided it is used as-is (this is how
+    the pow-2 constrained scales from core.scales are injected).
+    """
+    fmt = get_format(fmt_name)
+    out_f, in_f = w.shape
+    if group_size <= 0 or group_size > in_f:
+        group_size = in_f
+    assert in_f % group_size == 0, (in_f, group_size)
+    n_groups = in_f // group_size
+    wg = w.reshape(out_f, n_groups, group_size).astype(jnp.float32)
+
+    symmetric = not (isinstance(fmt, IntFormat) and not fmt.symmetric)
+    if scale is None:
+        s, z = compute_scales(wg, fmt, symmetric=symmetric)
+    else:
+        s = scale.reshape(out_f, n_groups, 1).astype(jnp.float32)
+        s = jnp.maximum(s, _EPS)
+        z = None
+        if not symmetric:
+            _, z = compute_scales(wg, fmt, symmetric=False)
+
+    if symmetric:
+        q = _round_to_fmt(wg / s, fmt)
+    else:
+        q = jnp.clip(jnp.round(wg / s) + z, fmt.qmin, fmt.qmax)
+
+    return QuantizedTensor(
+        values=q.reshape(out_f, in_f),
+        scale=s.reshape(out_f, n_groups),
+        zero_point=None if z is None else z.reshape(out_f, n_groups),
+        group_size=group_size,
+        fmt_name=fmt_name,
+    )
+
+
+def dequantize_weight(qt: QuantizedTensor) -> jnp.ndarray:
+    out_f, in_f = qt.values.shape
+    n_groups = in_f // qt.group_size
+    q = qt.values.reshape(out_f, n_groups, qt.group_size)
+    s = qt.scale.reshape(out_f, n_groups, 1)
+    if qt.zero_point is not None:
+        z = qt.zero_point.reshape(out_f, n_groups, 1)
+        q = q - z
+    return (q * s).reshape(out_f, in_f)
+
+
+def fake_quantize_weight(w, fmt_name: str, group_size: int = 256, scale=None):
+    """quantize->dequantize in one call (the PTQ simulator hot path)."""
+    if get_format(fmt_name) is None:
+        return w
+    return dequantize_weight(quantize_weight(w, fmt_name, group_size, scale))
+
+
+# ---------------------------------------------------------------------------
+# Activations — token-wise
+# ---------------------------------------------------------------------------
+def quantize_act_tokenwise(x, fmt_name: str):
+    """Token-wise quantization of activations.
+
+    x: (..., features). Each token (all leading dims) gets one scale from
+    its feature-axis absmax. Returns (q_values_on_grid, scale) with
+    x_hat = q * scale. Symmetric for both INT and FP (the paper's scheme).
+    """
+    fmt = get_format(fmt_name)
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax * jnp.float32(1.0 / _grid_max(fmt)), _EPS)
+    q = _round_to_fmt(x / scale, fmt)
+    return q, scale
+
+
+def fake_quantize_act(x, fmt_name: str):
+    """Token-wise quantize->dequantize; identity for fmt 'none'/'fp16-ish'."""
+    if get_format(fmt_name) is None:
+        return x
+    orig = x.dtype
+    q, scale = quantize_act_tokenwise(x, fmt_name)
+    return (q * scale).astype(orig)

@@ -1,0 +1,72 @@
+"""Power-of-2 scale constraints (paper §3, "Casting the FP4 to FP8").
+
+The W4A8 deployment problem: weights are FP4 (E2M1) with per-group FP scales,
+activations are FP8 (E4M3). On H100 the W must be cast to FP8 before the
+GEMM; on TPU our Pallas kernel decodes FP4->bf16 in VMEM. Either way an
+arbitrary real scale forces a multiply (and a scale-table gather) per group
+in the hot loop. Constraining scales to powers of two turns the scale apply
+into an exponent add (integer add on the bit pattern) — a bit shift.
+
+Two methods from the paper:
+
+  (M1) snap every scale to the nearest-above power of two:
+         S_hat = 2^ceil(log2 S)
+  (M2) per *compute group* (here: the groups of one output row, or several
+       rows — configurable), keep one full-precision S_max = max_i S_i and
+       snap only the ratios:
+         k_i   = ceil(log2(S_max / S_i))        (k_i >= 0, integer)
+         S_hat_i = S_max * 2^-k_i
+       Then dequant multiplies by S_max once (outside the loop) and applies
+       2^-k_i as an exponent subtraction per group. M2 approximates much
+       better than M1 (Table 3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .formats import pow2i
+
+__all__ = ["constrain_scales_m1", "constrain_scales_m2", "M2Scales", "apply_scale_constraint"]
+
+
+class M2Scales(NamedTuple):
+    scales: jnp.ndarray  # constrained real scales S_hat (same shape as input)
+    s_max: jnp.ndarray  # per compute group full-precision scale
+    shifts: jnp.ndarray  # integer k_i >= 0 with S_hat_i = s_max * 2^-k_i
+
+
+def constrain_scales_m1(scales):
+    """M1: S_hat = 2^ceil(log2 S). Exact powers of two are kept."""
+    scales = scales.astype(jnp.float32)
+    n = jnp.ceil(jnp.log2(jnp.maximum(scales, 1e-30)))
+    return pow2i(n.astype(jnp.int32))
+
+
+def constrain_scales_m2(scales, group_axis: int = -1, max_shift: int = 31) -> M2Scales:
+    """M2: per compute group along ``group_axis``.
+
+    ``scales`` is typically (out_rows, n_groups); the compute group (the set
+    sharing one S_max) defaults to the row (axis -1), matching "a (multiple)
+    row(s) of a matrix" in the paper. ``max_shift`` bounds k for fixed-width
+    exponent arithmetic in the kernel (int8 shift table -> 31 is generous).
+    """
+    scales = scales.astype(jnp.float32)
+    s_max = jnp.max(scales, axis=group_axis, keepdims=True)
+    ratio = jnp.maximum(s_max / jnp.maximum(scales, 1e-30), 1.0)
+    k = jnp.ceil(jnp.log2(ratio))
+    k = jnp.clip(k, 0, max_shift)
+    constrained = s_max * pow2i(-k.astype(jnp.int32))
+    return M2Scales(scales=constrained, s_max=s_max, shifts=k.astype(jnp.int32))
+
+
+def apply_scale_constraint(scales, mode: str, group_axis: int = -1):
+    """Dispatch: mode in {'none', 'm1', 'm2'} -> constrained real scales."""
+    if mode in (None, "none"):
+        return scales
+    if mode == "m1":
+        return constrain_scales_m1(scales)
+    if mode == "m2":
+        return constrain_scales_m2(scales, group_axis=group_axis).scales
+    raise ValueError(f"unknown scale constraint mode: {mode!r}")

@@ -1,0 +1,79 @@
+"""jit'd wrappers over the Pallas kernels with jnp-reference fallback.
+
+Backend selection:
+  * 'ref'      — pure-jnp oracle semantics (default off-TPU; also what the
+                 dry-run lowers, so rooflines see realistic HLO).
+  * 'pallas'   — pl.pallas_call TPU kernels (interpret=True on CPU for
+                 tests; compiled on real TPU).
+Set via set_backend() or REPRO_KERNEL_BACKEND env var.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
+
+
+def set_backend(name: str):
+    global _BACKEND
+    assert name in ("ref", "pallas", "pallas_interpret")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def act_quant(x, fmt_name: str = "fp8_e4m3"):
+    """Token-wise FP8 quantization -> (values_on_grid, scale)."""
+    if _BACKEND.startswith("pallas"):
+        from .act_quant import act_quant_pallas
+
+        return act_quant_pallas(x, fmt_name, interpret=_BACKEND == "pallas_interpret")
+    return _ref.act_quant_ref(x, fmt_name)
+
+
+def w4a8_matmul(x, w):
+    """x: (..., in); w: PackedLinear (2D codes after any scan slicing)."""
+    assert w.codes.ndim == 2, "batched PackedLinear must go through dequant_packed"
+    if _BACKEND.startswith("pallas"):
+        from .act_quant import act_quant_pallas
+        from .w4a8_matmul import w4a8_matmul_pallas
+
+        interp = _BACKEND in ("pallas", "pallas_interpret")  # CPU: always interpret
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        x2 = x.reshape(-1, k)
+        if w.a_fmt:
+            qv, sc = act_quant_pallas(x2, w.a_fmt, interpret=interp)
+            xq = (qv * sc).astype(jnp.bfloat16)
+        else:
+            xq = x2.astype(jnp.bfloat16)
+        y = w4a8_matmul_pallas(
+            xq, w.codes, w.scale, s_max=w.s_max, shifts=w.shifts,
+            w_fmt=w.w_fmt, group_size=w.group_size, interpret=interp,
+        )
+        if w.lorc_a is not None:
+            y = y + (xq @ w.lorc_b.T.astype(jnp.bfloat16)).astype(jnp.bfloat16) @ w.lorc_a.T.astype(jnp.bfloat16)
+        return y.reshape(*lead, -1).astype(x.dtype)
+    return _ref.w4a8_matmul_ref(
+        x, w.codes, w.scale, w.lorc_a, w.lorc_b,
+        w_fmt=w.w_fmt, a_fmt=w.a_fmt, group_size=w.group_size,
+    )
+
+
+def dequant_packed(w):
+    """PackedLinear -> dense f32 weights (used by einsum paths: MoE experts,
+    MLA absorbed projections)."""
+    out = _ref.dequant_packed_ref(w.codes, w.scale, w.w_fmt, w.group_size)
+    if w.lorc_a is not None:
+        out = out + jnp.einsum(
+            "...or,...ri->...oi", w.lorc_a.astype(jnp.float32), w.lorc_b.astype(jnp.float32)
+        )
+    return out

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the TPU kernels must match bit-for-bit
+(tests/test_kernels_* sweep shapes/dtypes and assert_allclose against these).
+They are also the CPU fallback execution path for serving simulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FORMATS, fp_decode, pow2i, quantize_to_grid, unpack_nibbles
+from repro.core.quantize import quantize_act_tokenwise
+
+__all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref"]
+
+
+def act_quant_ref(x, fmt_name: str = "fp8_e4m3"):
+    """Token-wise FP8 quantization: returns (values_on_grid, scale).
+    x: (..., d). scale: (..., 1) f32; values f32 on the E4M3 grid."""
+    return quantize_act_tokenwise(x, fmt_name)
+
+
+def dequant_packed_ref(codes, scale, fmt_name: str = "fp4_e2m1", group_size: int = 256):
+    """codes: (..., out, in/2) packed nibbles; scale: (..., out, n_groups).
+    Returns (..., out, in) BF16 dequantized weights — bf16 is what the TPU
+    kernel materializes in VMEM (decode product is exact in bf16 for E2M1's
+    1-mantissa-bit grid times a pow-2-constrained scale)."""
+    fmt = FORMATS[fmt_name]
+    q = fp_decode(unpack_nibbles(codes), fmt)  # (..., out, in) f32
+    out_f, in_f = q.shape[-2], q.shape[-1]
+    n_groups = scale.shape[-1]
+    gs = in_f // n_groups
+    qg = q.reshape(*q.shape[:-1], n_groups, gs)
+    w = (qg * scale[..., None].astype(jnp.float32)).reshape(*q.shape[:-2], out_f, in_f)
+    return w.astype(jnp.bfloat16)
+
+
+def w4a8_matmul_ref(x, codes, scale, lorc_a=None, lorc_b=None,
+                    w_fmt: str = "fp4_e2m1", a_fmt: str = "fp8_e4m3",
+                    group_size: int = 256):
+    """The W4A8 GEMM semantics: token-wise-FP8 activations x packed-FP4
+    weights (+ optional LoRC low-rank side path).
+
+    x: (..., in) float; codes: (out, in/2) uint8; scale: (out, G) f32.
+    Returns (..., out) in x.dtype.
+    """
+    from repro.models.layers import accum_dtype
+
+    if a_fmt:
+        qx, sx = quantize_act_tokenwise(x, a_fmt)
+        xq = (qx * sx).astype(jnp.bfloat16)  # values on grid * scale
+    else:
+        xq = x.astype(jnp.bfloat16)
+    w = dequant_packed_ref(codes, scale, w_fmt, group_size)  # (out, in) bf16
+    y = jax.lax.dot_general(xq, w, (((xq.ndim - 1,), (1,)), ((), ())),
+                            preferred_element_type=accum_dtype())
+    if lorc_a is not None:
+        y = y + jax.lax.dot_general(
+            jax.lax.dot_general(xq, lorc_b, (((xq.ndim - 1,), (1,)), ((), ())),
+                                preferred_element_type=accum_dtype()).astype(jnp.bfloat16),
+            lorc_a, (((xq.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=accum_dtype()).astype(y.dtype)
+    return y.astype(x.dtype)

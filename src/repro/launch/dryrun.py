@@ -1,0 +1,252 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Do not move them.
+
+import argparse  # noqa: E402
+import gc  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import all_arch_names, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_terms  # noqa: E402
+from repro.launch.shapes import SHAPES, shape_skip_reason  # noqa: E402
+from repro.launch.steps import lower_cell  # noqa: E402
+
+RESULTS_PATH = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def seq_flops_per_token(cfg, seq_or_cache: int) -> float:
+    """Attention flops per token against a context of length L (causal avg
+    for train/prefill handled by caller)."""
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        return 2 * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim + m.v_head_dim) * seq_or_cache
+    if cfg.attn_kind == "gqa":
+        return 2 * cfg.n_heads * cfg.resolved_head_dim * 2 * seq_or_cache
+    return 0.0
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs for the cell: 6·N·D train / 2·N·D inference
+    (N = active params), plus attention context terms."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        base = 6.0 * n_active * tokens
+        attn = 3.0 * tokens * seq_flops_per_token(cfg, shape.seq // 2)
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        base = 2.0 * n_active * tokens
+        attn = tokens * seq_flops_per_token(cfg, shape.seq // 2)
+    else:  # decode: one token per sequence
+        tokens = shape.batch
+        base = 2.0 * n_active * tokens
+        attn = tokens * seq_flops_per_token(cfg, shape.seq)
+    return base + attn
+
+
+def _kernel_adjust(terms, cfg, shape, total_dev):
+    """Serving cells lower the jnp REFERENCE W4A8 path, which materializes a
+    bf16 dequant of every weight (2 B/param write + 2 B/param read per use).
+    The Pallas kernel instead streams packed FP4 codes + scales from HBM
+    (0.5625 B/param) and decodes in VMEM. Adjust the memory term by the
+    difference; both numbers are reported (§Roofline)."""
+    import jax as _jax
+    import numpy as _np
+
+    from repro.core.policy import QuantPolicy
+    from repro.core.ptq import is_quantizable
+    from repro.models import build_def
+    from repro.models.params import ParamDef
+
+    defs = build_def(cfg)
+    flat, _ = _jax.tree.flatten_with_path(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    q_params = 0
+    for path, d in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if is_quantizable(d, pstr):
+            q_params += int(_np.prod(d.shape))
+    # per-device: weights are sharded across the whole mesh for serving
+    q_dev = q_params / total_dev
+    ref_traffic = 4.0 * q_dev  # bf16 dequant write + read
+    kernel_traffic = 0.5625 * q_dev  # packed codes + per-group scales
+    from .roofline import HW
+
+    adj = max(ref_traffic - kernel_traffic, 0.0) / HW["hbm_bw"]
+    terms["memory_s_ref"] = terms["memory_s"]
+    terms["memory_s"] = max(terms["memory_s"] - adj, terms["compute_s"] * 0.0)
+    terms["kernel_weight_adjust_s"] = adj
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["dominant"] = max(
+        [("compute", terms["compute_s"]), ("memory", terms["memory_s"]),
+         ("collective", terms["collective_s"])], key=lambda kv: kv[1])[0]
+    if "model_flops" in terms:
+        ideal = (terms["model_flops"] / total_dev) / HW["peak_flops"]
+        terms["roofline_fraction"] = ideal / max(bound, 1e-30)
+
+
+def _flash_adjust(terms, cfg, shape, mesh):
+    """OPT-IN (REPRO_FLASH_ADJUST=1, used for §Perf optimized numbers):
+    replace the jnp attention's measured softmax-materialization traffic by
+    the flash-attention kernel's (kernels/flash_attn.py — validated in
+    interpret mode). The jnp path materializes the (S, S)-class f32 scores
+    ~5x per attention (dot write, mask add, sub-exp, divide, convert; each
+    read+write); flash keeps the tile in VMEM and writes only the (S, dv)
+    output. We subtract 4 of ~5 score passes (conservative: TPU fusion
+    would already merge some)."""
+    if cfg.attn_kind not in ("gqa", "mla") or shape.kind == "decode":
+        return
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if shape.kind == "train":
+        reps = 3.0  # fwd + remat-fwd + bwd
+        b_loc = max(shape.batch // dsize, 1)
+        if cfg.param_count() >= 100e9:
+            b_loc = max(b_loc // 4, 1)  # grad-accum microbatching
+            reps *= 4
+    else:
+        reps = 1.0
+        b_loc = max(shape.batch // dsize, 1)
+    h_loc = max(cfg.n_heads // msize, 1)
+    s = shape.seq
+    enc = cfg.encoder_layers or 0
+    layers = cfg.n_layers + enc
+    score_bytes = b_loc * h_loc * float(s) * s * 4.0
+    saved = 4 * 2 * score_bytes * layers * reps / (1 if shape.kind == "train" else 1)
+    from .roofline import HW
+
+    adj = saved / HW["hbm_bw"]
+    terms["memory_s_jnp"] = terms["memory_s"]
+    terms["memory_s"] = max(terms["memory_s"] - adj, terms["compute_s"])
+    terms["flash_adjust_s"] = adj
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["dominant"] = max(
+        [("compute", terms["compute_s"]), ("memory", terms["memory_s"]),
+         ("collective", terms["collective_s"])], key=lambda kv: kv[1])[0]
+    if "model_flops" in terms:
+        total_dev = int(np.prod(list(mesh.shape.values())))
+        ideal = (terms["model_flops"] / total_dev) / HW["peak_flops"]
+        terms["roofline_fraction"] = ideal / max(bound, 1e-30)
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_skip_reason(cfg, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": skip}
+
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    total_dev = mesh.devices.size
+
+    terms = roofline_terms(cost, hlo, total_dev, model_flops(cfg, shape))
+    if shape.kind in ("prefill", "decode"):
+        _kernel_adjust(terms, cfg, shape, total_dev)
+    if os.environ.get("REPRO_FLASH_ADJUST") and shape.kind in ("train", "prefill"):
+        _flash_adjust(terms, cfg, shape, mesh)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "mode": meta["mode"],
+        "profile": {k: str(v) for k, v in meta["profile"].items()},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "total_bytes": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        },
+        "roofline": {
+            k: v for k, v in terms.items() if k != "collective"
+        },
+        "collective": terms["collective"],
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] OK "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"arg {mem.argument_size_in_bytes/2**30:.2f} GiB "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB | "
+              f"compute {terms['compute_s']*1e3:.2f} ms "
+              f"memory {terms['memory_s']*1e3:.2f} ms "
+              f"collective {terms['collective_s']*1e3:.2f} ms "
+              f"-> {terms['dominant']}-bound, "
+              f"roofline {terms.get('roofline_fraction', 0):.2%}")
+        print(f"  memory_analysis: {mem}")
+    del compiled, lowered
+    gc.collect()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_PATH)
+    args = ap.parse_args()
+
+    archs = all_arch_names() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for mesh_kind in meshes:
+        mesh = make_production_mesh(multi_pod=mesh_kind == "multi")
+        for arch in archs:
+            for shape_name in shapes:
+                key = (arch, shape_name, mesh_kind)
+                if any((r["arch"], r["shape"], r.get("mesh", "single")) == key
+                       and r["status"] in ("ok", "skipped") for r in results):
+                    print(f"[{arch} x {shape_name} x {mesh_kind}] cached, skipping")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_kind == "multi")
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    print(f"[{arch} x {shape_name} x {mesh_kind}] FAILED: {rec['error']}")
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r.get("mesh", "single")) != key]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                gc.collect()
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,397 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE
+— a scan over 96 layers reports 1/96th of the real FLOPs (verified
+empirically; see EXPERIMENTS.md §Dry-run). Since every model here scans its
+layer stack (and chunked attention scans q/kv blocks), we walk the
+post-optimization HLO text ourselves:
+
+  * computations are parsed into (name -> [ops]) with a per-computation
+    symbol table of operand shapes;
+  * ``while`` ops multiply their body+condition cost by the trip count
+    (read from the ``constant(N)`` in the condition computation — lax.scan
+    lowers to exactly this form);
+  * ``dot``: flops = 2 * prod(result dims) * prod(contracting dims);
+  * bytes use a write-centric traffic model: 2 x result bytes per
+    materializing op (one write + one later read), + dot/reduce operand
+    reads, + 2 x slice/update sizes for (dynamic-)slice/update ops. Counting
+    full fusion-operand sizes would wildly over-count scans, where the
+    stacked (n_layers, ...) weight arrays appear as loop-body fusion
+    operands but each iteration only touches one layer's slice;
+  * collectives are recorded with their enclosing trip-count multiplier —
+    a per-layer all-gather inside the scan counts layers-many times;
+  * ``conditional`` takes the max across branches (upper bound; noted).
+
+CPU f32-dot correction (``bf16_model=True``): this CPU backend's DotThunk
+supports neither BF16xBF16=F32 nor =BF16, so XLA rewrites EVERY bf16 matmul
+to convert-to-f32 + f32 dot. Model code here keeps all matmul inputs and
+outputs bf16 by construction, so any f32 dot operand/result — and any f32
+collective (GSPMD places weight/activation gathers on the converted-f32
+side) — is a CPU lowering artifact that a TPU build would carry in bf16.
+With the flag on, those count at 2 bytes/element. Raw (uncorrected) numbers
+are reported alongside in §Roofline. Known residual error: legitimately-f32
+collectives (logsumexp partials, scalar aux) are also halved — they are
+<1 percent of traffic in every measured cell.
+
+All numbers are PER-DEVICE (the module is post-SPMD-partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fnuz|f8e4m3fn|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(r"\)?\s*([a-z][a-z0-9\-]*)\(")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_ELEMENTWISE_SKIP = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "copy-start", "copy-done", "reshape", "transpose", "broadcast",
+    "iota", "after-all", "partition-id", "replica-id", "custom-call",
+    "infeed", "outfeed", "rng-get-and-update-state",
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+
+def _shapes_of(typestr: str) -> List[Tuple[str, List[int]]]:
+    return [(m.group(1), [int(x) for x in m.group(2).split(",") if x])
+            for m in _SHAPE_RE.finditer(typestr)]
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _nelems(shapes) -> int:
+    total = 0
+    for _dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    line: str
+    result_shapes: list
+    operands: list
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c["bytes"] * c["count"] for c in self.collectives)
+
+    @property
+    def collective_traffic(self) -> float:
+        return sum(c["traffic"] * c["count"] for c in self.collectives)
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        if not ls or ls.startswith("//") or ls.startswith("HloModule"):
+            continue
+        hdr = _COMP_HDR_RE.match(ls)
+        if hdr and ("->" in ls):
+            cur = hdr.group(1)
+            comps[cur] = []
+            if ls.startswith("ENTRY"):
+                entry = cur
+            continue
+        if ls == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(ls)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # opcode: first `word(` after the type expression. Find all; take
+        # the first that is a known op-looking token following the shapes.
+        # Strategy: strip the leading type expression (up to the first
+        # space-delimited token containing '[' closing), then match.
+        opm = None
+        # find opcode as the token right before the first '(' that is
+        # preceded by space and not part of a shape
+        paren_ops = re.findall(r"([a-z][a-z0-9\-]*)\(", rhs)
+        opcode = None
+        for cand in paren_ops:
+            if cand not in ("", ):
+                opcode = cand
+                break
+        if opcode is None:
+            continue
+        result_shapes = _shapes_of(rhs.split(opcode + "(", 1)[0])
+        operands = re.findall(r"%([\w.\-]+)", rhs.split(opcode + "(", 1)[1].split(")", 1)[0]) if opcode + "(" in rhs else []
+        comps[cur].append(_Op(name, opcode, ls, result_shapes, operands))
+    comps["__entry__"] = comps.get(entry, [])
+    if entry:
+        comps["__entry_name__"] = entry  # type: ignore[assignment]
+    return comps
+
+
+def _symbol_shapes(ops: List[_Op]) -> Dict[str, list]:
+    table = {}
+    for op in ops:
+        table[op.name] = op.result_shapes
+    return table
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    ops = comps.get(cond_name, [])
+    consts = []
+    for op in ops:
+        for m in _CONST_RE.finditer(op.line):
+            consts.append(int(m.group(1)))
+    # also look into fusions called from the condition
+    for op in ops:
+        cm = _CALLS_RE.search(op.line)
+        if cm and cm.group(1) in comps:
+            for op2 in comps[cm.group(1)]:
+                for m in _CONST_RE.finditer(op2.line):
+                    consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+def _dot_flops(op: _Op, table) -> float:
+    res = _nelems(op.result_shapes)
+    cm = _CONTRACT_RE.search(op.line)
+    contract = 1
+    if cm and op.operands:
+        lhs_shape = table.get(op.operands[0])
+        if lhs_shape:
+            dims = lhs_shape[0][1]
+            for idx in (int(x) for x in cm.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * res * contract
+
+
+def _coll_traffic(kind: str, nbytes: int, n: int) -> float:
+    if kind == "all-reduce":
+        return 2 * (n - 1) / max(n, 1) * nbytes
+    if kind == "all-gather":
+        return (n - 1) / max(n, 1) * nbytes
+    if kind == "reduce-scatter":
+        return (n - 1) / max(n, 1) * nbytes * n
+    if kind == "all-to-all":
+        return (n - 1) / max(n, 1) * nbytes
+    return float(nbytes)  # collective-permute
+
+
+def _f32_half(shapes, corrected: bool) -> float:
+    """Bytes of ``shapes`` with f32 counted at 2 B/elem when corrected."""
+    if not corrected:
+        return _nbytes(shapes)
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        bpe = _DTYPE_BYTES.get(dt, 4)
+        if dt == "f32":
+            bpe = 2
+        total += n * bpe
+    return total
+
+
+def _comp_cost(comps, name: str, total_devices: int, memo: dict,
+               mult: float = 1.0, bf16_model: bool = True) -> HloCost:
+    """Cost of one computation, WITHOUT the outer multiplier applied to the
+    returned aggregate (caller scales); collectives carry their own count."""
+    if name in memo:
+        base = memo[name]
+    else:
+        ops = comps.get(name, [])
+        table = _symbol_shapes(ops)
+        base = HloCost()
+        for op in ops:
+            oc = op.opcode
+            if oc == "while":
+                cond = _COND_RE.search(op.line)
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    inner = _comp_cost(comps, body.group(1), total_devices, memo, bf16_model=bf16_model)
+                    base.flops += trips * inner.flops
+                    base.bytes += trips * inner.bytes
+                    for c in inner.collectives:
+                        base.collectives.append(dict(c, count=c["count"] * trips))
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                branches = []
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                else:
+                    branches = re.findall(r"(?:true_computation|false_computation)=%?([\w.\-]+)", op.line)
+                if branches:
+                    costs = [_comp_cost(comps, b, total_devices, memo, bf16_model=bf16_model) for b in branches]
+                    worst = max(costs, key=lambda c: c.flops + c.bytes)
+                    base.flops += worst.flops
+                    base.bytes += worst.bytes
+                    base.collectives.extend(worst.collectives)
+                continue
+            if oc in ("fusion", "call", "map", "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+                if bf16_model and op.name.startswith(("wrapped_convert", "convert_bitcast")):
+                    # standalone input-convert fusions only exist because the
+                    # CPU DotThunk can't consume bf16; TPU reads bf16 directly
+                    # (the dot's operand pass is charged at the dot).
+                    res_bytes = 0
+                elif bf16_model and op.name.startswith("copy_"):
+                    # functional cache copies: elided on TPU by buffer
+                    # donation/aliasing (donate_argnums is set; the CPU
+                    # backend ignores donation and keeps the copies).
+                    res_bytes = 0
+                elif "dynamic-update-slice" in op.name:
+                    # in-place update traffic = the slice payloads only.
+                    # Full buffers (the aliased result, stacked scan buffers
+                    # read via fused dynamic-slice) are NOT streamed per
+                    # step on TPU. Heuristic: operands <= 4 MiB are
+                    # payloads (same threshold as the dot VMEM-residency
+                    # rule); larger ones are aliased/sliced stacked buffers
+                    # whose per-step traffic is slice-sized. Known
+                    # under-count: >4 MiB one-shot updates (prefill cache
+                    # writes) — bounded by cache-size/step, negligible vs
+                    # the prefill terms.
+                    sizes = [_nbytes(table.get(o, [])) for o in op.operands]
+                    res_bytes = sum(b for b in sizes if b <= 4 * 2**20)
+                elif bf16_model and "convert" in op.name:
+                    res_bytes = _f32_half(op.result_shapes, True)
+                else:
+                    res_bytes = _nbytes(op.result_shapes)
+                base.bytes += 2 * res_bytes  # write + one later read
+                cm = _CALLS_RE.search(op.line)
+                if cm and cm.group(1) in comps:
+                    inner = _comp_cost(comps, cm.group(1), total_devices, memo, bf16_model=bf16_model)
+                    # inner flops count; inner bytes DON'T (fusion), except
+                    # for 'call' which is a real boundary
+                    base.flops += inner.flops
+                    if oc == "call":
+                        base.bytes += inner.bytes
+                    for c in inner.collectives:
+                        base.collectives.append(dict(c))
+                elif oc in ("reduce", "reduce-window"):
+                    base.flops += sum(_nelems(table.get(o, [])) for o in op.operands)
+                    base.bytes += sum(_nbytes(table.get(o, [])) for o in op.operands)
+                continue
+            coll = next((k for k in COLLECTIVE_KINDS if oc == k or oc == k + "-start"), None)
+            if coll:
+                nb = _f32_half(op.result_shapes, bf16_model)
+                if coll == "reduce-scatter":
+                    nb = sum(_f32_half(table.get(o, []), bf16_model) for o in op.operands) or nb
+                    traffic = (max(_group_size(op.line, total_devices), 1) - 1) / max(
+                        _group_size(op.line, total_devices), 1) * nb
+                    base.collectives.append({"kind": coll, "bytes": nb, "count": 1,
+                                             "group": _group_size(op.line, total_devices),
+                                             "traffic": traffic})
+                else:
+                    n = _group_size(op.line, total_devices)
+                    base.collectives.append({"kind": coll, "bytes": nb, "count": 1,
+                                             "group": n,
+                                             "traffic": _coll_traffic(coll, nb, n)})
+                base.bytes += 2 * nb
+                continue
+            if oc in ("dot", "dot-general"):
+                base.flops += _dot_flops(op, table)
+                # VMEM-residency assumption: operands under 4 MiB of an
+                # in-loop dot stay resident on TPU (128 MiB VMEM) instead of
+                # being re-read from HBM every trip — without this, a
+                # recurrent cell (sLSTM: 4096 sequential steps) charges its
+                # 2 MiB weights per step and reports 100x the real traffic.
+                opnd_bytes = sum(
+                    b for b in (
+                        _f32_half(table.get(o, []), bf16_model) for o in op.operands
+                    ) if b >= 4 * 2**20
+                )
+                base.bytes += opnd_bytes + _f32_half(op.result_shapes, bf16_model)
+                continue
+            if oc == "convolution":
+                # flops ~ 2 * result elems * (kernel elems per output)
+                base.flops += 2.0 * _nelems(op.result_shapes) * max(
+                    (_nelems(table.get(op.operands[1], [])) // max(_nelems(op.result_shapes), 1)), 1
+                )
+                base.bytes += sum(_nbytes(table.get(o, [])) for o in op.operands) + _nbytes(op.result_shapes)
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                base.bytes += 2 * _nbytes(op.result_shapes)
+                continue
+            if oc in ("dynamic-update-slice",):
+                upd = _nbytes(table.get(op.operands[1], [])) if len(op.operands) > 1 else 0
+                base.bytes += 2 * upd
+                continue
+            if oc in _ELEMENTWISE_SKIP:
+                continue
+            # generic elementwise / compare / select / convert / exp ...
+            ne = _nelems(op.result_shapes)
+            base.flops += ne
+            base.bytes += ne and 0  # inside top-level: usually fused; don't double count
+        memo[name] = base
+    return base
+
+
+def analyze_hlo(hlo_text: str, total_devices: int, bf16_model: bool = True) -> HloCost:
+    comps = _parse_computations(hlo_text)
+    entry_name = comps.get("__entry_name__")
+    memo: dict = {}
+    if not isinstance(entry_name, str):
+        # fall back: cost every computation once (upper-ish bound)
+        entry_name = None
+        for k in comps:
+            if k.startswith("main"):
+                entry_name = k
+                break
+    base = _comp_cost(comps, entry_name or "__entry__", total_devices, memo,
+                      bf16_model=bf16_model)
+    return base

@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Conventions (validated empirically, EXPERIMENTS.md §Dry-run):
+  * compiled.cost_analysis() reports PER-DEVICE flops / bytes of the
+    SPMD-partitioned module, so
+        compute term    = flops / PEAK_FLOPS
+        memory term     = bytes accessed / HBM_BW
+  * collective bytes are parsed from compiled.as_text(): for each collective
+    op we take the RESULT shape bytes (per-device) and convert to per-link
+    traffic with the standard ring models:
+        all-reduce      2 (n-1)/n x bytes
+        all-gather        (n-1)/n x bytes      (result = gathered)
+        reduce-scatter    (n-1)/n x input bytes (= result x n)
+        all-to-all        (n-1)/n x bytes
+        collective-permute          1 x bytes
+    collective term = traffic / ICI_BW.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "parse_collectives"]
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*(?:\([^)]*\)|[\w\[\],{}()\s]*?)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3\w*|f8e5m2\w*|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(line: str) -> int:
+    """Sum result-shape bytes on an HLO line (handles tuple results)."""
+    # result shapes appear before the op name, after '='
+    lhs = line.split("=", 1)[1]
+    opidx = min(
+        [lhs.find(op) for op in
+         ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+         if lhs.find(op) >= 0]
+        or [len(lhs)]
+    )
+    total = 0
+    for m in _SHAPE_RE.finditer(lhs[:opidx]):
+        dt = m.group(1)
+        base = next((v for k, v in _DTYPE_BYTES.items() if dt.startswith(k)), 4)
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * base
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> List[Dict]:
+    out = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("//") or "= " not in ls:
+            continue
+        kinds = [k for k in ("all-reduce-start", "all-reduce", "all-gather-start",
+                             "all-gather", "reduce-scatter", "all-to-all",
+                             "collective-permute-start", "collective-permute")
+                 if f" {k}(" in ls or f"{k}(" in ls]
+        if not kinds:
+            continue
+        kind = kinds[0].replace("-start", "")
+        if "-done" in ls:
+            continue
+        b = _shape_bytes(ls)
+        n = _group_size(ls, total_devices)
+        if kind == "all-reduce":
+            traffic = 2 * (n - 1) / max(n, 1) * b
+        elif kind == "all-gather":
+            traffic = (n - 1) / max(n, 1) * b
+        elif kind == "reduce-scatter":
+            traffic = (n - 1) / max(n, 1) * b * n
+        elif kind == "all-to-all":
+            traffic = (n - 1) / max(n, 1) * b
+        else:  # collective-permute
+            traffic = b
+        out.append({"kind": kind, "bytes": b, "group": n, "traffic": traffic})
+    return out
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> Dict[str, float]:
+    colls = parse_collectives(hlo_text, total_devices)
+    per_kind: Dict[str, float] = {}
+    for c in colls:
+        per_kind[c["kind"]] = per_kind.get(c["kind"], 0.0) + c["bytes"]
+    return {
+        "ops": len(colls),
+        "bytes": sum(c["bytes"] for c in colls),
+        "traffic": sum(c["traffic"] for c in colls),
+        "per_kind": per_kind,
+    }
+
+
+def roofline_terms(cost: Dict, hlo_text: str, total_devices: int,
+                   model_flops: float = 0.0) -> Dict:
+    """Three-term roofline from the compiled HLO.
+
+    Primary source is the trip-count-aware HLO walk (launch/hlo_cost.py);
+    XLA's own cost_analysis() numbers (which count while bodies once) are
+    reported alongside as `xla_*` for reference.
+    """
+    from .hlo_cost import analyze_hlo
+
+    hc = analyze_hlo(hlo_text, total_devices, bf16_model=True)
+    hc_raw = analyze_hlo(hlo_text, total_devices, bf16_model=False)
+    flops = hc.flops
+    byts = hc.bytes
+    traffic = hc.collective_traffic
+    per_kind: Dict[str, float] = {}
+    n_ops = 0
+    for c in hc.collectives:
+        per_kind[c["kind"]] = per_kind.get(c["kind"], 0.0) + c["bytes"] * c["count"]
+        n_ops += c["count"]
+    coll = {"ops": n_ops, "bytes": hc.collective_bytes, "traffic": traffic,
+            "per_kind": per_kind}
+
+    t_compute = flops / HW["peak_flops"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = traffic / HW["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "device_flops": flops,
+        "device_bytes": byts,
+        "raw_bytes": hc_raw.bytes,
+        "raw_collective_traffic": hc_raw.collective_traffic,
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective": coll,
+    }
+    if model_flops:
+        # model_flops is GLOBAL useful flops; device_flops is per-device
+        out["model_flops"] = model_flops
+        out["useful_ratio"] = model_flops / max(flops * total_devices, 1.0)
+        bound = max(t_compute, t_memory, t_coll)
+        ideal = (model_flops / total_devices) / HW["peak_flops"]
+        out["roofline_fraction"] = ideal / max(bound, 1e-30)
+    return out

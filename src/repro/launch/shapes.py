@@ -1,0 +1,81 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+  train_4k      seq 4096,   global_batch 256   -> train_step
+  prefill_32k   seq 32768,  global_batch 32    -> prefill_step
+  decode_32k    seq 32768,  global_batch 128   -> serve_step (1 new token,
+                                                  KV cache of seq_len)
+  long_500k     seq 524288, global_batch 1     -> serve_step; only for
+                                                  sub-quadratic archs
+
+Skips (DESIGN.md §5/§6): long_500k is skipped for pure full-attention archs
+(whisper, minitron, nemotron, minicpm3, olmo, deepseek, olmoe, llava); runs
+for xlstm-125m (ssm) and zamba2-1.2b (hybrid). No encoder-only archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SHAPES", "ShapeSpec", "cell_supported", "batch_specs", "shape_skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_skip_reason(cfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.is_sub_quadratic:
+        return "full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md §5)"
+    return None
+
+
+def cell_supported(cfg, shape_name: str) -> bool:
+    return shape_skip_reason(cfg, shape_name) is None
+
+
+def batch_specs(cfg, shape: ShapeSpec):
+    """ShapeDtypeStructs for the step's data inputs (weak-type-correct,
+    shardable, no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    b = shape.batch
+    if shape.kind == "train":
+        s = shape.seq
+        out = {}
+        n_prefix = 0
+        if cfg.frontend == "vision_patches":
+            n_prefix = cfg.n_patches
+            out["patches"] = sds((b, n_prefix, 1024), jnp.float32)
+        if cfg.encoder_layers:
+            out["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        out["tokens"] = sds((b, s - n_prefix), jnp.int32)
+        out["labels"] = sds((b, s - n_prefix), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        s = shape.seq
+        out = {}
+        n_prefix = 0
+        if cfg.frontend == "vision_patches":
+            n_prefix = cfg.n_patches
+            out["patches"] = sds((b, n_prefix, 1024), jnp.float32)
+        if cfg.encoder_layers:
+            out["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        out["tokens"] = sds((b, s - n_prefix), jnp.int32)
+        return out
+    # decode: one new token; the KV/SSM cache of size shape.seq is a
+    # separate input built by cache_specs()
+    return {"tokens": sds((b, 1), jnp.int32)}

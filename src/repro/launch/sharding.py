@@ -1,0 +1,181 @@
+"""Sharding profiles: logical->physical rules per (arch x mode), cache
+partition specs, activation (sequence-parallel) constraints.
+
+Profiles (selected by parameter count / family — DESIGN.md §4):
+  * TP        — params over 'model' (heads/ffn/vocab/experts), replicated
+                elsewhere. Default for < 16B params.
+  * ZERO3     — TP + the 'embed' dim of params/moments over ('pod','data'):
+                fully-sharded at rest, layer-gathered inside the scan by
+                GSPMD. Required for 340B/671B to fit 16 GB/chip.
+  * SERVE_EP  — serving deepseek-scale MoE: experts over ('data','model')
+                (= EP 256, one expert per chip), everything else TP.
+
+Sequence parallelism (Megatron SP): the residual stream between blocks is
+sharded over 'model' along the sequence dim via a with_sharding_constraint
+hook (models/layers.set_residual_sharding). GSPMD inserts the all-gather
+before qkv/up projections and the reduce-scatter after wo/down — the
+standard TP+SP collective schedule.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import DEFAULT_RULES, pspec_tree
+from .mesh import dp_axes
+
+__all__ = [
+    "profile_for",
+    "train_rules",
+    "serve_rules",
+    "batch_pspecs",
+    "cache_pspecs",
+    "residual_spec",
+]
+
+BIG_PARAMS = 16e9  # above this, ZeRO-3 param sharding
+HUGE_PARAMS = 100e9  # above this, grad accumulation + fp8-sim moments
+SMALL_PARAMS = 2e9  # below this, train pure-DP over the whole mesh
+
+
+def non_expert_params(cfg) -> int:
+    if cfg.moe is None:
+        return cfg.param_count()
+    mult = 3 if cfg.mlp_gated else 2
+    routed = (cfg.n_layers - cfg.moe.n_dense_layers) * cfg.moe.n_experts *         mult * cfg.d_model * cfg.moe.d_ff
+    return cfg.param_count() - int(routed)
+
+
+def profile_for(cfg, mesh, mode: str) -> dict:
+    n = cfg.param_count()
+    dp = dp_axes(mesh)
+    # §Perf hillclimb: models under ~2B replicate comfortably — pure DP over
+    # ALL mesh axes (model axis joins the batch) removes every TP/SP
+    # collective; the only traffic left is the once-per-step grad reduction.
+    pure_dp = mode == "train" and n < SMALL_PARAMS
+    prof = {
+        "dp": tuple(mesh.shape.keys()) if pure_dp else dp,
+        "pure_dp": pure_dp,
+        "seq_shard": mode == "train" and not pure_dp,
+        "accum_steps": int(os.environ.get("REPRO_ACCUM", "4" if n >= HUGE_PARAMS else "1")) if mode == "train" else 1,
+        "moment_dtype": "fp8_sim" if n >= HUGE_PARAMS else "float32",
+        "zero3": n >= BIG_PARAMS,
+    }
+    return prof
+
+
+def train_rules(cfg, mesh, zero3: bool, moe_a2a: bool = False,
+                pure_dp: bool = False) -> tuple:
+    """(param_rules, moment_rules).
+
+    moe_a2a: expert weights live in the all-to-all EP layout — expert dim
+    sharded over the WHOLE mesh (weights fully local to their rank; no
+    ZeRO gather, no resharding at the shard_map boundary or the optimizer).
+    """
+    dp = dp_axes(mesh)
+    if pure_dp:
+        allax = tuple(mesh.shape.keys())
+        prules = {k: None for k in DEFAULT_RULES}
+        mrules = dict(prules, embed=allax, ffn=None, vocab=None, heads=None)
+        return prules, mrules
+    base = dict(DEFAULT_RULES)
+    zero = dict(DEFAULT_RULES, embed=dp if len(dp) > 1 else dp[0])
+    prules = dict(zero if zero3 else base)
+    mrules = dict(zero)
+    if moe_a2a and cfg.moe is not None:
+        import numpy as _np
+
+        for cand in (("data", "model"), ("model",)):
+            if all(a in mesh.shape for a in cand) and cfg.moe.n_experts % int(
+                _np.prod([mesh.shape[a] for a in cand])
+            ) == 0:
+                prules["expert"] = cand
+                mrules["expert"] = cand
+                break
+    return prules, mrules
+
+
+def serve_rules(cfg, mesh) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if cfg.moe is not None:
+        total = int(np.prod([mesh.shape[a] for a in mesh.shape]))
+        if cfg.moe.n_experts % total == 0:
+            rules["expert"] = tuple(mesh.shape.keys())  # EP across the whole mesh
+        else:
+            dm = tuple(a for a in ("data", "model") if a in mesh.shape)
+            if cfg.moe.n_experts % int(np.prod([mesh.shape[a] for a in dm])) == 0:
+                rules["expert"] = dm
+    return rules
+
+
+def batch_pspecs(batch_shapes, mesh, dp=None):
+    """Tokens/labels/frames: batch over (pod, data) — or all axes (pure DP)."""
+    dp = dp if dp is not None else dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(sds):
+        if sds.shape[0] % dsize == 0:
+            return P(dp, *([None] * (len(sds.shape) - 1)))
+        return P(*([None] * len(sds.shape)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def residual_spec(mesh) -> P:
+    """(B, S, d) residual: batch over dp, seq over model (Megatron SP)."""
+    return P(dp_axes(mesh), "model", None)
+
+
+# ---------------------------------------------------------------------------
+# Cache partition specs (decode/prefill)
+# ---------------------------------------------------------------------------
+def _cache_leaf_spec(shape, mesh) -> P:
+    """Heuristic per cache leaf. Layout conventions (models/*):
+    dim0 = stacked layers/invocations (never sharded), dim1 = batch.
+    Sequence dims are large (>= 4096); head dims divisible by 'model' shard.
+    """
+    dp = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape.get("model", 1)
+    nd = len(shape)
+    spec = [None] * nd
+    data_used = model_used = False
+    if nd >= 2 and shape[1] % dsize == 0 and shape[1] > 1:
+        spec[1] = dp
+        data_used = True
+    # kv-head dim for 5D (L, B, S, KV, hd)
+    if nd == 5 and shape[3] % msize == 0:
+        spec[3] = "model"
+        model_used = True
+    # ssm state (L, B, H, n, p): shard heads over model
+    if nd == 5 and not model_used and shape[2] % msize == 0 and shape[2] >= msize:
+        # only if dim2 is a head dim (heuristic: small-ish, not a sequence)
+        if shape[2] <= 1024:
+            spec[2] = "model"
+            model_used = True
+    # sequence dim (large): give it whatever axes remain
+    seq_dim = None
+    for i in range(1, nd):
+        if spec[i] is None and shape[i] >= 4096:
+            seq_dim = i
+            break
+    if seq_dim is not None:
+        remaining = []
+        if not data_used:
+            remaining.extend(dp)
+        if not model_used:
+            remaining.append("model")
+        if remaining:
+            rsize = int(np.prod([mesh.shape[a] for a in remaining]))
+            if shape[seq_dim] % rsize == 0:
+                spec[seq_dim] = tuple(remaining) if len(remaining) > 1 else remaining[0]
+    return P(*spec)
+
+
+def cache_pspecs(cache_shape_tree, mesh):
+    return jax.tree.map(lambda s: _cache_leaf_spec(s.shape, mesh), cache_shape_tree)

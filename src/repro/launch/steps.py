@@ -1,0 +1,273 @@
+"""Step builders: train_step / prefill_step / serve_step with full sharding
+specifications. The dry-run lowers exactly these functions; the CPU training
+examples run them on a 1-device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.core.policy import QuantPolicy
+from repro.core.ptq import quantized_shape_tree
+from repro.models.layers import set_accum_dtype, set_residual_sharding
+from repro.models.moe_a2a import set_moe_impl
+from repro.models.params import ParamDef, pspec_tree
+from repro.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+from .mesh import dp_axes
+from .sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    profile_for,
+    residual_spec,
+    serve_rules,
+    train_rules,
+)
+from .shapes import ShapeSpec, batch_specs
+
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "train_state_shapes",
+    "train_state_pspecs",
+    "lower_cell",
+]
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: OptState
+
+
+def train_state_shapes(cfg, opt_cfg: AdamWConfig):
+    pshapes = models.param_shapes(cfg)
+    mdt = jnp.dtype("bfloat16" if opt_cfg.moment_dtype == "fp8_sim" else opt_cfg.moment_dtype)
+    mshape = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), pshapes)
+    return TrainState(
+        params=pshapes,
+        opt=OptState(mu=mshape, nu=mshape, step=jax.ShapeDtypeStruct((), jnp.int32)),
+    )
+
+
+def train_state_pspecs(cfg, mesh, zero3: bool, moe_a2a: bool = False,
+                       pure_dp: bool = False):
+    prules, mrules = train_rules(cfg, mesh, zero3, moe_a2a=moe_a2a, pure_dp=pure_dp)
+    defs = models.build_def(cfg)
+    pspec = pspec_tree(defs, prules, mesh)
+    mspec = pspec_tree(defs, mrules, mesh)
+    return TrainState(
+        params=pspec, opt=OptState(mu=mspec, nu=mspec, step=P())
+    )
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, accum_steps: int = 1,
+                    a_fmt: Optional[str] = None, grad_compress=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_compress``: optional (compress, decompress) pair from
+    runtime.compress — applied to the gradient pytree before the optimizer
+    (the DP all-reduce then moves the compressed representation).
+    """
+
+    def loss_of(params, batch):
+        loss, metrics = models.loss_fn(
+            params, cfg, batch, a_fmt=a_fmt, remat=True,
+            mtp_weight=0.3 if cfg.mtp_depth else 0.0,
+        )
+        return loss, metrics
+
+    def one_grad(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = one_grad(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+
+            def acc_fn(carry, mb):
+                loss, metrics, grads = one_grad(state.params, mb)
+                acc_loss, acc_grads = carry
+                return (acc_loss + loss / accum_steps,
+                        jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                                     acc_grads, grads)), metrics
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss, grads), metrics = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zero_g), micro
+            )
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        if grad_compress is not None:
+            compress, decompress = grad_compress
+            grads = decompress(compress(grads))
+        new_params, new_opt, om = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, **om, loss=loss)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, max_seq: int, a_fmt: Optional[str] = None):
+    """prefill_step(params, batch) -> (last_logits, caches)."""
+
+    def prefill_step(params, batch):
+        return models.prefill(params, cfg, batch, max_seq, a_fmt=a_fmt)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, a_fmt: Optional[str] = "fp8_e4m3"):
+    """serve_step(params, caches, tokens, cache_index) -> (logits, caches).
+    ``params`` is the quantized serving checkpoint (PackedLinear leaves)."""
+
+    def serve_step(params, caches, tokens, cache_index):
+        return models.decode_step(params, cfg, tokens, caches, cache_index, a_fmt=a_fmt)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering — the dry-run entry: (arch x shape x mesh) -> compiled
+# ---------------------------------------------------------------------------
+def _ns(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (None specs -> replicated)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def lower_cell(cfg, shape: ShapeSpec, mesh, policy: Optional[QuantPolicy] = None,
+               opt_cfg: Optional[AdamWConfig] = None, seq_shard: Optional[bool] = None):
+    """Lower (no execution) one cell. Returns (lowered, meta dict)."""
+    prof = profile_for(cfg, mesh, shape.kind)
+    policy = policy or QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3",
+                                   scale_mode="m2", lorc_rank=8)
+    bshapes = batch_specs(cfg, shape)
+    bspecs = batch_pspecs(bshapes, mesh, dp=prof.get("dp"))
+    defs = models.build_def(cfg)
+
+    set_accum_dtype(jnp.bfloat16)  # TPU-mirroring lowering; see models.layers
+    # all-to-all expert parallelism for MoE training (EXPERIMENTS.md §Perf):
+    # tokens move instead of weights; requires E divisible by an axis product
+    if (shape.kind == "train" and cfg.moe is not None
+            and os.environ.get("REPRO_MOE_IMPL", "einsum") == "a2a"):
+        try:
+            total = int(np.prod(list(mesh.shape.values())))
+            if cfg.moe.n_experts % total == 0 or cfg.moe.n_experts % mesh.shape.get("model", 1) == 0:
+                set_moe_impl("a2a", mesh)
+        except Exception:  # noqa: BLE001
+            set_moe_impl("einsum", None)
+    use_seq_shard = prof["seq_shard"] if seq_shard is None else seq_shard
+    if use_seq_shard:
+        set_residual_sharding(
+            NamedSharding(mesh, residual_spec(mesh)),
+            heads_sharding=NamedSharding(mesh, P(dp_axes(mesh), None, "model", None)),
+        )
+    else:
+        set_residual_sharding(None)
+
+    try:
+        if shape.kind == "train":
+            from repro.models.moe_a2a import get_moe_impl
+
+            moe_a2a = get_moe_impl()[0] == "a2a" and cfg.moe is not None
+            zero3 = prof["zero3"]
+            # (measured & REFUTED, §Perf iteration 4: dropping ZeRO-3 on the
+            # non-expert remainder under a2a saved only ~1% collective while
+            # growing resident params by 3 GiB — keep ZeRO-3.)
+            opt_cfg = opt_cfg or AdamWConfig(moment_dtype=prof["moment_dtype"])
+            step = make_train_step(cfg, opt_cfg, accum_steps=prof["accum_steps"])
+            state_shapes = train_state_shapes(cfg, opt_cfg)
+            state_specs = train_state_pspecs(cfg, mesh, zero3, moe_a2a=moe_a2a,
+                                             pure_dp=prof.get("pure_dp", False))
+            fn = jax.jit(step,
+                         in_shardings=(_ns(mesh, state_specs), _ns(mesh, bspecs)),
+                         out_shardings=(_ns(mesh, state_specs), None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_shapes, bshapes)
+            return lowered, {"profile": prof, "mode": "train"}
+
+        if shape.kind == "prefill":
+            # serving path: quantized weights (the paper's W4A8 deployment)
+            srules = serve_rules(cfg, mesh)
+            qshapes = quantized_shape_tree(defs, policy)
+            qspecs = _packed_pspecs(defs, policy, srules, mesh)
+            step = make_prefill_step(cfg, max_seq=shape.seq, a_fmt=policy.a_fmt)
+            cshape = jax.eval_shape(
+                lambda: models.init_cache(cfg, shape.batch, shape.seq)
+            )
+            cspecs = cache_pspecs(cshape, mesh)
+            fn = jax.jit(step,
+                         in_shardings=(_ns(mesh, qspecs), _ns(mesh, bspecs)),
+                         out_shardings=(None, _ns(mesh, cspecs)))
+            lowered = fn.lower(qshapes, bshapes)
+            return lowered, {"profile": prof, "mode": "prefill"}
+
+        # decode
+        srules = serve_rules(cfg, mesh)
+        qshapes = quantized_shape_tree(defs, policy)
+        qspecs = _packed_pspecs(defs, policy, srules, mesh)
+        cshape = jax.eval_shape(lambda: models.init_cache(cfg, shape.batch, shape.seq))
+        cspecs = cache_pspecs(cshape, mesh)
+        step = make_serve_step(cfg, a_fmt=policy.a_fmt)
+        fn = jax.jit(step,
+                     in_shardings=(_ns(mesh, qspecs), _ns(mesh, cspecs),
+                                   _ns(mesh, bspecs["tokens"]), None),
+                     out_shardings=(None, _ns(mesh, cspecs)),
+                     donate_argnums=(1,))
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = fn.lower(qshapes, cshape, bshapes["tokens"], idx)
+        return lowered, {"profile": prof, "mode": "decode"}
+    finally:
+        set_residual_sharding(None)
+        set_accum_dtype(None)
+        set_moe_impl("einsum", None)
+
+
+def _packed_pspecs(defs, policy: QuantPolicy, rules, mesh):
+    """PartitionSpec tree matching quantized_shape_tree's structure."""
+    from repro.core.ptq import is_quantizable, packed_def
+    from repro.core.ptq import _map_with_defs
+    from repro.models.params import pspec_leaf
+
+    def visit(path, d, _):
+        if is_quantizable(d, path) and str(policy.w_fmt).startswith("fp4"):
+            pd = packed_def(d, policy)
+            # codes/scale/lorc inherit the (out, in) logical axes of the def
+            lead_axes = d.axes[:-2]
+            out_ax, in_ax = d.axes[-2], d.axes[-1]
+
+            def sized(shape, axes):
+                return pspec_leaf(ParamDef(shape, axes, d.dtype), rules, mesh)
+
+            return dataclasses.replace(
+                pd,
+                codes=sized(pd.codes.shape, lead_axes + (out_ax, None)),
+                scale=sized(pd.scale.shape, lead_axes + (out_ax, None)),
+                s_max=None if pd.s_max is None else sized(pd.s_max.shape, lead_axes + (out_ax, None)),
+                shifts=None if pd.shifts is None else sized(pd.shifts.shape, lead_axes + (out_ax, None)),
+                lorc_a=None if pd.lorc_a is None else sized(pd.lorc_a.shape, lead_axes + (out_ax, None)),
+                lorc_b=None if pd.lorc_b is None else sized(pd.lorc_b.shape, lead_axes + (None, in_ax)),
+            )
+        return pspec_leaf(d, rules, mesh)
+
+    return _map_with_defs(visit, jax.tree.map(lambda d: d, defs, is_leaf=lambda x: isinstance(x, ParamDef)), defs)

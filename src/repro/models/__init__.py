@@ -1,0 +1,21 @@
+"""repro.models — the architecture zoo (pure functional JAX)."""
+from .api import (
+    build_def,
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_pspecs,
+    param_shapes,
+    prefill,
+)
+from .config import ArchConfig, MLASpec, MoESpec, SSMSpec
+from .params import DEFAULT_RULES, ZERO1_RULES, ParamDef, init_tree, pspec_tree, shape_tree
+
+__all__ = [
+    "ArchConfig", "MLASpec", "MoESpec", "SSMSpec", "ParamDef",
+    "build_def", "decode_step", "forward_hidden", "init_cache", "init_params",
+    "loss_fn", "param_pspecs", "param_shapes", "prefill",
+    "DEFAULT_RULES", "ZERO1_RULES", "init_tree", "pspec_tree", "shape_tree",
+]

@@ -1,0 +1,254 @@
+"""Shared layer library: norms, activations, rotary embeddings, MLPs, and the
+quantizable linear — the single place where the paper's W4A8 serving path
+plugs into every architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import fake_quantize_act
+from .params import ParamDef
+
+__all__ = [
+    "PackedLinear",
+    "as_dense",
+    "set_accum_dtype",
+    "accum_dtype",
+    "set_residual_sharding",
+    "shard_residual",
+    "shard_heads",
+    "linear",
+    "norm",
+    "norm_params",
+    "activation",
+    "mlp_params",
+    "mlp",
+    "rope_freqs",
+    "apply_rope",
+]
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear container (serving path)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedLinear:
+    """W4A8-deployed linear: packed FP4 codes + (pow-2-constrained) scales
+    [+ optional LoRC factors]. Produced by core.ptq.pack_linear.
+
+    codes:  (out, in/2) uint8 — two E2M1 nibbles per byte
+    scale:  (out, n_groups) f32 — real scales (already M1/M2-constrained
+            when the policy asks for it)
+    s_max / shifts: M2 decomposition (s_max per row, k per group) or None
+    lorc_a/lorc_b: rank-r compensation factors or None
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    s_max: Optional[jnp.ndarray]
+    shifts: Optional[jnp.ndarray]
+    lorc_a: Optional[jnp.ndarray]
+    lorc_b: Optional[jnp.ndarray]
+    w_fmt: str = dataclasses.field(metadata=dict(static=True), default="fp4_e2m1")
+    a_fmt: Optional[str] = dataclasses.field(metadata=dict(static=True), default="fp8_e4m3")
+    group_size: int = dataclasses.field(metadata=dict(static=True), default=256)
+
+    @property
+    def out_features(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def in_features(self) -> int:
+        return self.codes.shape[-1] * 2
+
+
+def linear(w, x, bias=None):
+    """y = x @ W^T [+ b].
+
+    ``w`` is either a plain (out, in) array (train / fake-quant sim) or a
+    PackedLinear (W4A8 serving). Activations are f32/bf16; output keeps the
+    activation dtype; accumulation in f32 via preferred_element_type.
+    """
+    if isinstance(w, PackedLinear):
+        from repro.kernels import ops  # local import: kernels depend on core only
+
+        y = ops.w4a8_matmul(x, w)
+    else:
+        y = jax.lax.dot_general(
+            x,
+            w,
+            (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=accum_dtype(),
+        ).astype(x.dtype)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Activation (residual-stream) sharding hook — set by the launcher to enable
+# Megatron-style sequence parallelism; no-op by default.
+# ---------------------------------------------------------------------------
+_RESIDUAL_SHARDING = [None]
+_HEADS_SHARDING = [None]
+# Matmul accumulation dtype exposed to XLA via preferred_element_type.
+# f32 for execution paths (CPU tests/examples). The DRY-RUN lowers with
+# bf16: the CPU backend rewrites bf16xbf16->f32 dots into convert-to-f32 +
+# f32 dot, which would poison every adjacent collective/HBM measurement
+# with 2x-sized f32 tensors; a TPU consumes bf16 operands directly (f32
+# accumulation is internal to the MXU), which bf16-preferred lowering
+# mirrors exactly (results are cast back to bf16 right after each matmul
+# in this codebase anyway).
+_ACCUM_DTYPE = [None]
+
+
+def set_accum_dtype(dt):
+    _ACCUM_DTYPE[0] = dt
+
+
+def accum_dtype():
+    return _ACCUM_DTYPE[0] or jnp.float32
+
+
+def set_residual_sharding(named_sharding, heads_sharding=None):
+    """named_sharding: NamedSharding for the (B, S, d) residual (Megatron SP:
+    seq over 'model') or None. heads_sharding: NamedSharding for (B, S, H,
+    hd) attention tensors (heads over 'model') — pins GSPMD to the Megatron
+    layout so the q-chunk loop never slices across a sharded seq dim."""
+    _RESIDUAL_SHARDING[0] = named_sharding
+    _HEADS_SHARDING[0] = heads_sharding
+
+
+def shard_residual(x):
+    ns = _RESIDUAL_SHARDING[0]
+    if ns is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def shard_heads(x):
+    """Constraint for (B, S, H, hd) q/k/v tensors (no-op off-mesh)."""
+    ns = _HEADS_SHARDING[0]
+    if ns is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def as_dense(w, dtype=jnp.bfloat16):
+    """Materialize a (possibly Packed) weight as a dense array — used by
+    einsum call-sites (MoE expert stacks, MLA absorbed projections) where the
+    fused kernel path does not apply. On TPU this is where a batched dequant
+    kernel would slot in (hillclimb candidate)."""
+    if isinstance(w, PackedLinear):
+        from repro.kernels import ops
+
+        return ops.dequant_packed(w).astype(dtype)
+    return w
+
+
+def quant_act(x, a_fmt: Optional[str]):
+    """Token-wise activation fake-quant used on the serving path."""
+    if a_fmt is None:
+        return x
+    return fake_quantize_act(x, a_fmt)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_params(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": ParamDef((d,), ("embed",), cfg.param_dtype, "ones")}
+    if cfg.norm_kind == "layernorm":
+        p = {"scale": ParamDef((d,), ("embed",), cfg.param_dtype, "ones")}
+        p["bias"] = ParamDef((d,), ("embed",), cfg.param_dtype, "zeros")
+        return p
+    if cfg.norm_kind == "nonparam_ln":  # OLMo: LN without affine params
+        return {}
+    raise ValueError(cfg.norm_kind)
+
+
+def norm(p, x, kind: str, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    # layernorm / nonparam_ln
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu2":  # Nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated a-la SwiGLU, or plain 2-matmul)
+# ---------------------------------------------------------------------------
+def mlp_params(cfg, d_ff=None):
+    d, dtype = cfg.d_model, cfg.param_dtype
+    d_ff = d_ff or cfg.d_ff
+    p = {
+        "up": ParamDef((d_ff, d), ("ffn", "embed"), dtype),
+        "down": ParamDef((d, d_ff), ("embed", "ffn"), dtype),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = ParamDef((d_ff, d), ("ffn", "embed"), dtype)
+    if cfg.use_bias:
+        p["up_b"] = ParamDef((d_ff,), ("ffn",), dtype, "zeros")
+        p["down_b"] = ParamDef((d,), ("embed",), dtype, "zeros")
+    return p
+
+
+def mlp(p, x, cfg, a_fmt=None):
+    xq = quant_act(x, a_fmt)
+    up = linear(p["up"], xq, p.get("up_b"))
+    if "gate" in p:
+        h = activation(linear(p["gate"], xq), cfg.act_kind) * up
+    else:
+        h = activation(up, cfg.act_kind)
+    hq = quant_act(h, a_fmt)
+    return linear(p["down"], hq, p.get("down_b"))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(positions, dim: int, theta: float):
+    """positions: (...,) int -> (..., dim/2) angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    ang = rope_freqs(positions, hd, theta)  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

@@ -1,0 +1,77 @@
+"""Loss computation — sequence-chunked cross entropy.
+
+Materializing (B, S, vocab) f32 logits at vocab=256k would cost tens of GB
+per device; instead the head matmul + log-softmax run inside a lax.scan over
+sequence chunks, so the live logits buffer is (B, chunk, vocab/TP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_xent", "mtp_loss"]
+
+
+def chunked_xent(hidden, head_w, labels, mask=None, chunk: int = 512):
+    """hidden: (B, S, d); head_w: (V, d); labels: (B, S) int32.
+
+    Returns (mean_nll, n_tokens). mask: (B, S) float/bool or None.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(
+            mask if mask is not None else jnp.ones((b, s), jnp.float32),
+            ((0, 0), (0, pad)),
+        )
+    elif mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    hs = hidden.reshape(b, nc, chunk, d)
+    ls = labels.reshape(b, nc, chunk)
+    ms = mask.reshape(b, nc, chunk)
+
+    def step(acc, ci):
+        nll_sum, tok_sum = acc
+        h = hs[:, ci]  # (B, c, d)
+        from .layers import accum_dtype
+
+        logits = jax.lax.dot_general(
+            h, head_w, (((2,), (1,)), ((), ())), preferred_element_type=accum_dtype()
+        ).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[:, ci][..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms[:, ci]
+        return (nll_sum + jnp.sum(nll), tok_sum + jnp.sum(ms[:, ci])), None
+
+    (nll_sum, tok_sum), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), jnp.arange(nc)
+    )
+    return nll_sum / jnp.maximum(tok_sum, 1.0), tok_sum
+
+
+def mtp_loss(params, cfg, hidden, tokens, labels, seg, block_apply_fn, head_w, chunk=512):
+    """DeepSeek-V3-style Multi-Token Prediction (depth 1): combine the main
+    hidden state with the embedding of the next token, run one extra block,
+    predict token t+2. Returns the mean extra nll (caller weights it)."""
+    p = params["mtp"]
+    b, s = tokens.shape
+    # shift: combine h_t with embed(token_{t+1}) to predict label_{t+1} (=t+2 token)
+    nxt = jnp.take(params["embed"], tokens[:, 1:], axis=0)  # (B, S-1, d)
+    h_in = jnp.concatenate([hidden[:, :-1], nxt.astype(hidden.dtype)], axis=-1)
+    # pad back to the full sequence length: keeps every (seq % mesh-axis)
+    # divisibility property of the main path (a2a MoE, SP residual)
+    h_in = jnp.pad(h_in, ((0, 0), (0, 1), (0, 0)))
+    from .layers import linear, norm
+
+    h_in = linear(p["proj"], h_in)
+    positions = jnp.arange(s)
+    h_out, _, _ = block_apply_fn(p["block"], h_in, cfg, seg, positions)
+    h_out = norm(p["ln"], h_out, cfg.norm_kind, cfg.norm_eps)
+    loss, _ = chunked_xent(h_out[:, : s - 1], head_w, labels[:, 1:], chunk=chunk)
+    return loss

@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, MiniCPM3).
+
+Two execution forms, chosen statically by mode:
+  * train/prefill: materialized — expand the compressed latent into
+    per-head K/V and run standard chunked attention (cheapest at large S).
+  * decode: absorbed — the k_up projection is folded into the query and
+    v_up into the output, so attention runs in the (kv_lora_rank +
+    qk_rope_dim)-dim latent space against the *compressed* cache. The cache
+    stores only (c_kv, k_rope): (kv_lora_rank + qk_rope_dim) per token per
+    layer — MLA's whole point for serving.
+
+All projections are quantizable linears (the paper's W4A8 path applies).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, accum_dtype, apply_rope, as_dense, linear, norm, quant_act, shard_heads
+from .attention import block_mask, _sdpa_chunked, _sdpa_full
+
+__all__ = ["mla_params", "mla_attention", "init_mla_cache"]
+
+
+def mla_params(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    m = cfg.mla
+    h = cfg.n_heads
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = ParamDef((m.q_lora_rank, d), ("lora", "embed"), dt)
+        p["q_norm"] = {"scale": ParamDef((m.q_lora_rank,), ("lora",), dt, "ones")}
+        p["wq_b"] = ParamDef((h * dq, m.q_lora_rank), ("heads", "lora"), dt)
+    else:
+        p["wq"] = ParamDef((h * dq, d), ("heads", "embed"), dt)
+    p["wkv_a"] = ParamDef((m.kv_lora_rank + m.qk_rope_dim, d), ("lora", "embed"), dt)
+    p["kv_norm"] = {"scale": ParamDef((m.kv_lora_rank,), ("lora",), dt, "ones")}
+    p["wk_b"] = ParamDef((h * m.qk_nope_dim, m.kv_lora_rank), ("heads", "lora"), dt)
+    p["wv_b"] = ParamDef((h * m.v_head_dim, m.kv_lora_rank), ("heads", "lora"), dt)
+    p["wo"] = ParamDef((d, h * m.v_head_dim), ("embed", "heads"), dt)
+    return p
+
+
+def init_mla_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, m.qk_rope_dim), dtype),
+    }
+
+
+def _project_q(p, xq, cfg):
+    m, h = cfg.mla, cfg.n_heads
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    if "wq_a" in p:
+        ql = linear(p["wq_a"], xq)
+        ql = norm(p["q_norm"], ql, "rmsnorm", cfg.norm_eps)
+        q = linear(p["wq_b"], ql)
+    else:
+        q = linear(p["wq"], xq)
+    b, s = xq.shape[:2]
+    q = q.reshape(b, s, h, dq)
+    return q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+
+
+def mla_attention(
+    p,
+    x,
+    cfg,
+    positions,
+    kv_cache=None,
+    cache_index=None,
+    a_fmt: Optional[str] = None,
+):
+    """Returns (out, new_cache_or_None)."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    scale_dim = m.qk_nope_dim + m.qk_rope_dim
+
+    xq = quant_act(x, a_fmt)
+    q_nope, q_rope = _project_q(p, xq, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(p["wkv_a"], xq)  # (B, S, r + dr)
+    c_kv = norm(p["kv_norm"], kv_a[..., : m.kv_lora_rank], "rmsnorm", cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank :][:, :, None, :]  # (B, S, 1, dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    is_decode = kv_cache is not None and s == 1
+    if kv_cache is not None:
+        idx = 0 if cache_index is None else cache_index
+        ckv_c = jax.lax.dynamic_update_slice(
+            kv_cache["ckv"], c_kv.astype(kv_cache["ckv"].dtype), (0, idx, 0)
+        )
+        kr_c = jax.lax.dynamic_update_slice(
+            kv_cache["krope"], k_rope.astype(kv_cache["krope"].dtype), (0, idx, 0)
+        )
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+
+    if is_decode:
+        # ---- absorbed form against the compressed cache -------------------
+        ckv = new_cache["ckv"]  # (B, T, r) bf16
+        krope = new_cache["krope"]  # (B, T, dr)
+        t = ckv.shape[1]
+        wk_b = as_dense(p["wk_b"], x.dtype).reshape(h, m.qk_nope_dim, m.kv_lora_rank)
+        # q absorbed into latent space: (B, 1, H, r)
+        # batch-major einsum outputs (hbsr) — the CPU DotThunk rejects
+        # bf16xbf16->f32 dots whose output interleaves batch dims
+        q_lat = jnp.moveaxis(
+            jnp.einsum("bshn,hnr->hbsr", q_nope, wk_b,
+                       preferred_element_type=accum_dtype()), 0, 2
+        ).astype(x.dtype)
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv,
+                           preferred_element_type=accum_dtype()).astype(jnp.float32)
+        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
+                            preferred_element_type=accum_dtype()).astype(jnp.float32)
+        msk = block_mask(s, t, cache_index, 0, False, 0, kv_len=cache_index + s)
+        att = jax.nn.softmax((s_lat + s_rope) / jnp.sqrt(scale_dim) + msk[None, None], axis=-1)
+        ctx_lat = jnp.moveaxis(
+            jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
+                       preferred_element_type=accum_dtype()), 1, 2
+        ).astype(x.dtype)
+        wv_b = as_dense(p["wv_b"], x.dtype).reshape(h, m.v_head_dim, m.kv_lora_rank)
+        o = jnp.einsum("bshr,hvr->bshv", ctx_lat, wv_b,
+                       preferred_element_type=accum_dtype()).astype(x.dtype)
+    else:
+        # ---- materialized form (train / prefill) --------------------------
+        k_nope = linear(p["wk_b"], c_kv).reshape(b, s, h, m.qk_nope_dim)
+        v = linear(p["wv_b"], c_kv).reshape(b, s, h, m.v_head_dim)
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_dim))
+        q_full = shard_heads(jnp.concatenate([q_nope, q_rope], axis=-1))
+        k_full = shard_heads(jnp.concatenate([k_nope, k_rope_h.astype(k_nope.dtype)], axis=-1))
+        v = shard_heads(v)
+        # v padded to qk dim? no — chunked kernel handles distinct v dim via
+        # separate head_dim; _sdpa_* use v's own last dim.
+        if s > cfg.attn_chunk:
+            o = _sdpa_chunked(q_full, k_full, v, cfg.causal, cfg.window,
+                              cfg.attn_chunk, cfg.attn_chunk)
+        else:
+            o = _sdpa_full(q_full, k_full, v, block_mask(s, s, 0, 0, cfg.causal, 0))
+
+    o = o.reshape(b, s, h * m.v_head_dim)
+    out = linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))
+    return out, new_cache

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer (OLMoE 64e/top8, DeepSeek-V3 256e/top8+shared).
+
+SPMD design (TPU-native, GSPMD-friendly — see DESIGN.md §4):
+  * tokens stay sharded over the 'data' axis; experts shard over 'model'
+    (expert parallelism). Activations entering the layer are replicated
+    across 'model' (standard TP residual stream), so every model rank can
+    locally build the dispatch for *its* experts — no token-redistribution
+    all-to-all. The only collective is the final partial-sum all-reduce over
+    'model' of the combined outputs, the same volume class as a TP MLP.
+  * dispatch is the capacity-bounded one-hot einsum (t5x/flaxformer style):
+    tokens are processed in fixed-size groups; each group dispatches at most
+    C = group_size * top_k / E * capacity_factor tokens per expert; overflow
+    tokens are dropped (their residual passes through). Group size bounds
+    the dispatch-mask memory to (group, E, C) per step.
+  * router runs in f32 (softmax over experts), jitter optional.
+
+Weights are stored stacked: wg/wu (E, d_ff, d), wd (E, d, d_ff) — the
+quantizable unit for the paper's W4A8 path is the (d_ff, d) slice per
+expert (FGQ groups along d).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, activation, as_dense, linear, mlp, mlp_params, quant_act
+
+__all__ = ["moe_params", "moe_layer"]
+
+
+def moe_params(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    m = cfg.moe
+    e, ff = m.n_experts, m.d_ff
+    p = {
+        "router": ParamDef((e, d), ("expert", "embed"), dt, "normal", 1.0),
+        "wu": ParamDef((e, ff, d), ("expert", "ffn", "embed"), dt),
+        "wd": ParamDef((e, d, ff), ("expert", "embed", "ffn"), dt),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = ParamDef((e, ff, d), ("expert", "ffn", "embed"), dt)
+    if m.n_shared_experts:
+        shared_ff = (m.shared_d_ff or ff) * m.n_shared_experts
+        p["shared"] = mlp_params(cfg, d_ff=shared_ff)
+    return p
+
+
+def _dispatch_masks(logits, top_k: int, capacity: int):
+    """logits: (G, S, E) f32 -> (dispatch (G,S,E,C) bool, combine (G,S,E,C) f32).
+
+    Position-in-expert is priority-ordered by token position (drop-late).
+    """
+    g, s, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, top_k)  # (G, S, K)
+    # normalize the chosen probabilities (deepseek/olmoe convention)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # expert one-hot per k-slot: (G, S, K, E)
+    oh = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)
+    # priority: earlier tokens first, k-slots in order. Flatten (S, K).
+    ohf = oh.reshape(g, s * top_k, e)
+    pos = jnp.cumsum(ohf, axis=1) - ohf  # position of each assignment in its expert
+    keep = pos < capacity
+    posc = jnp.where(keep, pos, 0).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(posc, capacity, dtype=jnp.float32) * keep[..., None]
+    # (G, S*K, E, C) -> fold k back, combine weights
+    disp = (ohf[..., None] * pos_oh).reshape(g, s, top_k, e, capacity)
+    comb = disp * top_p[..., None, None]
+    dispatch = jnp.sum(disp, axis=2)  # (G, S, E, C)
+    combine = jnp.sum(comb, axis=2)
+    return dispatch, combine, probs
+
+
+def moe_layer(p, x, cfg, a_fmt: Optional[str] = None, group_size: int = 1024):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    g = max(n // group_size, 1)
+    sg = -(-n // g)
+    pad = g * sg - n  # MTP paths feed S-1 tokens; pad to a full grid
+    e = m.n_experts
+    capacity = max(int(sg * m.top_k / e * m.capacity_factor), 1)
+
+    xf = x.reshape(n, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xf = xf.reshape(g, sg, d)
+    logits = linear(p["router"], xf.astype(jnp.float32))  # router in f32
+    dispatch, combine, probs = _dispatch_masks(logits, m.top_k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(jnp.float32)
+
+    # expert inputs: (G, E, C, d) — E-sharded over 'model' via annotation
+    xq = quant_act(xf, a_fmt)
+    ex_in = jnp.einsum("gsec,gsd->gecd", dispatch, xq)
+
+    wu = as_dense(p["wu"], ex_in.dtype)
+    up = jnp.einsum("gecd,efd->gecf", ex_in, wu)
+    if "wg" in p:
+        gate = jnp.einsum("gecd,efd->gecf", ex_in, as_dense(p["wg"], ex_in.dtype))
+        h = activation(gate, cfg.act_kind) * up
+    else:
+        h = activation(up, cfg.act_kind)
+    hq = quant_act(h, a_fmt)
+    ex_out = jnp.einsum("gecf,edf->gecd", hq, as_dense(p["wd"], hq.dtype))
+
+    out = jnp.einsum("gsec,gecd->gsd", combine, ex_out.astype(jnp.float32))
+    out = out.reshape(g * sg, d)
+    if pad:
+        out = out[:n]
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    if m.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg, a_fmt=a_fmt)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(jnp.sum(dispatch, axis=-1).astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, aux

@@ -1,0 +1,141 @@
+"""Parameter definition trees.
+
+A model's parameters are described once as a pytree of ``ParamDef`` leaves
+(shape + dtype + logical axis names + init law). The same tree is then
+interpreted three ways:
+
+  * ``init_tree``   -> concrete arrays (training / smoke tests)
+  * ``shape_tree``  -> jax.ShapeDtypeStruct stand-ins (multi-pod dry-run,
+                       zero allocation)
+  * ``pspec_tree``  -> jax.sharding.PartitionSpec per leaf, from a logical->
+                       mesh-axis rules table (pjit in_shardings)
+
+Logical axis names used across the zoo:
+  'embed'   — d_model-sized dims (replicated)
+  'vocab'   — vocabulary (sharded over model axis)
+  'heads'   — attention head count dims
+  'kv'      — kv-head dims (sharded if divisible, else replicated)
+  'ffn'     — MLP intermediate
+  'expert'  — MoE expert count (expert parallelism)
+  'layers'  — stacked-layer leading dim of scanned blocks (never sharded)
+  'lora'    — MLA/LoRC low-rank dims (replicated)
+  'state'   — SSM state dims (replicated)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ParamDef", "init_tree", "shape_tree", "pspec_tree", "DEFAULT_RULES", "ZERO1_RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical name per dim, len == len(shape)
+    dtype: str = "bfloat16"
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float = 1.0  # stddev multiplier for 'normal' (fan-in handled here)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_leaf(d: ParamDef, key) -> jnp.ndarray:
+    dtype = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.02 * d.scale).astype(dtype)
+    # fan-in scaled normal over the last axis
+    fan_in = d.shape[-1] if len(d.shape) >= 1 else 1
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(tree, rng):
+    """Materialize a ParamDef tree into arrays with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_def)
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    out = [init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(tree):
+    """ShapeDtypeStruct stand-ins — no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        tree,
+        is_leaf=_is_def,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical sharding rules
+# ---------------------------------------------------------------------------
+# Tensor-parallel rules: model axis carries heads/ffn/vocab/experts.
+DEFAULT_RULES = {
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",  # resolved with divisibility fallback below
+    "ffn": "model",
+    "expert": "model",
+    "layers": None,
+    "lora": None,
+    "state": None,
+    "conv": None,
+}
+
+# ZeRO flavour: additionally shard the 'embed' (largest replicated) dim of
+# params/optimizer moments over the data axis.
+ZERO1_RULES = dict(DEFAULT_RULES, embed="data")
+
+
+def _axis_size(mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def pspec_leaf(d: ParamDef, rules, mesh=None) -> P:
+    """PartitionSpec for one leaf. Falls back to replication when the dim
+    size is not divisible by the assigned mesh-axis size (e.g. 8 kv heads on
+    a 16-way model axis, or odd vocab sizes)."""
+    spec = []
+    used = set()
+    for size, ax in zip(d.shape, d.axes):
+        phys = rules.get(ax) if ax is not None else None
+        parts = (phys,) if isinstance(phys, str) else tuple(phys or ())
+        if phys is None or any(a in used for a in parts):
+            spec.append(None)
+            continue
+        if mesh is not None:
+            asize = _axis_size(mesh, phys)
+            if asize == 0 or size % asize != 0:
+                spec.append(None)
+                continue
+        spec.append(phys)
+        used.update(parts)
+    return P(*spec)
+
+
+def pspec_tree(tree, rules=DEFAULT_RULES, mesh=None):
+    return jax.tree.map(lambda d: pspec_leaf(d, rules, mesh), tree, is_leaf=_is_def)

@@ -1,0 +1,199 @@
+"""State-space / linear-attention substrate.
+
+`gla_chunked` is the shared chunkwise engine: the recurrence
+    S_t = a_t * S_{t-1} + k_t v_t^T ,   y_t = q_t^T S_t
+with per-(head, step) scalar decay a_t = exp(log_a_t) <= 1 is evaluated in
+chunks — intra-chunk quadratic attention with decay weights, inter-chunk
+state carried by lax.scan. All exponents are <= 0, so no stabilizer is
+needed (Mamba2's SSD: a_t = exp(A * dt), A < 0).
+
+Mamba2 block: in_proj -> causal depthwise conv(4) -> SSD -> gated RMSNorm ->
+out_proj, with single-step recurrent decode carrying (ssm state, conv tail).
+
+All large projections are quantizable linears (the paper's W4A8 applies).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, linear, norm, quant_act
+
+__all__ = [
+    "gla_chunked",
+    "gla_step",
+    "mamba2_params",
+    "mamba2_block",
+    "init_mamba2_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise gated linear attention
+# ---------------------------------------------------------------------------
+def gla_chunked(q, k, v, log_a, s0=None, chunk: int = 256):
+    """q,k: (B, T, H, dk); v: (B, T, H, dv); log_a: (B, T, H) (<= 0).
+
+    Returns (y (B, T, H, dv), s_final (B, H, dk, dv)).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))  # decay 1 on pad
+
+    qs = q.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    ks = k.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    vs = v.reshape(b, nc, chunk, h, dv).astype(jnp.float32)
+    las = log_a.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    else:
+        s0 = s0.astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(s_in, ci):
+        qb, kb, vb, lab = qs[:, ci], ks[:, ci], vs[:, ci], las[:, ci]
+        lcum = jnp.cumsum(lab, axis=1)  # (B, c, H) inclusive
+        ltot = lcum[:, -1]  # (B, H)
+        # intra-chunk: w_ts = exp(L_t - L_s) * (q_t . k_s), s <= t
+        scores = jnp.einsum("bthd,bshd->bhts", qb, kb)
+        # decay matrix (B, H, t, s) = exp(L_t - L_s); mask s > t BEFORE the
+        # exp (the upper triangle has positive exponent -> inf * 0 = NaN)
+        expo = (
+            jnp.transpose(lcum, (0, 2, 1))[:, :, :, None]
+            - jnp.transpose(lcum, (0, 2, 1))[:, :, None, :]
+        )
+        decay = jnp.exp(jnp.where(causal[None, None] > 0, expo, -jnp.inf))
+        w = scores * decay
+        y_intra = jnp.einsum("bhts,bshd->bthd", w, vb)
+        # inter-chunk: y_t += exp(L_t) q_t^T S_in
+        y_inter = jnp.einsum("bthd,bhdv->bthv", qb * jnp.exp(lcum)[..., None], s_in)
+        # state update: S_out = exp(L_tot) S_in + sum_s exp(L_tot - L_s) k_s v_s^T
+        kw = kb * jnp.exp(ltot[:, None] - lcum)[..., None]
+        s_out = s_in * jnp.exp(ltot)[..., None, None] + jnp.einsum(
+            "bshd,bshv->bhdv", kw, vb
+        )
+        return s_out, (y_intra + y_inter)
+
+    s_fin, ys = jax.lax.scan(step, s0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, dv)[:, :t]
+    return y.astype(v.dtype), s_fin
+
+
+def gla_step(q, k, v, log_a, s):
+    """Single-token recurrent step. q,k: (B, H, dk); v: (B, H, dv);
+    log_a: (B, H); s: (B, H, dk, dv). Returns (y (B, H, dv), s')."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    s_new = s * a + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), s_new)
+    return y.astype(v.dtype), s_new
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width d_conv) with decode state
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, conv_state=None):
+    """x: (B, T, C); w: (d_conv, C). Returns (y, new_state (B, d_conv-1, C)).
+
+    Implemented as shifted adds (d_conv is tiny: 4)."""
+    dconv, c = w.shape
+    b, t, _ = x.shape
+    if conv_state is None:
+        hist = jnp.zeros((b, dconv - 1, c), x.dtype)
+    else:
+        hist = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)  # (B, T + dconv - 1, C)
+    y = jnp.zeros((b, t, c), jnp.float32)
+    for j in range(dconv):
+        y = y + xp[:, j : j + t].astype(jnp.float32) * w[j].astype(jnp.float32)
+    new_state = xp[:, -(dconv - 1) :] if dconv > 1 else jnp.zeros((b, 0, c), x.dtype)
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+def _mamba_dims(cfg):
+    ssm = cfg.ssm
+    d_in = cfg.d_model * ssm.expand
+    n_heads = d_in // ssm.head_dim
+    return d_in, n_heads, ssm.d_state, ssm.head_dim, ssm.d_conv
+
+
+def mamba2_params(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_in, h, n, p_dim, dconv = _mamba_dims(cfg)
+    proj_out = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": ParamDef((proj_out, d), ("ffn", "embed"), dt),
+        "conv_w": ParamDef((dconv, d_in + 2 * n), ("conv", None), dt, "normal", 0.5),
+        "dt_bias": ParamDef((h,), (None,), "float32", "zeros"),
+        "a_log": ParamDef((h,), (None,), "float32", "ones"),
+        "d_skip": ParamDef((h,), (None,), "float32", "ones"),
+        "out_norm": {"scale": ParamDef((d_in,), ("ffn",), dt, "ones")},
+        "out_proj": ParamDef((d, d_in), ("embed", "ffn"), dt),
+    }
+
+
+def init_mamba2_cache(cfg, batch, dtype=jnp.float32):
+    d_in, h, n, p_dim, dconv = _mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+        "conv": jnp.zeros((batch, dconv - 1, d_in + 2 * n), dtype),
+    }
+
+
+def mamba2_block(p, x, cfg, cache=None, a_fmt: Optional[str] = None):
+    """x: (B, T, d). cache (decode): {'ssm', 'conv'}. Returns (y, new_cache)."""
+    d_in, h, n, p_dim, dconv = _mamba_dims(cfg)
+    b, t, _ = x.shape
+
+    xq = quant_act(x, a_fmt)
+    zxbcdt = linear(p["in_proj"], xq)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + d_in + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = causal_conv(xbc, p["conv_w"], conv_state)
+    xs = xbc[..., :d_in]
+    b_in = xbc[..., d_in : d_in + n]  # (B, T, N), shared across heads (groups=1)
+    c_in = xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    a = -jnp.exp(p["a_log"])  # (H,) negative
+    log_decay = a[None, None, :] * dt  # (B, T, H) <= 0
+
+    # v = dt * x per head: (B, T, H, P)
+    v = xs.reshape(b, t, h, p_dim).astype(jnp.float32) * dt[..., None]
+    q = jnp.broadcast_to(c_in[:, :, None, :], (b, t, h, n))
+    k = jnp.broadcast_to(b_in[:, :, None, :], (b, t, h, n))
+
+    s0 = cache["ssm"] if cache is not None else None
+    if t == 1 and cache is not None:
+        y1, s_new = gla_step(q[:, 0], k[:, 0], v[:, 0], log_decay[:, 0], s0)
+        y = y1[:, None]
+    else:
+        # (B,H,dk,dv) layout: dk=n (state), dv=p (head channel)
+        y, s_new = gla_chunked(q, k, v, log_decay, s0=s0, chunk=cfg.ssm.chunk)
+
+    y = y + xs.reshape(b, t, h, p_dim).astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, d_in)
+    y = norm(p["out_norm"], y.astype(x.dtype), "rmsnorm", cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = linear(p["out_proj"], quant_act(y, a_fmt))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": s_new, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache

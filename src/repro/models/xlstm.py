@@ -1,0 +1,288 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential), assembled in alternating pairs.
+
+mLSTM cell (stabilized exponential gating):
+    weight(t, s) = exp(L_t - L_s + i_s - m_t),  L = cumsum(logsigmoid(f)),
+    m_t = running max of the exponent (flash-attention-style online max),
+    h_t = [sum_s w(t,s) (q_t.k_s/sqrt(dk)) v_s] / max(|den_t|, exp(-m_t)).
+Evaluated blockwise like chunked attention (train/prefill) and as an exact
+recurrent step with (C, n, m) carry for decode — the long_500k path.
+
+sLSTM: per-head scalar memory with recurrent gate preactivations through a
+block-diagonal R; evaluated with lax.scan over time (inherently sequential;
+the xLSTM paper's point). Decode is a single step of the same cell.
+
+Both blocks' projections are quantizable linears (paper's W4A8 applies).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamDef, as_dense, linear, norm, quant_act
+from .ssm import causal_conv
+
+__all__ = [
+    "mlstm_params",
+    "mlstm_block",
+    "init_mlstm_cache",
+    "slstm_params",
+    "slstm_block",
+    "init_slstm_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model  # projection factor 2
+    h = cfg.n_heads
+    dk = d_in // h
+    return d_in, h, dk
+
+
+def mlstm_params(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_in, h, dk = _mlstm_dims(cfg)
+    return {
+        "up_proj": ParamDef((2 * d_in, d), ("ffn", "embed"), dt),  # x branch + z gate
+        "conv_w": ParamDef((4, d_in), ("conv", None), dt, "normal", 0.5),
+        "wq": ParamDef((d_in, d_in), ("heads", "ffn"), dt),
+        "wk": ParamDef((d_in, d_in), ("heads", "ffn"), dt),
+        "wv": ParamDef((d_in, d_in), ("heads", "ffn"), dt),
+        "wi": ParamDef((h, d_in), (None, "ffn"), dt, "normal", 0.5),
+        "wf": ParamDef((h, d_in), (None, "ffn"), dt, "normal", 0.5),
+        "bi": ParamDef((h,), (None,), "float32", "zeros"),
+        "bf": ParamDef((h,), (None,), "float32", "ones"),
+        "out_norm": {"scale": ParamDef((d_in,), ("ffn",), dt, "ones")},
+        "down_proj": ParamDef((d, d_in), ("embed", "ffn"), dt),
+    }
+
+
+def init_mlstm_cache(cfg, batch):
+    d_in, h, dk = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), jnp.float32),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
+    """q,k,v: (B, T, H, dk); log_f (<=0), log_i: (B, T, H).
+    Returns (h (B,T,H,dk), state (c, n, m))."""
+    b, t, h, dk = q.shape
+    chunk = min(chunk, t)
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    scale = 1.0 / jnp.sqrt(dk)
+    qs = (q * scale).reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    ks = k.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    vs = v.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    lfs = log_f.reshape(b, nc, chunk, h).astype(jnp.float32)
+    lis = log_i.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(carry, ci):
+        c_st, n_st, m_st, l_off = carry  # state weighted exp(-(L_s - i_s) - m_st)
+        qb, kb, vb = qs[:, ci], ks[:, ci], vs[:, ci]
+        lf, li = lfs[:, ci], lis[:, ci]
+        lcum = jnp.cumsum(lf, axis=1) + l_off[:, None]  # global L_t, (B, c, H)
+        lt = jnp.transpose(lcum, (0, 2, 1))  # (B, H, c)
+        # intra-chunk exponent: E_ts = L_t - L_s + i_s
+        e_intra = lt[:, :, :, None] - lt[:, :, None, :] + jnp.transpose(li, (0, 2, 1))[:, :, None, :]
+        e_intra = jnp.where(causal[None, None] > 0, e_intra, -jnp.inf)
+        # inter-chunk exponent for state use: L_t + m_st
+        e_inter = lt + m_st[..., None]  # (B, H, c)
+        m_new = jnp.maximum(jnp.max(e_intra, axis=-1), e_inter)  # (B, H, c)
+        m_new = jnp.maximum(m_new, -1e30)
+        w = jnp.exp(e_intra - m_new[..., None])  # (B, H, t, s)
+        scores = jnp.einsum("bthd,bshd->bhts", qb, kb) * w
+        num = jnp.einsum("bhts,bshd->bthd", scores, vb)
+        den = jnp.sum(scores, axis=-1)  # (B, H, t) -> transpose to (B, t, H)
+        inter_w = jnp.exp(e_inter - m_new)  # (B, H, c)
+        num = num + jnp.einsum("bthd,bhdv->bthv", qb, c_st) * jnp.transpose(inter_w, (0, 2, 1))[..., None]
+        den = den + jnp.einsum("bthd,bhd->bht", qb, n_st) * inter_w
+        den_t = jnp.transpose(den, (0, 2, 1))  # (B, t, H)
+        m_t = jnp.transpose(m_new, (0, 2, 1))  # (B, t, H)
+        h_out = num / jnp.maximum(jnp.abs(den_t), jnp.exp(-m_t))[..., None]
+
+        # state update to end of chunk, stabilizer m_end = m at last position
+        l_tot = lcum[:, -1]  # (B, H)
+        m_end = jnp.transpose(m_new, (0, 2, 1))[:, -1]  # (B, H)
+        # contributions: exp(L_tot - L_s + i_s - m_end)
+        wk_exp = jnp.exp(l_tot[:, None] - lcum + li - m_end[:, None])  # (B, c, H)
+        kb_w = kb * wk_exp[..., None]  # fold the gate into k FIRST — a
+        # 3-operand einsum here can materialize a (B,c,H,dk,dk) intermediate
+        c_new = c_st * jnp.exp(m_st + l_tot - m_end)[..., None, None] + jnp.einsum(
+            "bshd,bshv->bhdv", kb_w, vb
+        )
+        n_new = n_st * jnp.exp(m_st + l_tot - m_end)[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kb, wk_exp
+        )
+        return (c_new, n_new, m_end, l_tot), h_out
+
+    c0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    (c_f, n_f, m_f, _), hs = jax.lax.scan(step, (c0, n0, m0, l0), jnp.arange(nc))
+    hh = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, dk)[:, :t]
+    return hh, (c_f, n_f, m_f)
+
+
+def _mlstm_step(q, k, v, log_f, log_i, c, n, m):
+    """Exact recurrent step. q,k,v: (B, H, dk); gates: (B, H)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    q = q.astype(jnp.float32) * scale
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fw = jnp.exp(log_f + m - m_new)
+    iw = jnp.exp(log_i - m_new)
+    c_new = c * fw[..., None, None] + iw[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+    n_new = n * fw[..., None] + iw[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h_out, (c_new, n_new, m_new)
+
+
+def mlstm_block(p, x, cfg, cache=None, a_fmt: Optional[str] = None):
+    """x: (B, T, d) -> (y, new_cache)."""
+    d_in, h, dk = _mlstm_dims(cfg)
+    b, t, _ = x.shape
+    xq = quant_act(x, a_fmt)
+    up = linear(p["up_proj"], xq)
+    xm, z = up[..., :d_in], up[..., d_in:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = causal_conv(xm, p["conv_w"], conv_state)
+
+    xcq = quant_act(xc, a_fmt)
+    q = linear(p["wq"], xcq).reshape(b, t, h, dk)
+    k = linear(p["wk"], xcq).reshape(b, t, h, dk)
+    v = xm.reshape(b, t, h, dk)  # value from the un-conv'd branch
+
+    wi = as_dense(p["wi"], jnp.float32).astype(jnp.float32)
+    wf = as_dense(p["wf"], jnp.float32).astype(jnp.float32)
+    log_i = (xc.astype(jnp.float32) @ wi.T) + p["bi"]
+    log_f = jax.nn.log_sigmoid((xc.astype(jnp.float32) @ wf.T) + p["bf"])
+
+    new_cache = None
+    if cache is not None and t == 1:
+        hh, (c_n, n_n, m_n) = _mlstm_step(
+            q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], log_i[:, 0],
+            cache["c"], cache["n"], cache["m"],
+        )
+        hh = hh[:, None]
+        new_cache = {"c": c_n, "n": n_n, "m": m_n, "conv": new_conv.astype(jnp.float32)}
+    else:
+        hh, (c_n, n_n, m_n) = _mlstm_chunked(q, k, v, log_f, log_i, chunk=256)
+        if cache is not None:
+            new_cache = {"c": c_n, "n": n_n, "m": m_n, "conv": new_conv.astype(jnp.float32)}
+
+    hh = hh.reshape(b, t, d_in).astype(x.dtype) + xc  # learnable-skip simplified to conv skip
+    hh = norm(p["out_norm"], hh, "rmsnorm", cfg.norm_eps)
+    hh = hh * jax.nn.silu(z.astype(jnp.float32)).astype(hh.dtype)
+    return linear(p["down_proj"], quant_act(hh, a_fmt)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_params(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "w_gates": ParamDef((4 * d, d), ("ffn", "embed"), dt),  # i,f,z,o from x
+        "r_gates": ParamDef((h, 4 * dh, dh), (None, None, None), dt, "normal", 0.5),
+        "b_gates": ParamDef((4 * d,), ("ffn",), "float32", "zeros"),
+        "out_norm": {"scale": ParamDef((d,), ("embed",), dt, "ones")},
+        # post-cell gated FFN (proj factor 4/3, xLSTM paper)
+        "ffn_up": ParamDef((2 * (4 * d // 3), d), ("ffn", "embed"), dt),
+        "ffn_down": ParamDef((d, 4 * d // 3), ("embed", "ffn"), dt),
+    }
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(gx, state, r_gates, h_heads, dh):
+    """One timestep. gx: (B, 4d) gate preacts from x; state dict of (B, d)."""
+    c, n, m, h_prev = state
+    b = gx.shape[0]
+    hp = h_prev.reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhd,hgd->bhg", hp, r_gates).reshape(b, 4 * h_heads * dh)
+    pre = (gx + rec).reshape(b, 4, h_heads * dh)
+    i_t, f_t, z_t, o_t = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m, i_t)
+    iw = jnp.exp(i_t - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    c_new = fw * c + iw * jnp.tanh(z_t)
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block(p, x, cfg, cache=None, a_fmt: Optional[str] = None):
+    """x: (B, T, d) -> (y, new_cache). lax.scan over time (sequential)."""
+    d = cfg.d_model
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    b, t, _ = x.shape
+
+    xq = quant_act(x, a_fmt)
+    gx = linear(p["w_gates"], xq).astype(jnp.float32) + p["b_gates"]  # (B, T, 4d)
+
+    if cache is not None:
+        st = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        st = (
+            jnp.zeros((b, d), jnp.float32),
+            jnp.ones((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32),
+        )
+
+    r_gates = as_dense(p["r_gates"], jnp.float32).astype(jnp.float32)
+
+    def step(state, gx_t):
+        return _slstm_cell(gx_t, state, r_gates, h_heads, dh)
+
+    st_f, hs = jax.lax.scan(step, st, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B, T, d)
+    y = norm(p["out_norm"], y, "rmsnorm", cfg.norm_eps)
+
+    # gated FFN
+    yq = quant_act(y, a_fmt)
+    upd = linear(p["ffn_up"], yq)
+    half = upd.shape[-1] // 2
+    y = linear(p["ffn_down"], quant_act(
+        jax.nn.silu(upd[..., :half].astype(jnp.float32)).astype(x.dtype) *
+        upd[..., half:], a_fmt))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": st_f[0], "n": st_f[1], "m": st_f[2], "h": st_f[3]}
+    return y, new_cache

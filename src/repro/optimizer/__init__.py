@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, OptState, adamw_init, adamw_update, clip_by_global_norm, lr_schedule
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update", "clip_by_global_norm", "lr_schedule"]

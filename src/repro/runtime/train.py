@@ -1,0 +1,80 @@
+"""Training-loop orchestration: step function + checkpointing + resume +
+straggler policy, mesh-agnostic (1-CPU smoke runs to 512-chip dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.steps import TrainState, make_train_step
+from repro.optimizer import AdamWConfig, adamw_init
+
+from .straggler import StragglerPolicy
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    grad_compress: bool = False
+    accum_steps: int = 1
+
+
+def train_loop(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
+               loop: TrainLoopConfig, jit: bool = True,
+               on_metrics: Optional[Callable] = None):
+    """Returns (final_state, history). Single-host execution path; the
+    multi-pod variant swaps the data pipeline host params + jit shardings
+    (launch/steps.lower_cell shows the full-mesh wiring)."""
+    rng = jax.random.PRNGKey(loop.seed)
+    params = models.init_params(cfg, rng)
+    state = TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+    grad_compress = None
+    if loop.grad_compress:
+        from .compress import make_fp8_compressor
+
+        grad_compress = make_fp8_compressor()
+
+    step_fn = make_train_step(cfg, opt_cfg, accum_steps=loop.accum_steps,
+                              grad_compress=grad_compress)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    mgr = None
+    start = 0
+    if loop.ckpt_dir:
+        mgr = CheckpointManager(loop.ckpt_dir, every=loop.ckpt_every)
+        state, start = mgr.resume_or(state)
+
+    data = SyntheticLM(data_cfg)
+    policy = StragglerPolicy(n_hosts=data_cfg.n_hosts)
+    history = []
+    for step in range(start, loop.steps):
+        t0 = time.time()
+        batch = data.batch(step)
+        state, metrics = step_fn(state, batch)
+        dt = time.time() - t0
+        policy.record(data_cfg.host_index, dt)
+        if step % loop.log_every == 0 or step == loop.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["sec"] = round(dt, 3)
+            history.append(m)
+            if on_metrics:
+                on_metrics(m)
+        if mgr:
+            mgr.maybe_save(step + 1, state)
+    return state, history

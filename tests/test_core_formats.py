@@ -1,0 +1,126 @@
+"""Unit + property tests for repro.core.formats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+
+jax.config.update("jax_enable_x64", False)
+
+
+E2M1_GRID = np.array(
+    [-6, -4, -3, -2, -1.5, -1, -0.5, 0, 0.5, 1, 1.5, 2, 3, 4, 6], dtype=np.float32
+)
+
+
+def test_e2m1_grid_matches_paper():
+    grid = F.value_grid("fp4_e2m1")
+    np.testing.assert_array_equal(grid, E2M1_GRID)
+
+
+def test_e4m3_extremes():
+    # qtorch-style saturating grid (paper footnote 3): all codes are values,
+    # so max = 2^8 * 1.875 = 480 (NVIDIA's NaN-reserving variant caps at 448).
+    fmt = F.FORMATS["fp8_e4m3"]
+    assert fmt.max_value == 480.0
+    assert fmt.min_subnormal == 2.0 ** (-6 - 3)
+
+
+def test_e5m2_extremes():
+    # saturating grid: all-ones exponent is a value (IEEE inf/NaN variant
+    # would cap at 57344); max = 2^16 * 1.75
+    fmt = F.FORMATS["fp8_e5m2"]
+    assert fmt.max_value == 114688.0
+
+
+def test_e3m0_grid():
+    # bias 3, saturating: exponent fields 1..7 -> 2^-2 .. 2^4; no mantissa,
+    # no subnormals (m=0 only) -> pure powers of two.
+    grid = F.value_grid("fp4_e3m0")
+    pos = grid[grid > 0]
+    np.testing.assert_allclose(pos, [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0])
+
+
+@pytest.mark.parametrize("name", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1", "fp4_e3m0"])
+def test_quantize_is_nearest_grid_point(name):
+    """quantize_to_grid must equal explicit nearest-neighbour on the grid
+    (ties handled RNE, so we only check non-tie points)."""
+    fmt = F.FORMATS[name]
+    grid = F.value_grid(name)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=4096).astype(np.float32) * fmt.max_value * 0.4
+    q = np.asarray(F.quantize_to_grid(jnp.asarray(x), fmt))
+    # brute-force nearest
+    d = np.abs(x[:, None] - grid[None, :])
+    nearest = grid[np.argmin(d, axis=1)]
+    best = np.min(d, axis=1)
+    second = np.partition(d, 1, axis=1)[:, 1]
+    not_tie = (second - best) > 1e-6 * np.maximum(np.abs(x), 1e-3)
+    np.testing.assert_array_equal(q[not_tie], nearest[not_tie])
+
+
+@pytest.mark.parametrize("name", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1", "fp4_e3m0"])
+def test_grid_points_are_fixed_points(name):
+    fmt = F.FORMATS[name]
+    grid = jnp.asarray(F.value_grid(name))
+    q = F.quantize_to_grid(grid, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(grid))
+
+
+@pytest.mark.parametrize("name", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1", "fp4_e3m0"])
+def test_saturation(name):
+    fmt = F.FORMATS[name]
+    x = jnp.asarray([1e9, -1e9, np.float32(fmt.max_value) * 1.5])
+    q = F.quantize_to_grid(x, fmt)
+    np.testing.assert_allclose(
+        np.asarray(q), [fmt.max_value, -fmt.max_value, fmt.max_value]
+    )
+
+
+def test_rne_tie_behavior_e2m1():
+    fmt = F.FORMATS["fp4_e2m1"]
+    # 1.25 is halfway between 1.0 and 1.5 -> step 0.5 at exponent 0;
+    # 1.25/0.5 = 2.5 -> RNE to 2 -> 1.0 (even mantissa)
+    q = F.quantize_to_grid(jnp.asarray([1.25, 1.75]), fmt)
+    np.testing.assert_allclose(np.asarray(q), [1.0, 2.0])
+
+
+@pytest.mark.parametrize("name", ["fp8_e4m3", "fp8_e5m2", "fp4_e2m1", "fp4_e3m0"])
+def test_encode_decode_roundtrip(name):
+    fmt = F.FORMATS[name]
+    grid = jnp.asarray(F.value_grid(name))
+    codes = F.fp_encode(grid, fmt)
+    back = F.fp_decode(codes, fmt)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(grid))
+    assert int(jnp.max(codes)) < 2**fmt.bits
+
+
+def test_codes_are_unique_e2m1():
+    fmt = F.FORMATS["fp4_e2m1"]
+    grid = jnp.asarray(F.value_grid("fp4_e2m1"))
+    codes = np.asarray(F.fp_encode(grid, fmt))
+    # -0 and +0 share the value but we only feed one zero
+    assert len(set(codes.tolist())) == len(grid)
+
+
+def test_pack_unpack_nibbles():
+    rng = np.random.default_rng(1)
+    codes = rng.integers(0, 16, size=(8, 64), dtype=np.uint8)
+    packed = F.pack_nibbles(jnp.asarray(codes))
+    assert packed.shape == (8, 32)
+    out = F.unpack_nibbles(packed)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_quantize_preserves_dtype():
+    fmt = F.FORMATS["fp8_e4m3"]
+    x = jnp.ones((4,), jnp.bfloat16)
+    assert F.quantize_to_grid(x, fmt).dtype == jnp.bfloat16
+
+
+def test_zero_maps_to_zero():
+    for name in ["fp8_e4m3", "fp4_e2m1", "fp4_e3m0"]:
+        fmt = F.FORMATS[name]
+        q = F.quantize_to_grid(jnp.zeros((3,)), fmt)
+        np.testing.assert_array_equal(np.asarray(q), np.zeros(3, np.float32))

@@ -1,0 +1,146 @@
+"""Distribution-layer tests. The heavyweight (arch x shape) sweep lives in
+the dry-run (repro.launch.dryrun); here we cover the machinery itself:
+sharding rules, cache specs, roofline analyzer, and a subprocess mini
+dry-run on an 8-host-device mesh (device count must be set before jax
+initializes, hence the subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.sharding import _cache_leaf_spec, serve_rules, train_rules
+from repro.models.params import DEFAULT_RULES, ParamDef, pspec_leaf
+
+
+class TestShardingRules:
+    class _Mesh:  # duck-typed mesh: only .shape is consulted
+        shape = {"data": 16, "model": 16}
+
+    def test_kv_head_fallback(self):
+        # flattened kv*hd dim (1024) divides the 16-way axis -> shards
+        d = ParamDef((8 * 128, 4096), ("kv", "embed"))
+        assert pspec_leaf(d, DEFAULT_RULES, self._Mesh()) == P("model", None)
+        # a bare 8-kv-head dim does NOT divide 16 -> replicated fallback
+        d2 = ParamDef((8, 128, 4096), ("kv", None, "embed"))
+        assert pspec_leaf(d2, DEFAULT_RULES, self._Mesh()) == P(None, None, None)
+
+    def test_heads_shard(self):
+        d = ParamDef((4096, 4096), ("heads", "embed"))
+        assert pspec_leaf(d, DEFAULT_RULES, self._Mesh()) == P("model", None)
+
+    def test_tuple_axis_no_duplicates(self):
+        rules = dict(DEFAULT_RULES, expert=("data", "model"), ffn="model")
+        d = ParamDef((256, 2048, 7168), ("expert", "ffn", "embed"))
+        spec = pspec_leaf(d, rules, self._Mesh())
+        assert spec == P(("data", "model"), None, None)
+
+    def test_zero3_rules(self):
+        cfg = get_config("nemotron-4-340b")
+
+        class M:
+            shape = {"data": 16, "model": 16}
+
+        prules, mrules = train_rules(cfg, M(), zero3=True)
+        assert prules["embed"] == ("data",) or prules["embed"] == "data"
+        assert mrules["embed"] is not None
+
+    def test_serve_rules_moe_ep(self):
+        cfg = get_config("deepseek-v3-671b")
+
+        class M:
+            shape = {"data": 16, "model": 16}
+
+        rules = serve_rules(cfg, M())
+        assert rules["expert"] == ("data", "model")  # 256 experts = 16x16
+
+
+class TestCacheSpecs:
+    class _Mesh:
+        shape = {"data": 16, "model": 16}
+
+    def test_kv_cache_batch_and_heads(self):
+        # (L, B, S, KV, hd): batch over data, kv over model
+        spec = _cache_leaf_spec((32, 128, 32768, 16, 128), self._Mesh())
+        assert spec[1] == "data" and spec[3] == "model"
+
+    def test_long_context_batch1_seq_sharded(self):
+        # (L, B=1, S=500k, KV, hd): seq takes both axes
+        spec = _cache_leaf_spec((38, 1, 524288, 32, 64), self._Mesh())
+        assert spec[3] == "model"
+        assert spec[2] == "data"
+
+    def test_mla_latent_cache(self):
+        # (L, B, S, r) — no head dim; seq gets model
+        spec = _cache_leaf_spec((61, 128, 32768, 512), self._Mesh())
+        assert spec[1] == "data" and spec[2] == "model"
+
+
+class TestHloCost:
+    def test_scan_trip_multiplication(self):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        def fn(x, ws):
+            return jax.lax.scan(body, x, ws)[0]
+
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+        txt = jax.jit(fn).lower(x, ws).compile().as_text()
+        c = analyze_hlo(txt, 1, bf16_model=False)
+        expect = 12 * 2 * 256**3
+        assert abs(c.flops - expect) / expect < 0.05
+
+    def test_collective_traffic_model(self):
+        from repro.launch.hlo_cost import _coll_traffic
+
+        assert _coll_traffic("all-reduce", 100, 4) == 150.0
+        assert _coll_traffic("all-gather", 100, 4) == 75.0
+        assert _coll_traffic("collective-permute", 100, 4) == 100.0
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax
+    from repro.configs import get_smoke
+    from repro.launch.shapes import ShapeSpec
+    from repro.launch.steps import lower_cell
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_smoke(sys.argv[1])
+    shape = ShapeSpec("mini", sys.argv[2], seq=64, batch=4)
+    lowered, meta = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    print(json.dumps({"ok": True, "mode": meta["mode"],
+                      "temp": mem.temp_size_in_bytes}))
+""")
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("olmo-1b", "train"), ("olmoe-1b-7b", "train"), ("minicpm3-4b", "decode"),
+    ("zamba2-1.2b", "decode"), ("whisper-tiny", "prefill"),
+])
+def test_mini_dryrun_subprocess(arch, kind, tmp_path):
+    """lower+compile a smoke config on an 8-device 2x4 mesh end to end."""
+    script = tmp_path / "mini.py"
+    script.write_text(MINI_DRYRUN)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, str(script), arch, kind],
+        capture_output=True, text=True, timeout=300, env=env, cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["mode"] == kind

@@ -1,0 +1,87 @@
+"""All-to-all EP MoE must match the einsum-dispatch MoE (same capacity
+semantics) on a single device, and lower/compile multi-device."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.moe import moe_layer, moe_params
+from repro.models.moe_a2a import moe_layer_a2a
+from repro.models.params import init_tree
+
+
+def test_a2a_matches_einsum_single_device():
+    cfg = get_smoke("olmoe-1b-7b")
+    p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.bfloat16)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    y_ein, aux_e = moe_layer(p, x, cfg, group_size=32)
+    y_a2a, aux_a = moe_layer_a2a(p, x, cfg, mesh)
+    np.testing.assert_allclose(
+        np.asarray(y_ein, np.float32), np.asarray(y_a2a, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_a2a_grads_finite():
+    cfg = get_smoke("olmoe-1b-7b")
+    p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def loss(p):
+        y, aux = moe_layer_a2a(p, x, cfg, mesh)
+        return jnp.sum(jnp.square(y.astype(jnp.float32))) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+    assert float(jnp.max(jnp.abs(g["wu"].astype(jnp.float32)))) > 0
+
+
+MULTIDEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke
+    from repro.models.moe import moe_layer, moe_params
+    from repro.models.moe_a2a import moe_layer_a2a
+    from repro.models.params import init_tree
+
+    cfg = get_smoke("olmoe-1b-7b")  # 8 experts
+    p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    y_ref, _ = moe_layer(p, x, cfg, group_size=32)
+    fn = jax.jit(lambda p, x: moe_layer_a2a(p, x, cfg, mesh)[0])
+    y = fn(p, x)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref.astype(jnp.float32))))
+    # capacity partitioning differs across ranks (per-rank vs per-group), so
+    # drops can differ; demand broad agreement instead of exactness
+    rel = err / (float(jnp.max(jnp.abs(y_ref.astype(jnp.float32)))) + 1e-9)
+    print(json.dumps({"ok": bool(np.isfinite(err)), "rel": rel}))
+""")
+
+
+def test_a2a_multidevice_subprocess(tmp_path):
+    script = tmp_path / "a2a.py"
+    script.write_text(MULTIDEV)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, timeout=300, env=env, cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["rel"] < 1.0  # same scale; routing/drops may differ slightly
