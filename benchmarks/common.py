@@ -102,10 +102,11 @@ def quantize_with_policy(params, policy: QuantPolicy, calib=None):
     return gptq_quantize_lm(params, BENCH_CFG, calib, policy)
 
 
-def timed(fn, *args, reps=3):
-    fn(*args)  # warmup/compile
-    t0 = time.time()
+def timed(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))  # warmup/compile
+    times = []
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6  # us
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        times.append(time.time() - t0)
+    return sorted(times)[len(times) // 2] * 1e6  # median us (CPU-noise robust)

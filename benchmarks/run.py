@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -16,11 +17,20 @@ import numpy as np
 
 def kernel_microbench():
     """us/call of the quantization primitives (CPU timings — relative cost
-    of ref vs pallas-interpret paths; TPU wall-time needs real hardware)."""
+    of ref vs pallas-interpret paths; TPU wall-time needs real hardware).
+
+    Times the fused single-pass pipeline against the split three-pass path
+    (act_quant -> HBM -> matmul -> LoRC matmuls) on every shape and emits
+    BENCH_kernels.json (name -> us_per_call) so the perf trajectory is
+    tracked across PRs. Asserts the fused path is never slower than split.
+    """
+    import json
+
     from repro.core.policy import QuantPolicy
     from repro.core.ptq import pack_linear
     from repro.kernels import ref
     from repro.kernels.act_quant import act_quant_pallas
+    from repro.kernels.w4a8_fused import w4a8_fused_matmul_pallas
     from repro.kernels.w4a8_matmul import w4a8_matmul_pallas
     from .common import timed
 
@@ -45,8 +55,76 @@ def kernel_microbench():
                                             s_max=pl_w.s_max, shifts=pl_w.shifts,
                                             interpret=True), xq)
     rows.append(("kernel/w4a8_matmul_pallas_interp", t4, 0.0))
+
+    # ---- fused single-pass vs split three-pass, per shape -----------------
+    # The fused path runs with autotuned block sizes (the sweep also
+    # populates the persistent cache the ops dispatch layer reads), the
+    # split path with its production defaults — i.e. each path as deployed.
+    # Shapes: prefill (256 tokens), slot-batched decode (64 concurrent
+    # serving slots x 1 token), and a LoRC-heavy projection. (Single-digit-M
+    # decode is omitted: CPU-interpret emulation overhead swamps the fusion
+    # win there; on TPU that bandwidth-bound case is where fusion wins most,
+    # and the autotune cache remains the arbiter on real hardware.)
+    from repro.kernels import autotune
+
+    shapes = [("m256", 256, 1024, 1024, 0), ("decode64", 64, 1024, 1024, 0),
+              ("lorc16", 64, 512, 1024, 16)]
+    slower = []
+    for tag, m, n, k, rank in shapes:
+        pw = pack_linear(
+            jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 0.05),
+            QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3", group_size=256,
+                        scale_mode="m2", lorc_rank=rank))
+        xs = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(jnp.bfloat16)
+
+        def split(v, pw=pw):
+            qv, sc = act_quant_pallas(v, pw.a_fmt, interpret=True)
+            xqv = (qv * sc).astype(jnp.bfloat16)
+            y = w4a8_matmul_pallas(xqv, pw.codes, pw.scale, s_max=pw.s_max,
+                                   shifts=pw.shifts, group_size=256, interpret=True)
+            if pw.lorc_a is not None:
+                y = y + (xqv @ pw.lorc_b.T.astype(jnp.bfloat16)).astype(jnp.bfloat16) \
+                    @ pw.lorc_a.T.astype(jnp.bfloat16)
+            return y
+
+        def fused(v, bm, bn, pw=pw):
+            return w4a8_fused_matmul_pallas(
+                v, pw.codes, pw.scale, pw.s_max, pw.shifts, pw.lorc_a, pw.lorc_b,
+                w_fmt="fp4_e2m1", a_fmt="fp8_e4m3", group_size=256,
+                bm=bm, bn=bn, interpret=True)
+
+        sig = dict(batch=1, m=m, n=n, k=k, w_fmt="fp4_e2m1", a_fmt="fp8_e4m3",
+                   group_size=256, m2=True, lorc_rank=rank)
+        bm, bn = autotune.autotune_gemm(
+            lambda bm, bn: (lambda: fused(xs, bm, bn)),
+            autotune.cache_key("fused", **sig), dims=(m, n))
+
+        # interleave the two paths so slow box-load drift hits both equally
+        jax.block_until_ready(split(xs))
+        jax.block_until_ready(fused(xs, bm, bn))
+        t_split, t_fused = [], []
+        for _ in range(9):
+            t0 = time.perf_counter()
+            jax.block_until_ready(split(xs))
+            t_split.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fused(xs, bm, bn))
+            t_fused.append(time.perf_counter() - t0)
+        med = lambda a: sorted(a)[len(a) // 2] * 1e6
+        ts, tf = med(t_split), med(t_fused)
+        rows.append((f"kernel/w4a8_split_{tag}", ts, 0.0))
+        rows.append((f"kernel/w4a8_fused_{tag}", tf, ts / tf))
+        if tf > ts:
+            slower.append((tag, tf, ts))
+
     for name, us, _ in rows:
         print(f"{name:36s} {us:10.1f} us/call")
+
+    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+    with open(out_path, "w") as f:
+        json.dump({name: us for name, us, _ in rows}, f, indent=1, sort_keys=True)
+    print(f"[wrote {os.path.normpath(out_path)}]")
+    assert not slower, f"fused slower than split on: {slower}"
     return rows
 
 

@@ -28,7 +28,8 @@ from benchmarks.common import BENCH_CFG, trained_params
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="ref", choices=["ref", "pallas_interpret"])
+    ap.add_argument("--backend", default="ref",
+                    choices=["ref", "pallas", "pallas_interpret"])
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     args = ap.parse_args()
@@ -47,9 +48,11 @@ def main():
           f"{packed_bytes/2**20:.1f} MiB packed W4A8 "
           f"({dense_bytes/packed_bytes:.2f}x smaller)")
 
-    ops.set_backend(args.backend)
     rng = np.random.default_rng(0)
-    server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96)
+    # 'pallas' routes every PackedLinear matmul through the fused single-pass
+    # W4A8 kernel (compiled on TPU, interpreter elsewhere)
+    server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
+                    kernel_backend=args.backend)
     reqs = []
     for rid in range(args.requests):
         prompt = rng.integers(1, BENCH_CFG.vocab_size, size=rng.integers(3, 10)).tolist()

@@ -244,8 +244,12 @@ def pack_nibbles(codes):
 
 
 def unpack_nibbles(packed):
-    """Inverse of pack_nibbles."""
-    lo = packed & jnp.uint8(0x0F)
-    hi = (packed >> 4) & jnp.uint8(0x0F)
-    out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+    """Inverse of pack_nibbles. Copy-free bitwise construction: a broadcasted
+    shift against an appended [0, 4] axis replaces the old stack+reshape
+    (an extra copy per decode). The iota keeps kernel bodies free of
+    captured constant arrays — kernels.common re-exports this function for
+    the in-VMEM decode of every Pallas kernel."""
+    pair = packed.shape + (2,)
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, pair, len(pair) - 1) * 4
+    nib = (packed[..., None] >> shifts) & jnp.uint8(0x0F)
+    return nib.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

@@ -168,7 +168,7 @@ def packed_def(d: ParamDef, policy: QuantPolicy):
 def _map_with_defs(fn, params, defs):
     """tree.map over (params, defs) with path strings; defs leaves=ParamDef."""
     is_def = lambda x: isinstance(x, ParamDef)
-    flat_defs, treedef = jax.tree.flatten_with_path(defs, is_leaf=is_def)
+    flat_defs, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
     flat_params = treedef.flatten_up_to(params)
     out = []
     for (path, d), p in zip(flat_defs, flat_params):

@@ -1,9 +1,14 @@
 """Pallas TPU kernel: fused token-wise FP8 (E4M3) activation quantization.
 
 One VMEM pass per row-block: per-token absmax -> scale = absmax / fmt.max
--> RNE rounding onto the saturating ExMy grid. The grid math matches
-core.formats.quantize_to_grid exactly (same pow2-by-bit-pattern idiom — an
-integer VPU op on TPU, no transcendentals except log2 for the exponent).
+-> RNE rounding onto the saturating ExMy grid. The grid math lives in
+kernels.common (shared with the fused single-pass GEMM, which runs the same
+quantization *inside* its M-tile) and matches core.formats.quantize_to_grid
+exactly.
+
+This standalone kernel remains for call-sites that need the quantized
+activations themselves (calibration capture, compression); the serving GEMM
+no longer round-trips through it — see w4a8_fused.py.
 
 Target layout: rows are tokens, the full feature row lives in one block
 (feature dims here are <= 73728 -> <= 288 KiB f32 per 8-row block, well
@@ -12,6 +17,7 @@ inside VMEM).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,32 +25,9 @@ from jax.experimental import pallas as pl
 
 from repro.core.formats import FORMATS
 
+from .common import quantize_rows as _quantize_rows
+
 __all__ = ["act_quant_pallas"]
-
-
-def _pow2i(k):
-    k = jnp.clip(k.astype(jnp.int32), -126, 127)
-    bits = (k + 127).astype(jnp.uint32) << 23
-    return jax.lax.bitcast_convert_type(bits, jnp.float32)
-
-
-def _quantize_rows(x, fmt):
-    """x: (bt, d) f32 -> (values_on_grid, scale (bt, 1)).
-
-    Constants are pinned to f32 — pallas interpret mode otherwise evaluates
-    weak Python-float scalars at f64, perturbing the scale by one ulp vs the
-    reference and shifting grid-tie roundings."""
-    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(absmax * jnp.float32(1.0 / fmt.max_value), jnp.float32(1e-12))
-    xs = x / scale
-    ax = jnp.abs(xs)
-    safe = jnp.maximum(ax, 1e-38)
-    e = jnp.clip(jnp.floor(jnp.log2(safe)), fmt.min_exp, fmt.max_exp)
-    step = _pow2i(e - fmt.man_bits)
-    q = jnp.round(xs / step) * step
-    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
-    q = jnp.where(ax == 0, jnp.zeros_like(q), q)
-    return q, scale
 
 
 def _kernel(x_ref, q_ref, s_ref, *, fmt):
@@ -56,11 +39,14 @@ def _kernel(x_ref, q_ref, s_ref, *, fmt):
 
 @functools.partial(jax.jit, static_argnames=("fmt_name", "block_rows", "interpret"))
 def act_quant_pallas(x, fmt_name: str = "fp8_e4m3", block_rows: int = 8,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """x: (..., d) -> (values_on_grid f32, scale (..., 1) f32).
 
     Semantics identical to kernels.ref.act_quant_ref (asserted by the
-    sweep tests)."""
+    sweep tests). ``interpret=None`` resolves from the runtime: compiled on
+    TPU, interpreter elsewhere (kernels.ops.interpret_mode)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     fmt = FORMATS[fmt_name]
     lead = x.shape[:-1]
     d = x.shape[-1]

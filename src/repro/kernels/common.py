@@ -1,0 +1,89 @@
+"""Shared in-kernel math for the W4A8 Pallas kernels.
+
+Everything here runs *inside* kernel bodies (interpret or compiled), so it is
+restricted to ops the TPU VPU lowers cheaply: integer bit twiddling, the
+pow2-by-bit-pattern idiom, and jnp elementwise math. The same functions are
+used by the split kernels (act_quant, w4a8_matmul) and the fused pipeline
+(w4a8_fused), so the quantization semantics are defined once.
+
+Numerical contract: identical to core.formats (quantize_to_grid / fp_decode)
+— asserted bit-for-bit by tests/test_kernels.py and tests/test_w4a8_fused.py.
+Constants are pinned to f32 because pallas interpret mode otherwise evaluates
+weak Python-float scalars at f64, perturbing scales by one ulp vs the
+reference and shifting grid-tie roundings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# pow2i and unpack_nibbles are the exact functions from core.formats — both
+# are pure integer bit twiddling with no captured constants, so they are
+# kernel-body-safe as-is; re-exported here so every kernel pulls its in-VMEM
+# math from one module.
+from repro.core.formats import pow2i, unpack_nibbles
+
+__all__ = [
+    "pow2i",
+    "decode_e2m1",
+    "decode_e3m0",
+    "DECODERS",
+    "unpack_nibbles",
+    "token_scale",
+    "round_to_grid",
+    "quantize_rows",
+]
+
+
+def decode_e2m1(code):
+    """uint4 code (as wider int) -> f32 value. Closed form for E2M1
+    {0, .5, 1, 1.5, 2, 3, 4, 6}: sub-normal (exp==0) value is 0.5*man."""
+    code = code.astype(jnp.int32)
+    sign = (code >> 3) & 1
+    exp = (code >> 1) & 3
+    man = code & 1
+    frac = 1.0 + 0.5 * man.astype(jnp.float32)
+    val = pow2i(exp - 1) * frac
+    val = jnp.where(exp == 0, 0.5 * man.astype(jnp.float32), val)
+    return jnp.where(sign == 1, -val, val)
+
+
+def decode_e3m0(code):
+    """E3M0 bias 3: pure powers of two, exp field 1..7 -> 2^-2..2^4."""
+    code = code.astype(jnp.int32)
+    sign = (code >> 3) & 1
+    exp = code & 7
+    val = jnp.where(exp == 0, 0.0, pow2i(exp - 3))
+    return jnp.where(sign == 1, -val, val)
+
+
+DECODERS = {"fp4_e2m1": decode_e2m1, "fp4_e3m0": decode_e3m0}
+
+
+def token_scale(x, fmt):
+    """Per-row (token) FP8 scale: absmax / fmt.max, floored away from zero.
+    x: (..., d) f32 -> (..., 1) f32."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.maximum(absmax * jnp.float32(1.0 / fmt.max_value), jnp.float32(1e-12))
+
+
+def round_to_grid(xs, fmt):
+    """RNE-round pre-scaled values onto the saturating ExMy grid (f32 in/out).
+
+    Same math as core.formats.quantize_to_grid: step at |x| in [2^e, 2^(e+1))
+    is 2^(e - man_bits); below the smallest normal, the subnormal step.
+    """
+    ax = jnp.abs(xs)
+    safe = jnp.maximum(ax, jnp.float32(1e-38))
+    e = jnp.clip(jnp.floor(jnp.log2(safe)), fmt.min_exp, fmt.max_exp)
+    step = pow2i(e - fmt.man_bits)
+    q = jnp.round(xs / step) * step
+    q = jnp.clip(q, -fmt.max_value, fmt.max_value)
+    return jnp.where(ax == 0, jnp.zeros_like(q), q)
+
+
+def quantize_rows(x, fmt):
+    """x: (bt, d) f32 -> (values_on_grid, scale (bt, 1)). The act_quant
+    kernel body; also the first stage of the fused pipeline's M-tile."""
+    scale = token_scale(x, fmt)
+    return round_to_grid(x / scale, fmt), scale

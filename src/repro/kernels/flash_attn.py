@@ -52,11 +52,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal, block_q, block_k, t):
     scale = 1.0 / float(q.shape[-1]) ** 0.5
     q = q * scale
     nk = t // block_k
+    # whole-block VMEM reads once; the kv loop slices the loaded values
+    # (pl.load with a scalar leading index trips the interpret-mode
+    # discharge rule on this jax version)
+    k_all = k_ref[0]
+    v_all = v_ref[0]
 
     def body(ki, carry):
         m_run, l_run, acc = carry
-        k_blk = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None)))
-        v_blk = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None)))
+        k_blk = jax.lax.dynamic_slice(
+            k_all, (ki * block_k, 0), (block_k, k_all.shape[-1]))
+        v_blk = jax.lax.dynamic_slice(
+            v_all, (ki * block_k, 0), (block_k, v_all.shape[-1]))
         s_blk = jax.lax.dot_general(
             q, k_blk.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,

@@ -3,14 +3,24 @@
 Backend selection:
   * 'ref'      — pure-jnp oracle semantics (default off-TPU; also what the
                  dry-run lowers, so rooflines see realistic HLO).
-  * 'pallas'   — pl.pallas_call TPU kernels (interpret=True on CPU for
-                 tests; compiled on real TPU).
+  * 'pallas'   — pl.pallas_call TPU kernels, compiled on real TPU. Off-TPU
+                 the kernels transparently run in interpreter mode (there is
+                 no hardware to compile for), so 'pallas' is always safe to
+                 select.
+  * 'pallas_interpret' — force interpreter mode even on TPU (debugging).
 Set via set_backend() or REPRO_KERNEL_BACKEND env var.
+
+Under the pallas backend the hot path is the *fused single-pass* kernel
+(kernels/w4a8_fused.py): FP8 activation quantization happens inside the GEMM
+M-tile and the LoRC correction is a fused epilogue — nothing round-trips
+through HBM between quantize, decode, matmul, and correct. Block sizes come
+from the autotuner cache (kernels/autotune.py), with a shape heuristic on
+cache miss. Stacked weights (MoE experts, MLA absorbed heads) go through
+w4a8_matmul_batched instead of densifying via dequant_packed.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,37 +40,51 @@ def get_backend() -> str:
     return _BACKEND
 
 
+def interpret_mode() -> bool:
+    """True when pallas kernels must run under the interpreter: either the
+    explicit 'pallas_interpret' backend, or no TPU to compile for."""
+    return _BACKEND == "pallas_interpret" or jax.default_backend() != "tpu"
+
+
+def _block_sizes(kind: str, w, m: int, n: int, k: int, batch: int = 1,
+                 transpose_w: bool = False):
+    from .autotune import best_block_sizes
+
+    return best_block_sizes(
+        kind, batch=batch, m=m, n=n, k=k, w_fmt=w.w_fmt, a_fmt=w.a_fmt,
+        group_size=w.group_size, m2=w.shifts is not None,
+        lorc_rank=0 if w.lorc_a is None else int(w.lorc_a.shape[-1]),
+        transpose_w=transpose_w,
+    )
+
+
 def act_quant(x, fmt_name: str = "fp8_e4m3"):
     """Token-wise FP8 quantization -> (values_on_grid, scale)."""
     if _BACKEND.startswith("pallas"):
         from .act_quant import act_quant_pallas
 
-        return act_quant_pallas(x, fmt_name, interpret=_BACKEND == "pallas_interpret")
+        return act_quant_pallas(x, fmt_name, interpret=interpret_mode())
     return _ref.act_quant_ref(x, fmt_name)
 
 
 def w4a8_matmul(x, w):
-    """x: (..., in); w: PackedLinear (2D codes after any scan slicing)."""
-    assert w.codes.ndim == 2, "batched PackedLinear must go through dequant_packed"
-    if _BACKEND.startswith("pallas"):
-        from .act_quant import act_quant_pallas
-        from .w4a8_matmul import w4a8_matmul_pallas
+    """x: (..., in); w: PackedLinear (2D codes after any scan slicing).
 
-        interp = _BACKEND in ("pallas", "pallas_interpret")  # CPU: always interpret
+    Pallas backend: ONE fused kernel — in-kernel FP8 act-quant, packed-FP4
+    decode, f32 accumulation, LoRC epilogue — a single HBM write."""
+    assert w.codes.ndim == 2, "stacked PackedLinear must go through w4a8_matmul_batched"
+    if _BACKEND.startswith("pallas"):
+        from .w4a8_fused import w4a8_fused_matmul_pallas
+
         lead = x.shape[:-1]
         k = x.shape[-1]
         x2 = x.reshape(-1, k)
-        if w.a_fmt:
-            qv, sc = act_quant_pallas(x2, w.a_fmt, interpret=interp)
-            xq = (qv * sc).astype(jnp.bfloat16)
-        else:
-            xq = x2.astype(jnp.bfloat16)
-        y = w4a8_matmul_pallas(
-            xq, w.codes, w.scale, s_max=w.s_max, shifts=w.shifts,
-            w_fmt=w.w_fmt, group_size=w.group_size, interpret=interp,
+        bm, bn = _block_sizes("fused", w, x2.shape[0], w.out_features, k)
+        y = w4a8_fused_matmul_pallas(
+            x2, w.codes, w.scale, w.s_max, w.shifts, w.lorc_a, w.lorc_b,
+            w_fmt=w.w_fmt, a_fmt=w.a_fmt, group_size=w.group_size,
+            bm=bm, bn=bn, interpret=interpret_mode(),
         )
-        if w.lorc_a is not None:
-            y = y + (xq @ w.lorc_b.T.astype(jnp.bfloat16)).astype(jnp.bfloat16) @ w.lorc_a.T.astype(jnp.bfloat16)
         return y.reshape(*lead, -1).astype(x.dtype)
     return _ref.w4a8_matmul_ref(
         x, w.codes, w.scale, w.lorc_a, w.lorc_b,
@@ -68,9 +92,40 @@ def w4a8_matmul(x, w):
     )
 
 
+def w4a8_matmul_batched(x, w, transpose_w: bool = False,
+                        quantize_acts: bool = True):
+    """Stacked-weight GEMM straight off the packed codes (no densify).
+
+    x: (E, M, D); w: batched PackedLinear (codes (E, out, in/2)).
+    normal: D == in_features -> (E, M, out); transposed: D == out (contract
+    the weight's out rows — MLA absorbed q path) -> (E, M, in).
+    ``quantize_acts=False`` skips the FP8 activation quantization (latent
+    absorbed paths feed already-attenuated activations). Returns f32.
+    """
+    assert w.codes.ndim == 3, "2-D PackedLinear goes through w4a8_matmul"
+    a_fmt = w.a_fmt if quantize_acts else None
+    if _BACKEND.startswith("pallas"):
+        from .w4a8_fused import w4a8_fused_batched_pallas
+
+        e, m, _ = x.shape
+        bm, bn = _block_sizes("fused_batched", w, m, w.codes.shape[1],
+                              x.shape[-1], batch=e, transpose_w=transpose_w)
+        return w4a8_fused_batched_pallas(
+            x, w.codes, w.scale, w.s_max, w.shifts, w.lorc_a, w.lorc_b,
+            w_fmt=w.w_fmt, a_fmt=a_fmt, group_size=w.group_size,
+            bm=bm, bn=bn, transpose_w=transpose_w, interpret=interpret_mode(),
+        )
+    return _ref.w4a8_batched_matmul_ref(
+        x, w.codes, w.scale, w.lorc_a, w.lorc_b,
+        w_fmt=w.w_fmt, a_fmt=a_fmt, group_size=w.group_size,
+        transpose_w=transpose_w,
+    )
+
+
 def dequant_packed(w):
-    """PackedLinear -> dense f32 weights (used by einsum paths: MoE experts,
-    MLA absorbed projections)."""
+    """PackedLinear -> dense f32 weights. Ref-backend fallback for einsum
+    call-sites; the pallas backend routes those through w4a8_matmul_batched
+    instead (asserted by tests/test_w4a8_fused.py)."""
     out = _ref.dequant_packed_ref(w.codes, w.scale, w.w_fmt, w.group_size)
     if w.lorc_a is not None:
         out = out + jnp.einsum(

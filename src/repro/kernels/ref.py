@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from repro.core.formats import FORMATS, fp_decode, pow2i, quantize_to_grid, unpack_nibbles
 from repro.core.quantize import quantize_act_tokenwise
 
-__all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref"]
+__all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref",
+           "w4a8_batched_matmul_ref"]
 
 
 def act_quant_ref(x, fmt_name: str = "fp8_e4m3"):
@@ -62,3 +63,37 @@ def w4a8_matmul_ref(x, codes, scale, lorc_a=None, lorc_b=None,
             lorc_a, (((xq.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=accum_dtype()).astype(y.dtype)
     return y.astype(x.dtype)
+
+
+def w4a8_batched_matmul_ref(x, codes, scale, lorc_a=None, lorc_b=None,
+                            w_fmt: str = "fp4_e2m1", a_fmt=None,
+                            group_size: int = 256, transpose_w: bool = False):
+    """Oracle for the batched fused kernel (MoE expert stacks, MLA absorbed
+    heads). x: (E, M, D); codes: (E, N, In/2); scale: (E, N, G).
+
+    normal: D == In, y[e] = x[e] @ W[e]^T -> (E, M, N);
+    transposed: D == N, y[e] = x[e] @ W[e] -> (E, M, In) (the MLA absorbed q
+    path contracts the packed weight's out rows).
+    LoRC is the same low-rank *side path* as the fused epilogue. Returns f32.
+    """
+    if a_fmt:
+        qx, sx = quantize_act_tokenwise(x, a_fmt)
+        xq = (qx * sx).astype(jnp.bfloat16)
+    else:
+        xq = x.astype(jnp.bfloat16)
+    w = dequant_packed_ref(codes, scale, w_fmt, group_size)  # (E, N, In) bf16
+    if transpose_w:
+        y = jnp.einsum("emn,eni->emi", xq, w, preferred_element_type=jnp.float32)
+        if lorc_a is not None:
+            xr = jnp.einsum("emn,enr->emr", xq, lorc_a.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+            y = y + jnp.einsum("emr,eri->emi", xr, lorc_b.astype(jnp.bfloat16),
+                               preferred_element_type=jnp.float32)
+    else:
+        y = jnp.einsum("emk,enk->emn", xq, w, preferred_element_type=jnp.float32)
+        if lorc_a is not None:
+            xr = jnp.einsum("emk,erk->emr", xq, lorc_b.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32).astype(jnp.bfloat16)
+            y = y + jnp.einsum("emr,enr->emn", xr, lorc_a.astype(jnp.bfloat16),
+                               preferred_element_type=jnp.float32)
+    return y

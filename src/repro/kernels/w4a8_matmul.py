@@ -1,15 +1,19 @@
-"""Pallas TPU kernel: W4A8 GEMM — packed-FP4 weights x FP8-quantized
-activations, decoded in VMEM.
+"""Pallas TPU kernel: split W4A8 GEMM — packed-FP4 weights x *pre-quantized*
+FP8 activations, decoded in VMEM.
 
-This is the paper's deployment kernel, adapted from H100 FP8 tensor cores to
-the TPU memory hierarchy (DESIGN.md §2):
+This is the original two-pass deployment kernel (act_quant writes the FP8
+activations to HBM, this GEMM reads them back). It is kept as the baseline
+the fused single-pass kernel (w4a8_fused.py) is benchmarked against, and as
+the building block for callers that already hold quantized activations.
+The decode / scale semantics are shared with the fused kernel via
+kernels.common (DESIGN.md §2):
 
   * weights live in HBM as packed E2M1 nibbles (2/byte) + per-(row, group)
     scales — the HBM read per weight is 4 bits, which is the whole point on
     a bandwidth-bound decode step;
-  * each (BM, BN, BK=group) tile is decoded to bf16 *in VMEM*: nibble
-    unpack + a closed-form E2M1 decode (4 VPU ops), then an MXU bf16 matmul
-    with f32 accumulation in a VMEM scratch accumulator;
+  * each (BM, BN, BK=group) tile is decoded to bf16 *in VMEM*: copy-free
+    bitwise nibble unpack + a closed-form E2M1 decode (4 VPU ops), then an
+    MXU bf16 matmul with f32 accumulation;
   * scales: the per-group multiply folds into the tile's partial sum. With
     M2 (pow-2 constrained) scales the multiplier is 2^-k built directly from
     the exponent bit pattern (integer VPU op — the TPU equivalent of the
@@ -23,50 +27,15 @@ across the K steps and is written once (revisiting semantics).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["w4a8_matmul_pallas", "decode_e2m1"]
+from .common import DECODERS, decode_e2m1, decode_e3m0, pow2i as _pow2i, unpack_nibbles as _unpack
 
-
-def _pow2i(k):
-    k = jnp.clip(k.astype(jnp.int32), -126, 127)
-    bits = (k + 127).astype(jnp.uint32) << 23
-    return jax.lax.bitcast_convert_type(bits, jnp.float32)
-
-
-def decode_e2m1(code):
-    """uint4 code (as wider int) -> f32 value. Closed form for E2M1
-    {0, .5, 1, 1.5, 2, 3, 4, 6}: sub-normal (exp==0) value is 0.5*man."""
-    code = code.astype(jnp.int32)
-    sign = (code >> 3) & 1
-    exp = (code >> 1) & 3
-    man = code & 1
-    frac = 1.0 + 0.5 * man.astype(jnp.float32)
-    val = _pow2i(exp - 1) * frac
-    val = jnp.where(exp == 0, 0.5 * man.astype(jnp.float32), val)
-    return jnp.where(sign == 1, -val, val)
-
-
-def decode_e3m0(code):
-    """E3M0 bias 3: pure powers of two, exp field 1..7 -> 2^-2..2^4."""
-    code = code.astype(jnp.int32)
-    sign = (code >> 3) & 1
-    exp = code & 7
-    val = jnp.where(exp == 0, 0.0, _pow2i(exp - 3))
-    return jnp.where(sign == 1, -val, val)
-
-
-_DECODERS = {"fp4_e2m1": decode_e2m1, "fp4_e3m0": decode_e3m0}
-
-
-def _unpack(codes):
-    """(n, k/2) packed uint8 -> (n, k) uint8 nibbles (low nibble first)."""
-    lo = codes & jnp.uint8(0x0F)
-    hi = (codes >> 4) & jnp.uint8(0x0F)
-    return jnp.stack([lo, hi], axis=-1).reshape(codes.shape[0], -1)
+__all__ = ["w4a8_matmul_pallas", "decode_e2m1", "decode_e3m0"]
 
 
 def _kernel(x_ref, codes_ref, scale_ref, o_ref, *, w_fmt, nsteps, m2, smax_ref=None):
@@ -82,7 +51,7 @@ def _kernel(x_ref, codes_ref, scale_ref, o_ref, *, w_fmt, nsteps, m2, smax_ref=N
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    decode = _DECODERS[w_fmt]
+    decode = DECODERS[w_fmt]
     w_q = decode(_unpack(codes_ref[...]))  # (BN, BK) f32 on-grid
     if m2:
         # pow-2 group scale: multiplier from exponent bits (the bit-shift)
@@ -117,7 +86,7 @@ def w4a8_matmul_pallas(
     group_size: int = 256,
     bm: int = 128,
     bn: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """y[m, n] = sum_k x_q[m, k] * dequant(codes, scale)[n, k].
 
@@ -125,7 +94,11 @@ def w4a8_matmul_pallas(
     codes: (N, K/2) uint8; scale: (N, G) f32; optional M2 (s_max, shifts).
     Returns (M, N) f32. Shapes must tile: M % bm == 0 is relaxed by clamping
     bm to a divisor; K % group_size == 0 required (FGQ invariant).
+    ``interpret=None`` resolves from the runtime: compiled on TPU,
+    interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, k = x_q.shape
     n = codes.shape[0]
     bk = group_size

@@ -15,6 +15,8 @@ from .params import ParamDef
 __all__ = [
     "PackedLinear",
     "as_dense",
+    "batched_linear",
+    "packed_head_view",
     "set_accum_dtype",
     "accum_dtype",
     "set_residual_sharding",
@@ -139,15 +141,50 @@ def shard_heads(x):
 
 
 def as_dense(w, dtype=jnp.bfloat16):
-    """Materialize a (possibly Packed) weight as a dense array — used by
-    einsum call-sites (MoE expert stacks, MLA absorbed projections) where the
-    fused kernel path does not apply. On TPU this is where a batched dequant
-    kernel would slot in (hillclimb candidate)."""
+    """Materialize a (possibly Packed) weight as a dense array. Only the
+    ref-backend einsum call-sites still densify; the serving hot paths (MoE
+    expert stacks, MLA absorbed projections) go through batched_linear,
+    which keeps the weights packed under the pallas backend."""
     if isinstance(w, PackedLinear):
         from repro.kernels import ops
 
         return ops.dequant_packed(w).astype(dtype)
     return w
+
+
+def batched_linear(w, x, transpose_w: bool = False, quantize_acts: bool = True):
+    """Stacked-expert/head linear over a leading batch axis.
+
+    x: (E, M, D); ``w`` is a stacked dense (E, N, K) array or a batched
+    PackedLinear (codes (E, N, K/2)).
+      normal:     y[e] = x[e] @ w[e]^T  (D == K)        -> (E, M, N)
+      transposed: y[e] = x[e] @ w[e]    (D == N)        -> (E, M, K)
+    Packed weights run the fused batched W4A8 kernel under the pallas
+    backend (in-kernel FP8 act-quant + LoRC epilogue, no densify) and the
+    batched jnp oracle otherwise. ``quantize_acts=False`` skips activation
+    quantization (MLA absorbed latent paths)."""
+    if isinstance(w, PackedLinear):
+        from repro.kernels import ops  # local import: kernels depend on core only
+
+        y = ops.w4a8_matmul_batched(x, w, transpose_w=transpose_w,
+                                    quantize_acts=quantize_acts)
+        return y.astype(x.dtype)
+    eq = "emn,enk->emk" if transpose_w else "emk,enk->emn"
+    return jnp.einsum(eq, x, w, preferred_element_type=accum_dtype()).astype(x.dtype)
+
+
+def packed_head_view(w: PackedLinear, heads: int) -> PackedLinear:
+    """(H*out, in) PackedLinear -> (H, out, in) batched view for per-head
+    absorbed matmuls (MLA). Pure reshapes of the packed fields — codes stay
+    packed; lorc_b (rank, in) has no head dim and is broadcast."""
+    assert w.codes.ndim == 2 and w.codes.shape[0] % heads == 0, w.codes.shape
+    resh = lambda a: None if a is None else a.reshape(heads, a.shape[0] // heads, *a.shape[1:])
+    lorc_b = None if w.lorc_b is None else jnp.broadcast_to(
+        w.lorc_b[None], (heads,) + w.lorc_b.shape)
+    return dataclasses.replace(
+        w, codes=resh(w.codes), scale=resh(w.scale), s_max=resh(w.s_max),
+        shifts=resh(w.shifts), lorc_a=resh(w.lorc_a), lorc_b=lorc_b,
+    )
 
 
 def quant_act(x, a_fmt: Optional[str]):

@@ -18,7 +18,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .layers import ParamDef, accum_dtype, apply_rope, as_dense, linear, norm, quant_act, shard_heads
+from .layers import (ParamDef, PackedLinear, accum_dtype, apply_rope, as_dense,
+                     batched_linear, linear, norm, packed_head_view, quant_act,
+                     shard_heads)
 from .attention import block_mask, _sdpa_chunked, _sdpa_full
 
 __all__ = ["mla_params", "mla_attention", "init_mla_cache"]
@@ -106,14 +108,23 @@ def mla_attention(
         ckv = new_cache["ckv"]  # (B, T, r) bf16
         krope = new_cache["krope"]  # (B, T, dr)
         t = ckv.shape[1]
-        wk_b = as_dense(p["wk_b"], x.dtype).reshape(h, m.qk_nope_dim, m.kv_lora_rank)
-        # q absorbed into latent space: (B, 1, H, r)
-        # batch-major einsum outputs (hbsr) — the CPU DotThunk rejects
-        # bf16xbf16->f32 dots whose output interleaves batch dims
-        q_lat = jnp.moveaxis(
-            jnp.einsum("bshn,hnr->hbsr", q_nope, wk_b,
-                       preferred_element_type=accum_dtype()), 0, 2
-        ).astype(x.dtype)
+        # q absorbed into latent space: (B, S, H, r). The projection
+        # contracts wk_b's *out* rows (per head), so a packed weight runs
+        # the batched fused kernel in transposed orientation — no densify.
+        if isinstance(p["wk_b"], PackedLinear):
+            wk_v = packed_head_view(p["wk_b"], h)  # (H, nope, r) packed
+            q_h = jnp.moveaxis(q_nope, 2, 0).reshape(h, b * s, m.qk_nope_dim)
+            q_lat = batched_linear(wk_v, q_h, transpose_w=True, quantize_acts=False)
+            q_lat = jnp.moveaxis(
+                q_lat.reshape(h, b, s, m.kv_lora_rank), 0, 2).astype(x.dtype)
+        else:
+            wk_b = as_dense(p["wk_b"], x.dtype).reshape(h, m.qk_nope_dim, m.kv_lora_rank)
+            # batch-major einsum outputs (hbsr) — the CPU DotThunk rejects
+            # bf16xbf16->f32 dots whose output interleaves batch dims
+            q_lat = jnp.moveaxis(
+                jnp.einsum("bshn,hnr->hbsr", q_nope, wk_b,
+                           preferred_element_type=accum_dtype()), 0, 2
+            ).astype(x.dtype)
         s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv,
                            preferred_element_type=accum_dtype()).astype(jnp.float32)
         s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
@@ -124,9 +135,15 @@ def mla_attention(
             jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
                        preferred_element_type=accum_dtype()), 1, 2
         ).astype(x.dtype)
-        wv_b = as_dense(p["wv_b"], x.dtype).reshape(h, m.v_head_dim, m.kv_lora_rank)
-        o = jnp.einsum("bshr,hvr->bshv", ctx_lat, wv_b,
-                       preferred_element_type=accum_dtype()).astype(x.dtype)
+        if isinstance(p["wv_b"], PackedLinear):
+            wv_v = packed_head_view(p["wv_b"], h)  # (H, v, r) packed
+            ctx_h = jnp.moveaxis(ctx_lat, 2, 0).reshape(h, b * s, m.kv_lora_rank)
+            o = batched_linear(wv_v, ctx_h, quantize_acts=False)
+            o = jnp.moveaxis(o.reshape(h, b, s, m.v_head_dim), 0, 2).astype(x.dtype)
+        else:
+            wv_b = as_dense(p["wv_b"], x.dtype).reshape(h, m.v_head_dim, m.kv_lora_rank)
+            o = jnp.einsum("bshr,hvr->bshv", ctx_lat, wv_b,
+                           preferred_element_type=accum_dtype()).astype(x.dtype)
     else:
         # ---- materialized form (train / prefill) --------------------------
         k_nope = linear(p["wk_b"], c_kv).reshape(b, s, h, m.qk_nope_dim)

@@ -25,7 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .layers import ParamDef, activation, as_dense, linear, mlp, mlp_params, quant_act
+from .layers import ParamDef, activation, batched_linear, linear, mlp, mlp_params, quant_act
 
 __all__ = ["moe_params", "moe_layer"]
 
@@ -98,15 +98,18 @@ def moe_layer(p, x, cfg, a_fmt: Optional[str] = None, group_size: int = 1024):
     xq = quant_act(xf, a_fmt)
     ex_in = jnp.einsum("gsec,gsd->gecd", dispatch, xq)
 
-    wu = as_dense(p["wu"], ex_in.dtype)
-    up = jnp.einsum("gecd,efd->gecf", ex_in, wu)
+    # expert-major layout (E, G*C, d): the quantizable unit per expert is a
+    # plain GEMM, so packed (W4A8) expert stacks run the fused batched
+    # kernel directly — no dense dequantization on the pallas backend
+    xe = jnp.moveaxis(ex_in, 1, 0).reshape(e, g * capacity, d)
+    up = batched_linear(p["wu"], xe)  # (E, G*C, ff)
     if "wg" in p:
-        gate = jnp.einsum("gecd,efd->gecf", ex_in, as_dense(p["wg"], ex_in.dtype))
-        h = activation(gate, cfg.act_kind) * up
+        h = activation(batched_linear(p["wg"], xe), cfg.act_kind) * up
     else:
         h = activation(up, cfg.act_kind)
     hq = quant_act(h, a_fmt)
-    ex_out = jnp.einsum("gecf,edf->gecd", hq, as_dense(p["wd"], hq.dtype))
+    eo = batched_linear(p["wd"], hq)  # (E, G*C, d)
+    ex_out = jnp.moveaxis(eo.reshape(e, g, capacity, d), 0, 1)
 
     out = jnp.einsum("gsec,gecd->gsd", combine, ex_out.astype(jnp.float32))
     out = out.reshape(g * sg, d)

@@ -10,6 +10,7 @@ never change -> one compiled decode step).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -20,6 +21,24 @@ import numpy as np
 from repro import models
 
 __all__ = ["Request", "Server"]
+
+
+@contextlib.contextmanager
+def _backend_scope(name: Optional[str]):
+    """Temporarily select a kernel backend (None = leave untouched). Keeps a
+    Server's backend choice scoped to its own prefill/decode tracing instead
+    of leaking into every other model in the process."""
+    if name is None:
+        yield
+        return
+    from repro.kernels import ops as _kops
+
+    prev = _kops.get_backend()
+    _kops.set_backend(name)
+    try:
+        yield
+    finally:
+        _kops.set_backend(prev)
 
 
 @dataclasses.dataclass
@@ -33,7 +52,15 @@ class Request:
 
 class Server:
     def __init__(self, params, cfg, slots: int = 4, max_seq: int = 512,
-                 a_fmt: Optional[str] = "fp8_e4m3"):
+                 a_fmt: Optional[str] = "fp8_e4m3",
+                 kernel_backend: Optional[str] = None):
+        """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
+        prefill/decode through the fused single-pass W4A8 kernel (in-kernel
+        FP8 act-quant + LoRC epilogue; MoE/MLA absorbed paths use the
+        batched variant); 'ref' forces the jnp oracles; None keeps the
+        process-wide setting (REPRO_KERNEL_BACKEND). The choice is scoped to
+        this server's prefill/decode calls, not the whole process."""
+        self.kernel_backend = kernel_backend
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -63,8 +90,10 @@ class Server:
         """Row-wise prefill: run the prompt through a batch-1 prefill and
         splice the resulting caches into this slot's row."""
         toks = jnp.asarray([req.prompt], jnp.int32)
-        logits, c1 = models.prefill(self.params, self.cfg,
-                                    {"tokens": toks}, self.max_seq, a_fmt=self.a_fmt)
+        with _backend_scope(self.kernel_backend):
+            logits, c1 = models.prefill(self.params, self.cfg,
+                                        {"tokens": toks}, self.max_seq,
+                                        a_fmt=self.a_fmt)
 
         def splice(full, one):
             return jax.lax.dynamic_update_slice_in_dim(
@@ -89,8 +118,9 @@ class Server:
             if req is not None and req.out:
                 tok[s, 0] = req.out[-1]
         idx = int(self.lengths.max())
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           jnp.asarray(tok), idx)
+        with _backend_scope(self.kernel_backend):
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               jnp.asarray(tok), idx)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for s, req in enumerate(self.active):
             if req is None:
