@@ -15,14 +15,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def kernel_microbench():
+def kernel_microbench(tiny: bool = False):
     """us/call of the quantization primitives (CPU timings — relative cost
     of ref vs pallas-interpret paths; TPU wall-time needs real hardware).
 
     Times the fused single-pass pipeline against the split three-pass path
     (act_quant -> HBM -> matmul -> LoRC matmuls) on every shape and emits
-    BENCH_kernels.json (name -> us_per_call) so the perf trajectory is
+    BENCH_kernels.json (name -> us_per_call, plus explicit ``speedup/*``
+    keys the CI benchmark-smoke job gates on) so the perf trajectory is
     tracked across PRs. Asserts the fused path is never slower than split.
+
+    ``tiny`` (CI smoke / REPRO_BENCH_TINY=1): shrunken shapes + a reduced
+    autotune candidate set so the job finishes in seconds.
     """
     import json
 
@@ -34,12 +38,14 @@ def kernel_microbench():
     from repro.kernels.w4a8_matmul import w4a8_matmul_pallas
     from .common import timed
 
+    tiny = tiny or os.environ.get("REPRO_BENCH_TINY") == "1"
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
-    w = jnp.asarray(rng.normal(size=(1024, 1024)).astype(np.float32) * 0.05)
+    d = 256 if tiny else 1024
+    x = jnp.asarray(rng.normal(size=(64 if tiny else 256, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d, d)).astype(np.float32) * 0.05)
     pl_w = pack_linear(w, QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3",
                                       group_size=256, scale_mode="m2"))
-    xq = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32)).astype(jnp.bfloat16)
+    xq = jnp.asarray(rng.normal(size=(x.shape[0], d)).astype(np.float32)).astype(jnp.bfloat16)
 
     rows = []
     print("\n== kernel microbench (CPU) ==")
@@ -67,8 +73,14 @@ def kernel_microbench():
     # and the autotune cache remains the arbiter on real hardware.)
     from repro.kernels import autotune
 
-    shapes = [("m256", 256, 1024, 1024, 0), ("decode64", 64, 1024, 1024, 0),
-              ("lorc16", 64, 512, 1024, 16)]
+    if tiny:
+        shapes = [("m256", 64, 256, 256, 0), ("decode64", 16, 256, 256, 0),
+                  ("lorc16", 16, 256, 256, 8)]
+        candidates = ((128, 128), (64, 128), (16, 128), (8, 128))
+    else:
+        shapes = [("m256", 256, 1024, 1024, 0), ("decode64", 64, 1024, 1024, 0),
+                  ("lorc16", 64, 512, 1024, 16)]
+        candidates = autotune.DEFAULT_CANDIDATES
     slower = []
     for tag, m, n, k, rank in shapes:
         pw = pack_linear(
@@ -97,13 +109,16 @@ def kernel_microbench():
                    group_size=256, m2=True, lorc_rank=rank)
         bm, bn = autotune.autotune_gemm(
             lambda bm, bn: (lambda: fused(xs, bm, bn)),
-            autotune.cache_key("fused", **sig), dims=(m, n))
+            autotune.cache_key("fused", **sig), candidates=candidates,
+            dims=(m, n))
 
-        # interleave the two paths so slow box-load drift hits both equally
+        # interleave the two paths so slow box-load drift hits both equally;
+        # tiny mode (CI smoke) takes more reps — shapes are cheap there and
+        # shared runners are noisy, and the speedup gate sits at exactly 1.0x
         jax.block_until_ready(split(xs))
         jax.block_until_ready(fused(xs, bm, bn))
         t_split, t_fused = [], []
-        for _ in range(9):
+        for _ in range(21 if tiny else 9):
             t0 = time.perf_counter()
             jax.block_until_ready(split(xs))
             t_split.append(time.perf_counter() - t0)
@@ -117,12 +132,48 @@ def kernel_microbench():
         if tf > ts:
             slower.append((tag, tf, ts))
 
+    # ---- paged FP8 decode attention (tracked, not gated: on CPU the
+    # pallas path runs under the interpreter, so only the jnp-oracle
+    # number is a meaningful trend line) -----------------------------------
+    from repro.kernels import ops as kops
+    from repro.runtime import kv_cache as kvc
+
+    kv, hd, page, pp, b = (2, 32, 8, 2, 2) if tiny else (4, 64, 16, 4, 4)
+    pool = kvc.init_gqa_pool(1, b * pp, page, kv, hd, "fp8_e4m3")
+    kc = jnp.asarray(rng.normal(size=(1, 1, pp * page, kv, hd)).astype(np.float32))
+    pt = np.zeros((b, pp), np.int32)
+    for r in range(b):
+        ids = np.arange(r * pp, (r + 1) * pp, dtype=np.int32)
+        pt[r] = ids
+        pool = kvc.splice_prefill(pool, {"k": kc, "v": kc}, ids, pp * page)
+    layer = {k: v[0] for k, v in pool.items()}
+    qd = jnp.asarray(rng.normal(size=(b, kv * 2, hd)).astype(np.float32))
+    lens = jnp.full((b,), pp * page, jnp.int32)
+    ptj = jnp.asarray(pt)
+    prev = kops.get_backend()
+    try:
+        kops.set_backend("ref")
+        t_ref = timed(jax.jit(lambda q: kops.paged_decode_attn(q, layer, ptj, lens)), qd)
+        rows.append(("kernel/paged_decode_attn_ref", t_ref, 0.0))
+        kops.set_backend("pallas")
+        t_pal = timed(lambda q: kops.paged_decode_attn(q, layer, ptj, lens), qd)
+        rows.append(("kernel/paged_decode_attn_pallas_interp", t_pal, 0.0))
+    finally:
+        kops.set_backend(prev)
+
     for name, us, _ in rows:
         print(f"{name:36s} {us:10.1f} us/call")
 
+    payload = {name: us for name, us, _ in rows}
+    # explicit speedup keys: the CI benchmark-smoke job fails the build if
+    # any of these regresses below 1.0x
+    for tag, _m, _n, _k, _r in shapes:
+        split = payload[f"kernel/w4a8_split_{tag}"]
+        fusedt = payload[f"kernel/w4a8_fused_{tag}"]
+        payload[f"speedup/w4a8_fused_{tag}"] = split / fusedt
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
     with open(out_path, "w") as f:
-        json.dump({name: us for name, us, _ in rows}, f, indent=1, sort_keys=True)
+        json.dump(payload, f, indent=1, sort_keys=True)
     print(f"[wrote {os.path.normpath(out_path)}]")
     assert not slower, f"fused slower than split on: {slower}"
     return rows

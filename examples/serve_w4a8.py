@@ -30,6 +30,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="ref",
                     choices=["ref", "pallas", "pallas_interpret"])
+    ap.add_argument("--kv-fmt", default="fp8_e4m3", choices=["fp8_e4m3", "bf16"],
+                    help="KV page payload: packed FP8 codes with "
+                         "per-(page, head) M2 scales, or bf16 (fallback)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     args = ap.parse_args()
@@ -51,8 +54,12 @@ def main():
     rng = np.random.default_rng(0)
     # 'pallas' routes every PackedLinear matmul through the fused single-pass
     # W4A8 kernel (compiled on TPU, interpreter elsewhere)
+    kv_fmt = None if args.kv_fmt == "bf16" else args.kv_fmt
     server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
-                    kernel_backend=args.backend)
+                    kernel_backend=args.backend, kv_fmt=kv_fmt, page_size=32)
+    print(f"kv cache: paged {args.kv_fmt}, "
+          f"{server.kv_bytes_per_token():.0f} B/token "
+          f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token)")
     reqs = []
     for rid in range(args.requests):
         prompt = rng.integers(1, BENCH_CFG.vocab_size, size=rng.integers(3, 10)).tolist()

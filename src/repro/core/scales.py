@@ -44,18 +44,28 @@ def constrain_scales_m1(scales):
     return pow2i(n.astype(jnp.int32))
 
 
-def constrain_scales_m2(scales, group_axis: int = -1, max_shift: int = 31) -> M2Scales:
+def constrain_scales_m2(scales, group_axis: int = -1, max_shift: int = 31,
+                        rounding: str = "ceil") -> M2Scales:
     """M2: per compute group along ``group_axis``.
 
     ``scales`` is typically (out_rows, n_groups); the compute group (the set
     sharing one S_max) defaults to the row (axis -1), matching "a (multiple)
     row(s) of a matrix" in the paper. ``max_shift`` bounds k for fixed-width
     exponent arithmetic in the kernel (int8 shift table -> 31 is generous).
+
+    ``rounding`` picks which side of the raw scale the snapped ratio lands:
+      * 'ceil'  (paper): k = ceil(log2 ratio), S_hat_i <= S_i — tighter grid
+        use, saturates the group max (weights absorb this via GPTQ/LoRC).
+      * 'floor': k = floor(log2 ratio), S_hat_i in [S_i, 2 S_i) — never
+        saturates. For FP target grids the relative step is scale-invariant,
+        so this costs (at most) one top binade; it is what content-dependent
+        activation stores (the paged FP8 KV cache) use.
     """
     scales = scales.astype(jnp.float32)
     s_max = jnp.max(scales, axis=group_axis, keepdims=True)
     ratio = jnp.maximum(s_max / jnp.maximum(scales, 1e-30), 1.0)
-    k = jnp.ceil(jnp.log2(ratio))
+    rnd = {"ceil": jnp.ceil, "floor": jnp.floor}[rounding]
+    k = rnd(jnp.log2(ratio))
     k = jnp.clip(k, 0, max_shift)
     constrained = s_max * pow2i(-k.astype(jnp.int32))
     return M2Scales(scales=constrained, s_max=s_max, shifts=k.astype(jnp.int32))

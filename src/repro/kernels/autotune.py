@@ -112,9 +112,14 @@ def cache_key(
     ))
 
 
-def _heuristic(m: int, n: int) -> Tuple[int, int]:
+def _heuristic(kind: str, m: int, n: int) -> Tuple[int, int]:
     """Cache-miss default: full MXU tiles, shrunk for skinny decode batches
-    (tiny M wastes no VMEM on a tall block; the kernel clamps to divisors)."""
+    (tiny M wastes no VMEM on a tall block; the kernel clamps to divisors).
+    For the paged decode-attention kernel (kind 'decode_attn') bm is the
+    query-group row block: the g = H/KV heads padded up to a sublane
+    multiple; bn is the page size (the kv block is a whole page)."""
+    if kind == "decode_attn":
+        return max(8, -(-m // 8) * 8), n
     bm = 128 if m >= 128 else max(8, m)
     bn = 128
     return bm, bn
@@ -127,7 +132,7 @@ def best_block_sizes(kind: str = "fused", **sig) -> Tuple[int, int]:
     hit = _load().get(key)
     if hit:
         return int(hit[0]), int(hit[1])
-    return _heuristic(sig["m"], sig["n"])
+    return _heuristic(kind, sig["m"], sig["n"])
 
 
 def autotune_gemm(

@@ -27,6 +27,7 @@ __all__ = [
     "pow2i",
     "decode_e2m1",
     "decode_e3m0",
+    "decode_fp8",
     "DECODERS",
     "unpack_nibbles",
     "token_scale",
@@ -58,6 +59,34 @@ def decode_e3m0(code):
 
 
 DECODERS = {"fp4_e2m1": decode_e2m1, "fp4_e3m0": decode_e3m0}
+
+
+def decode_fp8(code, fmt, exp_shift=0):
+    """uint8 ExMy code -> f32 value, with an M2-style scale applied as an
+    EXPONENT ADD: value * 2^-k is pow2i(e - k), an integer add on the bit
+    pattern instead of a multiply + scale-table gather in the hot loop.
+
+    Same numeric contract as core.formats.fp_decode (subnormals exact, no
+    inf/nan codes) — the paged-KV decode-attention kernel and its jnp oracle
+    both dequantize through this one function. ``exp_shift`` broadcasts
+    against ``code`` (per-(page, head) shifts from constrain_scales_m2); the
+    residual full-precision s_max multiply happens once per page outside.
+    """
+    code = code.astype(jnp.int32)
+    man_mask = 2**fmt.man_bits - 1
+    exp_mask = 2**fmt.exp_bits - 1
+    man = code & man_mask
+    exp_field = (code >> fmt.man_bits) & exp_mask
+    sign = (code >> (fmt.exp_bits + fmt.man_bits)) & 1
+    is_sub = exp_field == 0
+    e = jnp.where(is_sub, fmt.min_exp, exp_field - fmt.bias) - exp_shift
+    frac = jnp.where(
+        is_sub,
+        man.astype(jnp.float32) * jnp.float32(2.0**-fmt.man_bits),
+        1.0 + man.astype(jnp.float32) * jnp.float32(2.0**-fmt.man_bits),
+    )
+    val = pow2i(e) * frac
+    return jnp.where(sign == 1, -val, val)
 
 
 def token_scale(x, fmt):

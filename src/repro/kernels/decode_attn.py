@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: paged FP8 decode attention (flash-decoding dataflow).
+
+Decode's dominant memory term is the KV-cache read; this kernel reads the
+cache in its *deployed* form — packed FP8 E4M3 pages with per-(page, head)
+M2 scales — and never materializes a dequantized cache in HBM:
+
+  * the page table and per-row true lengths ride in as scalar-prefetch
+    operands (SMEM); each grid step's BlockSpec index_map *gathers* its page
+    straight from the pool via ``page_table[b, j]`` — the DMA engine fetches
+    exactly the pages a row owns, in page-table order,
+  * FP8 codes are dequantized in VMEM with the exponent-add scale apply
+    (kernels.common.decode_fp8: per-head shift k is an integer add on the
+    exponent; the full-precision s_max multiplies once per page),
+  * online softmax (m, l, acc) accumulators live in VMEM scratch across the
+    page loop (innermost grid dim), standard flash-decoding.
+
+Grid: (B, KV_heads, pages_per_slot). The g = H/KV query heads of a KV group
+are processed together as the row block (padded to ``bq`` for VPU/MXU
+tiling — the autotuner's block size for this kernel). Rows past a slot's
+true length are masked by position, so per-slot lengths need no host-side
+synchronization (this is what retires the engine's max-length hack).
+
+The jnp oracle is kernels.ref.paged_decode_attn_ref; interpret-mode parity
+is asserted by tests/test_kv_cache.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import FORMATS
+from .common import decode_fp8
+
+__all__ = ["paged_decode_attn_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, page, pp, scale, kv_fmt, window):
+    b, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    if kv_fmt is not None:
+        fmt = FORMATS[kv_fmt]
+        pid = pt_ref[b, j]
+        # exponent-add scale apply: integer add of -k on the code exponent,
+        # then one full-precision s_max multiply per (page, head)
+        k = decode_fp8(k_ref[0, :, 0], fmt, ksh_ref[pid, h]) * ksm_ref[pid]
+        v = decode_fp8(v_ref[0, :, 0], fmt, vsh_ref[pid, h]) * vsm_ref[pid]
+    else:
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[b]
+    if window:  # sliding window: the query sits at position kv_len - 1
+        valid &= pos > len_ref[b] - 1 - window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # fully-masked pages leave m at -inf; exp(s - m) would be exp(0) = 1
+    # for every masked lane, so the mask must hit p, not just s
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == pp - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_fmt", "bq", "window",
+                                             "interpret"))
+def paged_decode_attn_pallas(q, k_pages, v_pages, k_smax, k_shift, v_smax,
+                             v_shift, page_table, kv_lens,
+                             kv_fmt=None, bq: int = 8, window: int = 0,
+                             interpret: bool = True):
+    """q: (B, H, hd) single-token queries; k_pages/v_pages: (P+1, page, KV,
+    hd) uint8 codes (fp8) or bf16 values; k/v_smax: (P+1,) f32; k/v_shift:
+    (P+1, KV) int32 (pass zeros-shaped dummies when ``kv_fmt`` is None);
+    page_table: (B, PP) int32; kv_lens: (B,) valid token counts; ``window``:
+    sliding-window size (0 = full history). Returns (B, H, dv) f32. GQA
+    head repetition is internal (grid over KV heads, g query heads per
+    block, padded to ``bq``).
+    """
+    b, h, hd = q.shape
+    p1, page, kv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    pp = page_table.shape[1]
+    g = h // kv
+    bq = max(bq, g)
+    qg = q.reshape(b, kv, g, hd)
+    if bq != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, bq - g), (0, 0)))
+
+    def page_map(bi, hi, ji, pt, ln, *_s):
+        return (pt[bi, ji], 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(b, kv, pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), page_map),
+            pl.BlockSpec((1, page, 1, dv), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, page=page, pp=pp,
+                          scale=1.0 / float(hd) ** 0.5, kv_fmt=kv_fmt,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, bq, dv), jnp.float32),
+        interpret=interpret,
+    )(page_table, kv_lens, k_smax, k_shift, v_smax, v_shift, qg,
+      k_pages, v_pages)
+    return out[:, :, :g].reshape(b, h, dv)

@@ -122,6 +122,47 @@ def w4a8_matmul_batched(x, w, transpose_w: bool = False,
     )
 
 
+def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
+    """Paged decode attention over one layer's quantized KV pool slice.
+
+    q: (B, H, hd) single-token queries; pool_layer: one layer of a
+    runtime.kv_cache GQA pool ({'k', 'v'} + fp8 scale leaves); page_table:
+    (B, PP) int32; kv_lens: (B,) int32 valid token counts; ``window``:
+    sliding-window size (0 = full history). Returns (B, H, dv) f32.
+
+    Pallas backend: the flash-decoding kernel gathers pages through the
+    page table in its BlockSpec index maps and dequantizes FP8 in VMEM
+    (exponent-add scale apply). Ref: gathered-page jnp oracle.
+    """
+    kp, vp = pool_layer["k"], pool_layer["v"]
+    kv_fmt = "fp8_e4m3" if kp.dtype == jnp.uint8 else None
+    if kv_fmt:
+        ksm, ksh = pool_layer["k_smax"], pool_layer["k_shift"]
+        vsm, vsh = pool_layer["v_smax"], pool_layer["v_shift"]
+    else:  # dummies keep the kernel operand list static across formats
+        ksm = vsm = jnp.zeros((1,), jnp.float32)
+        ksh = vsh = jnp.zeros((1, 1), jnp.int32)
+    if _BACKEND.startswith("pallas"):
+        from .autotune import best_block_sizes
+        from .decode_attn import paged_decode_attn_pallas
+
+        b, h, hd = q.shape
+        page, kv = kp.shape[1], kp.shape[2]
+        bq, _ = best_block_sizes(
+            "decode_attn", batch=b, m=h // kv, n=page, k=hd,
+            w_fmt=kv_fmt or "bf16", a_fmt=None, group_size=page, m2=True,
+            lorc_rank=0,
+        )
+        return paged_decode_attn_pallas(
+            q, kp, vp, ksm, ksh, vsm, vsh, page_table, kv_lens,
+            kv_fmt=kv_fmt, bq=bq, window=window, interpret=interpret_mode(),
+        )
+    return _ref.paged_decode_attn_ref(
+        q, kp, vp, ksm, ksh, vsm, vsh, page_table, kv_lens, kv_fmt=kv_fmt,
+        window=window,
+    )
+
+
 def dequant_packed(w):
     """PackedLinear -> dense f32 weights. Ref-backend fallback for einsum
     call-sites; the pallas backend routes those through w4a8_matmul_batched

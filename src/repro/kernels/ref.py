@@ -11,9 +11,10 @@ import jax.numpy as jnp
 
 from repro.core.formats import FORMATS, fp_decode, pow2i, quantize_to_grid, unpack_nibbles
 from repro.core.quantize import quantize_act_tokenwise
+from .common import decode_fp8
 
 __all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref",
-           "w4a8_batched_matmul_ref"]
+           "w4a8_batched_matmul_ref", "paged_decode_attn_ref"]
 
 
 def act_quant_ref(x, fmt_name: str = "fp8_e4m3"):
@@ -97,3 +98,46 @@ def w4a8_batched_matmul_ref(x, codes, scale, lorc_a=None, lorc_b=None,
             y = y + jnp.einsum("emr,enr->emn", xr, lorc_a.astype(jnp.bfloat16),
                                preferred_element_type=jnp.float32)
     return y
+
+
+def paged_decode_attn_ref(q, k_pages, v_pages, k_smax, k_shift, v_smax,
+                          v_shift, page_table, kv_lens, kv_fmt=None,
+                          window: int = 0):
+    """Oracle for the paged decode-attention kernel.
+
+    q: (B, H, hd); k_pages/v_pages: (P+1, page, KV, hd) uint8 FP8 codes
+    (``kv_fmt`` set) or bf16 values (``kv_fmt`` None); k/v_smax: (P+1,) f32
+    per-page full-precision scales; k/v_shift: (P+1, KV) int32 M2 exponent
+    shifts; page_table: (B, PP) int32; kv_lens: (B,) valid token counts.
+    Returns (B, H, dv) f32 — the gathered-page, dequantized softmax
+    attention with per-row length masks (GQA repetition internal).
+    """
+    b, h, hd = q.shape
+    _, page, kv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    pp = page_table.shape[1]
+    g = h // kv
+
+    def dq(pages, smax, shift):
+        gathered = pages[page_table]  # (B, PP, page, KV, d)
+        if kv_fmt is None:
+            return gathered.astype(jnp.float32).reshape(b, pp * page, kv, -1)
+        fmt = FORMATS[kv_fmt]
+        vals = decode_fp8(gathered, fmt, shift[page_table][:, :, None, :, None])
+        vals = vals * smax[page_table][:, :, None, None, None]
+        return vals.reshape(b, pp * page, kv, -1)
+
+    kf = dq(k_pages, k_smax, k_shift)  # (B, T, KV, hd)
+    vf = dq(v_pages, v_smax, v_shift)  # (B, T, KV, dv)
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kf) * (1.0 / float(hd) ** 0.5)
+    t = pp * page
+    pos = jnp.arange(t)[None, None, None, :]
+    valid = pos < kv_lens[:, None, None, None]
+    if window:  # sliding window: the query sits at position kv_len - 1
+        valid &= pos > (kv_lens - 1 - window)[:, None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    return o.reshape(b, h, dv)

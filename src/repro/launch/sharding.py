@@ -145,8 +145,11 @@ def _cache_leaf_spec(shape, mesh) -> P:
     nd = len(shape)
     spec = [None] * nd
     data_used = model_used = False
-    if nd >= 2 and shape[1] % dsize == 0 and shape[1] > 1:
-        spec[1] = dp
+    if nd >= 2 and dp and shape[1] % dsize == 0 and shape[1] > 1:
+        # a single dp axis goes in bare (P("data") == P(("data",)) for jax,
+        # but downstream spec introspection compares entries to axis names);
+        # an empty dp (model-only mesh) leaves the batch dim replicated
+        spec[1] = dp if len(dp) > 1 else dp[0]
         data_used = True
     # kv-head dim for 5D (L, B, S, KV, hd)
     if nd == 5 and shape[3] % msize == 0:

@@ -130,7 +130,12 @@ def prefill(params, cfg, batch, max_seq: int, a_fmt=None):
 
 def decode_step(params, cfg, tokens, caches, cache_index, a_fmt=None):
     """One serving step: tokens (B, 1) + caches at cache_index.
-    Returns (logits (B, V), new_caches)."""
+    Returns (logits (B, V), new_caches).
+
+    ``cache_index`` is either a scalar int (legacy contiguous caches, one
+    synchronized position for every row) or a runtime.kv_cache.PagedState
+    (paged pool: per-row true lengths + page table — each row gets its own
+    positions and length masks)."""
     batch = {"tokens": tokens}
     if _is_encdec(cfg):
         hidden, caches, _ = _encdec_decode(params, cfg, tokens, caches, cache_index, a_fmt)

@@ -32,6 +32,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.kv_cache import PagedState, append_paged
+
 from .layers import ParamDef, accum_dtype, apply_rope, linear, quant_act, shard_heads
 
 __all__ = ["attn_params", "attention", "init_kv_cache"]
@@ -192,6 +194,24 @@ def attention(
     v = linear(p["wv"], xq, p.get("bv")).reshape(b, s, kv, hd)
     if cfg.pos_embedding == "rope":
         k = apply_rope(k, positions, cfg.rope_theta)
+
+    if isinstance(cache_index, PagedState):
+        # paged decode: append this token at each row's true length, then
+        # run flash-decoding over the quantized page pool (kernels.ops
+        # routes pallas kernel vs jnp oracle). Per-row length masks replace
+        # the engine-level synchronized cache index.
+        assert s == 1, "paged KV path is decode-only (prefill is spliced)"
+        from repro.kernels import ops
+
+        new_cache = append_paged(kv_cache, {"k": k, "v": v}, cache_index)
+        o = ops.paged_decode_attn(
+            q[:, 0], new_cache, cache_index.page_table,
+            cache_index.lengths + 1, window=cfg.window,
+        )
+        o = o[:, None].astype(x.dtype)  # (B, 1, H, hd)
+        o = o.reshape(b, s, h * hd)
+        out = linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))
+        return out, new_cache
 
     new_cache = None
     is_decode = kv_cache is not None and s == 1

@@ -18,6 +18,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.kv_cache import PagedState, append_paged, gather_pages
+
 from .layers import (ParamDef, PackedLinear, accum_dtype, apply_rope, as_dense,
                      batched_linear, linear, norm, packed_head_view, quant_act,
                      shard_heads)
@@ -93,7 +95,19 @@ def mla_attention(
 
     new_cache = None
     is_decode = kv_cache is not None and s == 1
-    if kv_cache is not None:
+    paged = isinstance(cache_index, PagedState)
+    if paged:
+        # paged decode: append the compressed latent + rope key at each
+        # row's true position, then attend over the dequantized page gather
+        # (the latent has no head axis, so the absorbed einsums stay jnp —
+        # the pool is the same FP8-paged machinery as the GQA path)
+        assert is_decode, "paged MLA path is decode-only (prefill is spliced)"
+        new_cache = append_paged(
+            kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
+        )
+        ckv = gather_pages(new_cache, "ckv", cache_index).astype(jnp.bfloat16)
+        krope = gather_pages(new_cache, "krope", cache_index).astype(jnp.bfloat16)
+    elif kv_cache is not None:
         idx = 0 if cache_index is None else cache_index
         ckv_c = jax.lax.dynamic_update_slice(
             kv_cache["ckv"], c_kv.astype(kv_cache["ckv"].dtype), (0, idx, 0)
@@ -105,8 +119,9 @@ def mla_attention(
 
     if is_decode:
         # ---- absorbed form against the compressed cache -------------------
-        ckv = new_cache["ckv"]  # (B, T, r) bf16
-        krope = new_cache["krope"]  # (B, T, dr)
+        if not paged:
+            ckv = new_cache["ckv"]  # (B, T, r) bf16
+            krope = new_cache["krope"]  # (B, T, dr)
         t = ckv.shape[1]
         # q absorbed into latent space: (B, S, H, r). The projection
         # contracts wk_b's *out* rows (per head), so a packed weight runs
@@ -129,8 +144,14 @@ def mla_attention(
                            preferred_element_type=accum_dtype()).astype(jnp.float32)
         s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
                             preferred_element_type=accum_dtype()).astype(jnp.float32)
-        msk = block_mask(s, t, cache_index, 0, False, 0, kv_len=cache_index + s)
-        att = jax.nn.softmax((s_lat + s_rope) / jnp.sqrt(scale_dim) + msk[None, None], axis=-1)
+        if paged:  # per-row true lengths (the appended token is position len)
+            kv_len = cache_index.lengths + 1
+            msk4 = jnp.where(jnp.arange(t)[None] < kv_len[:, None], 0.0,
+                             -1e30)[:, None, None, :].astype(jnp.float32)
+        else:
+            msk4 = block_mask(s, t, cache_index, 0, False, 0,
+                              kv_len=cache_index + s)[None, None]
+        att = jax.nn.softmax((s_lat + s_rope) / jnp.sqrt(scale_dim) + msk4, axis=-1)
         ctx_lat = jnp.moveaxis(
             jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
                        preferred_element_type=accum_dtype()), 1, 2

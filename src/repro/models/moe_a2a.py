@@ -80,9 +80,11 @@ def _a2a2(x, axes):
     if len(axes) == 1:
         return jax.lax.all_to_all(x, axes[0], split_axis=0, concat_axis=0,
                                   tiled=True)
+    from repro.launch.mesh import axis_size
+
     a, b = axes
-    na = jax.lax.axis_size(a)
-    nb = jax.lax.axis_size(b)
+    na = axis_size(a)
+    nb = axis_size(b)
     p, c, d = x.shape
     # (na, nb, C, d): exchange the inner axis first, then the outer
     x = x.reshape(na, nb * c, d)

@@ -325,15 +325,26 @@ def lm_forward(
 
     caches: list (one per segment) of stacked per-layer caches, or None.
     """
+    from repro.runtime.kv_cache import PagedState
+
     x = _embed_tokens(params, cfg, tokens, embeds_prefix)
     b, s = x.shape[:2]
+    paged = isinstance(cache_index, PagedState)
     if positions is None:
-        offset = 0 if cache_index is None else cache_index
-        positions = jnp.arange(s) + offset
+        if paged:  # per-row true lengths -> (B, S) positions (rope
+            # broadcasts them; the synchronized-offset hack is gone)
+            positions = cache_index.lengths[:, None] + jnp.arange(s)[None]
+        else:
+            offset = 0 if cache_index is None else cache_index
+            positions = jnp.arange(s) + offset
     if cfg.pos_embedding == "learned":
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], 0 if cache_index is None else cache_index, s, axis=0
-        )[None].astype(x.dtype)
+        if paged:
+            x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(x.dtype)
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], 0 if cache_index is None else cache_index,
+                s, axis=0,
+            )[None].astype(x.dtype)
 
     segs = segments_for(cfg)
     new_caches = []

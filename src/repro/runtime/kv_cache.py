@@ -1,0 +1,297 @@
+"""Quantized paged KV-cache pool for the serving engine.
+
+The KV cache is the largest *activation* tensor the server holds, and decode
+attention's dominant memory term. Following the paper's finding that FP
+formats beat INT for LLM activations, this module stores K/V as packed FP8
+E4M3 codes in fixed-size pages with per-(page, head) scales constrained by
+the M2 machinery (core.scales.constrain_scales_m2): each page keeps one
+full-precision s_max plus integer pow-2 shifts per head, so the decode
+kernel applies scales as an exponent add (kernels.common.decode_fp8) and
+multiplies by s_max once per page. Halving KV bytes doubles the slot pool
+for the same HBM.
+
+Layout (one pool dict per model segment, leading dim = stacked layers so it
+rides the per-segment lax.scan exactly like the old monolithic caches):
+
+  GQA:  k/v        (L, P+1, page, KV, hd)  uint8 codes (fp8) | bf16 values
+        k/v_smax   (L, P+1)                f32   per-page full-precision S_max
+        k/v_shift  (L, P+1, KV)            int32 pow-2 ratio exponents k_i
+  MLA:  ckv        (L, P+1, page, r)   + smax/shift with a single "head"
+        krope      (L, P+1, page, dr)    (the latent has no head axis)
+
+Page ids are *global across layers*: page p of every layer belongs to the
+same logical page, so one host-side free list serves the whole stack. The
+last page id (index P) is a reserved null page — in-graph appends from
+inactive batch rows are redirected there instead of corrupting a live page.
+
+Write paths:
+  * prefill splice (host-side, ``splice_prefill``): quantize the prompt's
+    contiguous K/V page by page and scatter into the slot's allocated pages.
+  * decode append (in-graph, ``append_paged``): the touched page is
+    gathered, dequantized, the new token written at its row's true offset,
+    the page's per-head scales recomputed (amax -> M2), and the page
+    re-encoded. With unchanged scales decode->encode is the identity on the
+    FP8 grid, so requantization only rounds (once, <= 1/2 ulp) on the few
+    steps where a page's amax actually grows.
+
+``PagedState`` (page_table + per-slot true lengths) is the per-row cache
+index that replaces the old scalar ``cache_index = max(lengths)`` masking
+hack in the serving engine; models treat it as an opaque pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import FORMATS, fp_encode, quantize_to_grid
+from repro.core.scales import constrain_scales_m2
+from repro.kernels.common import decode_fp8
+
+__all__ = [
+    "PagedState",
+    "init_gqa_pool",
+    "init_mla_pool",
+    "pool_keys",
+    "quantize_pages",
+    "dequantize_pages",
+    "splice_prefill",
+    "append_paged",
+    "gather_pages",
+    "pool_bytes_per_token",
+    "bf16_bytes_per_token",
+]
+
+_EPS = 1e-12
+
+
+class PagedState(NamedTuple):
+    """Per-row cache index for paged decode: which pages each slot owns and
+    how many tokens it has really generated (no synchronized-length hack)."""
+
+    page_table: jnp.ndarray  # (B, pages_per_slot) int32 page ids
+    lengths: jnp.ndarray  # (B,) int32 true per-slot lengths
+
+
+def _is_fp8(pool: Dict) -> bool:
+    first = next(k for k in ("k", "ckv") if k in pool)
+    return pool[first].dtype == jnp.uint8
+
+
+def pool_keys(pool: Dict):
+    """The value-bearing leaf names of a pool ('k'/'v' or 'ckv'/'krope')."""
+    return ("k", "v") if "k" in pool else ("ckv", "krope")
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+def _init_store(n_layers, n_pages, page_size, n_kv, head_dim, fmt: Optional[str]):
+    p1 = n_pages + 1  # + reserved null page
+    if fmt is None:
+        return {"_": jnp.zeros((n_layers, p1, page_size, n_kv, head_dim), jnp.bfloat16)}
+    assert fmt == "fp8_e4m3", fmt
+    return {
+        "_": jnp.zeros((n_layers, p1, page_size, n_kv, head_dim), jnp.uint8),
+        "_smax": jnp.zeros((n_layers, p1), jnp.float32),
+        "_shift": jnp.zeros((n_layers, p1, n_kv), jnp.int32),
+    }
+
+
+def _named(store, name):
+    return {(name if k == "_" else name + k): v for k, v in store.items()}
+
+
+def init_gqa_pool(n_layers, n_pages, page_size, n_kv, head_dim,
+                  fmt: Optional[str] = "fp8_e4m3") -> Dict:
+    pool = {}
+    for name in ("k", "v"):
+        pool.update(_named(_init_store(n_layers, n_pages, page_size, n_kv,
+                                       head_dim, fmt), name))
+    return pool
+
+
+def init_mla_pool(n_layers, n_pages, page_size, kv_lora_rank, qk_rope_dim,
+                  fmt: Optional[str] = "fp8_e4m3") -> Dict:
+    """Latent pages: the compressed c_kv and the shared rope key, each with a
+    single scale 'head' (squeezed out of the stored value leaves)."""
+    pool = {}
+    for name, dim in (("ckv", kv_lora_rank), ("krope", qk_rope_dim)):
+        store = _init_store(n_layers, n_pages, page_size, 1, dim, fmt)
+        store["_"] = store["_"][:, :, :, 0]  # (L, P+1, page, dim)
+        pool.update(_named(store, name))
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# Page quantization (the M2 machinery applied per (page, head))
+# ---------------------------------------------------------------------------
+def quantize_pages(vals, fmt_name: str = "fp8_e4m3"):
+    """vals: (..., page, KV, hd) f32 -> (codes uint8, s_max (...,), shifts
+    (..., KV)). Scales are amax/fmt_max per (page, head), M2-constrained
+    across the page's heads: S_i = s_max * 2^-k_i."""
+    fmt = FORMATS[fmt_name]
+    amax = jnp.max(jnp.abs(vals), axis=(-3, -1))  # (..., KV)
+    raw = jnp.maximum(amax * jnp.float32(1.0 / fmt.max_value), _EPS)
+    # floor-rounded ratios: S_hat >= raw scale, so page content never
+    # saturates (FP grids keep the same relative step one binade up)
+    m2 = constrain_scales_m2(raw, group_axis=-1, rounding="floor")
+    q = quantize_to_grid(vals / m2.scales[..., None, :, None], fmt)
+    return fp_encode(q, fmt), m2.s_max[..., 0], m2.shifts
+
+
+def dequantize_pages(codes, s_max, shifts, fmt_name: str = "fp8_e4m3"):
+    """Inverse: exponent-add shift apply + one s_max multiply per page.
+    codes (..., page, KV, hd); s_max (...,); shifts (..., KV) -> f32."""
+    fmt = FORMATS[fmt_name]
+    v = decode_fp8(codes, fmt, shifts[..., None, :, None])
+    return v * s_max[..., None, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Prefill splice (host-side: runs once per admitted request)
+# ---------------------------------------------------------------------------
+def _with_head_axis(arr, has_heads: bool):
+    return arr if has_heads else arr[..., None, :]
+
+
+def splice_prefill(pool: Dict, prefill_cache: Dict, page_ids: np.ndarray,
+                   n_tokens: int) -> Dict:
+    """Quantize a batch-1 prefill's contiguous K/V into this slot's pages.
+
+    prefill_cache: the segment cache from ``models.prefill`` — leaves
+    (L, 1, max_seq, KV, hd) (GQA) or (L, 1, max_seq, dim) (MLA).
+    page_ids: (n_pages_used,) page ids covering ``n_tokens`` (tail zero-pad).
+    """
+    fp8 = _is_fp8(pool)
+    out = dict(pool)
+    for name in pool_keys(pool):
+        has_heads = pool[name].ndim == 5
+        page = pool[name].shape[2]
+        npg = len(page_ids)
+        # the reserved pages may overhang the prefill cache's max_seq (when
+        # max_seq is not a page multiple): take what exists, pad the rest
+        src = prefill_cache[name][:, 0, : npg * page].astype(jnp.float32)
+        short = npg * page - src.shape[1]
+        if short > 0:
+            src = jnp.pad(src, ((0, 0), (0, short)) + ((0, 0),) * (src.ndim - 2))
+        if npg * page > n_tokens:  # zero the tail beyond the prompt so page
+            # amax stays clean
+            mask = (jnp.arange(npg * page) < n_tokens).astype(jnp.float32)
+            src = src * mask.reshape((1, npg * page) + (1,) * (src.ndim - 2))
+        src = _with_head_axis(src, has_heads)
+        nl, kv, hd = src.shape[0], src.shape[-2], src.shape[-1]
+        vals = src.reshape(nl, npg, page, kv, hd)
+        ids = jnp.asarray(page_ids, jnp.int32)
+        if fp8:
+            codes, smax, shifts = quantize_pages(vals)
+            if not has_heads:
+                codes = codes[..., 0, :]
+            out[name] = out[name].at[:, ids].set(codes)
+            out[name + "_smax"] = out[name + "_smax"].at[:, ids].set(smax)
+            out[name + "_shift"] = out[name + "_shift"].at[:, ids].set(shifts)
+        else:
+            store = vals if has_heads else vals[..., 0, :]
+            out[name] = out[name].at[:, ids].set(store.astype(pool[name].dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode append (in-graph: runs inside the jitted decode step, per layer)
+# ---------------------------------------------------------------------------
+def append_paged(pool_layer: Dict, new_vals: Dict, state: PagedState) -> Dict:
+    """Write one new token per batch row at its row's true position.
+
+    pool_layer: one layer's slice of a pool (no leading L dim).
+    new_vals: {"k": (B, 1, KV, hd), "v": ...} or {"ckv": (B, 1, r), ...}.
+    Rows with lengths == 0 (empty slots) are redirected to the null page.
+    """
+    fp8 = _is_fp8(pool_layer)
+    b = state.lengths.shape[0]
+    out = dict(pool_layer)
+    rows = jnp.arange(b)
+    for name in pool_keys(pool_layer):
+        store = pool_layer[name]
+        has_heads = store.ndim == 4  # (P+1, page, KV, hd) vs (P+1, page, dim)
+        page = store.shape[1]
+        null = store.shape[0] - 1
+        slot = state.lengths // page
+        off = state.lengths % page
+        pid = jnp.take_along_axis(state.page_table, slot[:, None], axis=1)[:, 0]
+        pid = jnp.where(state.lengths > 0, pid, null).astype(jnp.int32)
+        new = new_vals[name].astype(jnp.float32)[:, 0]  # (B, KV, hd) | (B, dim)
+        new = _with_head_axis(new, has_heads)  # (B, KV|1, hd)
+        if not fp8:
+            val = new if has_heads else new[:, 0]
+            out[name] = store.at[pid, off].set(val.astype(store.dtype))
+            continue
+        fmt = FORMATS["fp8_e4m3"]
+        codes = _with_head_axis(store[pid], has_heads)  # (B, page, KV|1, hd)
+        smax = pool_layer[name + "_smax"][pid]  # (B,)
+        shifts = pool_layer[name + "_shift"][pid]  # (B, KV|1)
+        vals = dequantize_pages(codes, smax, shifts)
+        vals = vals.at[rows, off].set(new)
+        # zero page slots past this row's position: a recycled page may
+        # carry a previous owner's stale codes, which must not leak into
+        # the page amax (and so the scales) of its new owner
+        live = jnp.arange(page)[None, :] <= off[:, None]
+        vals = vals * live[:, :, None, None].astype(vals.dtype)
+        ncodes, nsmax, nshift = quantize_pages(vals)
+        if not has_heads:
+            ncodes = ncodes[..., 0, :]
+        out[name] = store.at[pid].set(ncodes)
+        out[name + "_smax"] = pool_layer[name + "_smax"].at[pid].set(nsmax)
+        out[name + "_shift"] = pool_layer[name + "_shift"].at[pid].set(nshift)
+    return out
+
+
+def gather_pages(pool_layer: Dict, name: str, state: PagedState):
+    """Dequantized gather for the jnp paths: (B, PP * page, KV, hd) f32 for
+    GQA leaves, (B, PP * page, dim) for MLA leaves."""
+    store = pool_layer[name]
+    has_heads = store.ndim == 4
+    page = store.shape[1]
+    b, pp = state.page_table.shape
+    pages = store[state.page_table]  # (B, PP, page, ...)
+    if _is_fp8(pool_layer):
+        smax = pool_layer[name + "_smax"][state.page_table]  # (B, PP)
+        shifts = pool_layer[name + "_shift"][state.page_table]  # (B, PP, KV|1)
+        vals = dequantize_pages(_with_head_axis(pages, has_heads), smax, shifts)
+        if not has_heads:
+            vals = vals[..., 0, :]
+    else:
+        vals = pages.astype(jnp.float32)
+    return vals.reshape(b, pp * page, *vals.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+def pool_bytes_per_token(pool: Dict) -> float:
+    """Bytes of pool storage per token slot (all value + scale leaves,
+    across the stacked layers), excluding the reserved null page."""
+    first = pool[pool_keys(pool)[0]]
+    n_layers, p1, page = first.shape[:3]
+    tokens = (p1 - 1) * page
+    total = 0
+    for leaf in pool.values():
+        frac = (leaf.shape[1] - 1) / leaf.shape[1]
+        total += leaf.size * leaf.dtype.itemsize * frac
+    return total / tokens
+
+
+def bf16_bytes_per_token(pool: Dict) -> float:
+    """What the same pool geometry would cost holding bf16 values (the
+    monolithic-cache baseline the fp8 pool replaces)."""
+    total = 0
+    for name in pool_keys(pool):
+        leaf = pool[name]
+        per_tok = int(np.prod(leaf.shape[3:])) * leaf.shape[0]  # feat x layers
+        total += per_tok * 2
+    return float(total)
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return max(1, math.ceil(n_tokens / page_size))

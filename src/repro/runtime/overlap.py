@@ -30,7 +30,9 @@ __all__ = ["ring_ag_matmul"]
 def _ring_body(x_blk, w, axis_name: str):
     """x_blk: (B, s_loc, d) local seq shard; w: (out_loc, d) local rows.
     Returns (B, P*s_loc, out_loc): the full-seq output for local out rows."""
-    p = jax.lax.axis_size(axis_name)
+    from repro.launch.mesh import axis_size
+
+    p = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
 
     def step(carry, i):

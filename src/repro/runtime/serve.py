@@ -1,17 +1,30 @@
-"""Batched W4A8 serving loop: continuous-batching-lite over a fixed slot
-pool, prefill + decode with the quantized checkpoint.
+"""Batched W4A8 serving loop over a quantized paged KV-cache pool.
 
-Serving model: ``Server`` owns `slots` concurrent sequences sharing one KV
-cache (slot = batch row). Requests join free slots; each engine step decodes
-one token for every active slot. Prefill for a new request runs row-wise
-into its slot (single-row prefill + cache splice). This is the scheduling
-skeleton of a vLLM-style engine adapted to fixed-shape jit programs (shapes
-never change -> one compiled decode step).
+Serving model: ``Server`` owns `slots` concurrent sequences (slot = batch
+row). Requests join free slots; each engine step decodes one token for every
+active slot. Prefill for a new request runs row-wise (batch-1) and is
+*spliced into pages*: the prompt's K/V is quantized page by page into the
+pool (runtime.kv_cache), so the engine never holds a monolithic
+(slots, max_seq, ...) cache. This is the scheduling skeleton of a
+vLLM-style paged engine adapted to fixed-shape jit programs (page table and
+per-slot lengths are jit *inputs*; shapes never change -> one compiled
+decode step).
+
+``kv_fmt`` selects the page payload: ``"fp8_e4m3"`` stores packed FP8 codes
+with per-(page, head) M2 scales (~0.52x the bytes of bf16 -> ~2x the slot
+pool per HBM byte), ``None`` keeps bf16 pages as the fallback path. Both
+run the same paged decode attention with per-slot *true* lengths — the old
+``idx = max(lengths)`` synchronized-index masking hack is gone; rows carry
+their own positions and length masks end to end.
+
+Families whose decode state cannot be paged (enc-dec cross-attention
+caches, SSM/xLSTM recurrent states) keep the legacy monolithic engine.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 import jax
@@ -19,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import models
+from repro.models.transformer import segments_for
+from repro.runtime import kv_cache as kvc
 
 __all__ = ["Request", "Server"]
 
@@ -53,63 +68,150 @@ class Request:
 class Server:
     def __init__(self, params, cfg, slots: int = 4, max_seq: int = 512,
                  a_fmt: Optional[str] = "fp8_e4m3",
-                 kernel_backend: Optional[str] = None):
+                 kernel_backend: Optional[str] = None,
+                 kv_fmt: Optional[str] = None,
+                 page_size: int = 64,
+                 pool_pages: Optional[int] = None):
         """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
-        prefill/decode through the fused single-pass W4A8 kernel (in-kernel
-        FP8 act-quant + LoRC epilogue; MoE/MLA absorbed paths use the
-        batched variant); 'ref' forces the jnp oracles; None keeps the
-        process-wide setting (REPRO_KERNEL_BACKEND). The choice is scoped to
-        this server's prefill/decode calls, not the whole process."""
+        prefill/decode through the fused single-pass W4A8 kernel, and paged
+        decode attention through the flash-decoding page-gather kernel;
+        'ref' forces the jnp oracles; None keeps the process-wide setting.
+
+        ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
+        per-(page, head) M2 scales) or None (bf16 pages, fallback path).
+        ``page_size``: tokens per page. ``pool_pages``: pool capacity in
+        pages (default: slots * pages_per_slot — full backing)."""
         self.kernel_backend = kernel_backend
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
         self.a_fmt = a_fmt
-        self.caches = models.init_cache(cfg, slots, max_seq)
-        self.lengths = np.zeros(slots, dtype=np.int64)
+        self.kv_fmt = kv_fmt
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        self.finished: List[Request] = []
 
+        self.paged = cfg.encoder_layers == 0 and cfg.ssm is None
+        if not self.paged:
+            if kv_fmt is not None:
+                raise ValueError(
+                    f"kv_fmt={kv_fmt!r}: paged KV quantization needs pageable "
+                    "decode state (enc-dec / SSM families keep bf16 caches)")
+            self.caches = models.init_cache(cfg, slots, max_seq)
+            self.lengths = np.zeros(slots, dtype=np.int64)
+            self._decode = jax.jit(
+                lambda p, c, t, i: models.decode_step(p, cfg, t, c, i, a_fmt=a_fmt)
+            )
+            return
+
+        # ---- paged pool + host-side allocator ----------------------------
+        self.page_size = page_size
+        self.pages_per_slot = math.ceil(max_seq / page_size)
+        n_pages = pool_pages or slots * self.pages_per_slot
+        self._n_pages = n_pages
+        self.pools = []
+        for seg in segments_for(cfg):
+            if seg.mixer == "gqa":
+                pool = kvc.init_gqa_pool(seg.count, n_pages, page_size,
+                                         cfg.n_kv_heads, cfg.resolved_head_dim,
+                                         kv_fmt)
+            elif seg.mixer == "mla":
+                pool = kvc.init_mla_pool(seg.count, n_pages, page_size,
+                                         cfg.mla.kv_lora_rank,
+                                         cfg.mla.qk_rope_dim, kv_fmt)
+            else:  # pragma: no cover — guarded by self.paged above
+                raise ValueError(f"unpageable mixer {seg.mixer!r}")
+            self.pools.append({"kv": pool})
+        self.free_pages: List[int] = list(range(n_pages))
+        self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        self.page_table = np.zeros((slots, self.pages_per_slot), np.int32)
+        self.lengths = np.zeros(slots, dtype=np.int32)
         self._decode = jax.jit(
-            lambda p, c, t, i: models.decode_step(p, cfg, t, c, i, a_fmt=a_fmt)
+            lambda p, c, t, st: models.decode_step(p, cfg, t, c, st, a_fmt=a_fmt)
         )
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        if self.paged:  # fail fast on requests no retirement can ever fit
+            need = kvc.pages_needed(
+                min(len(req.prompt) + req.max_new, self.max_seq), self.page_size)
+            if need > self._n_pages:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages but the pool has "
+                    f"{self._n_pages}; raise pool_pages or shrink prompt/max_new")
         self.queue.append(req)
 
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
+                if self.paged and not self._reserve(slot, self.queue[0]):
+                    break  # pool exhausted: wait for retirements
                 req = self.queue.pop(0)
                 self.active[slot] = req
                 self._prefill_slot(slot, req)
 
+    def _reserve(self, slot: int, req: Request) -> bool:
+        """Reserve this request's worst-case pages up front (prompt +
+        generated tokens): no mid-flight stalls once admitted."""
+        need_tokens = min(len(req.prompt) + req.max_new, self.max_seq)
+        npg = kvc.pages_needed(need_tokens, self.page_size)
+        if len(self.free_pages) < npg:
+            return False
+        ids = [self.free_pages.pop(0) for _ in range(npg)]
+        self.slot_pages[slot] = ids
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[: len(ids)] = ids
+        self.page_table[slot] = row
+        return True
+
     def _prefill_slot(self, slot: int, req: Request):
-        """Row-wise prefill: run the prompt through a batch-1 prefill and
-        splice the resulting caches into this slot's row."""
+        """Row-wise prefill, then splice the prompt's caches into this
+        slot's row (legacy) or quantize them into the slot's pages."""
         toks = jnp.asarray([req.prompt], jnp.int32)
         with _backend_scope(self.kernel_backend):
             logits, c1 = models.prefill(self.params, self.cfg,
                                         {"tokens": toks}, self.max_seq,
                                         a_fmt=self.a_fmt)
+        n = len(req.prompt)
+        if self.paged:
+            used = kvc.pages_needed(n, self.page_size)
+            ids = np.asarray(self.slot_pages[slot][:used], np.int32)
+            for i, pool in enumerate(self.pools):
+                self.pools[i] = {"kv": kvc.splice_prefill(pool["kv"],
+                                                          c1[i]["kv"], ids, n)}
+        else:
+            def splice(full, one):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                )
 
-        def splice(full, one):
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1
-            )
-
-        self.caches = jax.tree.map(splice, self.caches, c1)
-        self.lengths[slot] = len(req.prompt)
+            self.caches = jax.tree.map(splice, self.caches, c1)
+        self.lengths[slot] = n
         req.out.append(int(jnp.argmax(logits[0])))
+
+    # -- retirement ----------------------------------------------------------
+    def _retire(self, slot: int, req: Request):
+        req.done = True
+        self.active[slot] = None
+        self.finished.append(req)
+        if not self.paged:
+            return
+        # freed pages are NOT zeroed (that would rewrite the whole pool per
+        # retirement): recycled pages are overwritten by splice_prefill, and
+        # decode appends mask positions past the new owner's length before
+        # recomputing page scales, so stale codes can never leak
+        self.free_pages.extend(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot] = 0
+        self.lengths[slot] = 0
 
     # -- engine step ----------------------------------------------------------
     def step(self):
-        """One decode step for all active slots (synchronized lengths are not
-        required: per-slot cache_index would need per-row attention masks;
-        this engine keeps a common index = max length and relies on the
-        kv_len mask for shorter rows — documented simplification)."""
+        """One decode step for all active slots. The paged engine passes
+        per-slot true lengths + the page table into the jitted step (per-row
+        positions and length masks); the legacy engine keeps the documented
+        common-index simplification."""
         self._admit()
         if not any(self.active):
             return False
@@ -117,10 +219,16 @@ class Server:
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 tok[s, 0] = req.out[-1]
-        idx = int(self.lengths.max())
         with _backend_scope(self.kernel_backend):
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               jnp.asarray(tok), idx)
+            if self.paged:
+                state = kvc.PagedState(jnp.asarray(self.page_table),
+                                       jnp.asarray(self.lengths))
+                logits, self.pools = self._decode(self.params, self.pools,
+                                                  jnp.asarray(tok), state)
+            else:
+                idx = int(self.lengths.max())
+                logits, self.caches = self._decode(self.params, self.caches,
+                                                   jnp.asarray(tok), idx)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for s, req in enumerate(self.active):
             if req is None:
@@ -128,13 +236,25 @@ class Server:
             req.out.append(int(nxt[s]))
             self.lengths[s] += 1
             if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
-                req.done = True
-                self.active[s] = None
+                self._retire(s, req)
         return True
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
+        """Step until queue + slots are empty; returns the requests finished
+        during this call (in retirement order)."""
+        start = len(self.finished)
         for _ in range(max_steps):
             if not self.step() and not self.queue:
                 break
-        return finished
+        return self.finished[start:]
+
+    # -- accounting ------------------------------------------------------------
+    def kv_bytes_per_token(self) -> float:
+        """Pool bytes per token slot across the whole layer stack (paged
+        engine only) — the number the FP8 pool halves vs bf16."""
+        assert self.paged
+        return sum(kvc.pool_bytes_per_token(p["kv"]) for p in self.pools)
+
+    def kv_bf16_bytes_per_token(self) -> float:
+        assert self.paged
+        return sum(kvc.bf16_bytes_per_token(p["kv"]) for p in self.pools)

@@ -124,6 +124,60 @@ class TestScaleConstraints:
         e2 = float(jnp.linalg.norm(s - constrain_scales_m2(s).scales))
         assert e2 < e1
 
+    def test_m2_shift_bounds(self):
+        """k is clipped to [0, max_shift] even for pathological ratios."""
+        s = jnp.asarray([[1.0, 1e-12, 1e-30, 0.5]])
+        for max_shift in (4, 31):
+            m2 = constrain_scales_m2(s, max_shift=max_shift)
+            k = np.asarray(m2.shifts)
+            assert k.min() >= 0 and k.max() <= max_shift, (max_shift, k)
+            # the clipped entries still reconstruct as s_max * 2^-k
+            recon = np.asarray(m2.s_max) * 2.0 ** (-k.astype(np.float64))
+            np.testing.assert_allclose(np.asarray(m2.scales), recon, rtol=1e-6)
+
+    def test_pow2_scales_idempotent(self):
+        """Scales that already sit on the pow-2 lattice pass through both
+        constraints exactly (M1 bit-for-bit; M2 under either rounding)."""
+        s = jnp.asarray([[2.0**-7, 2.0**-3, 2.0**0, 2.0**5]])
+        np.testing.assert_array_equal(np.asarray(constrain_scales_m1(s)),
+                                      np.asarray(s))
+        for rounding in ("ceil", "floor"):
+            m2 = constrain_scales_m2(s, rounding=rounding)
+            np.testing.assert_array_equal(np.asarray(m2.scales), np.asarray(s))
+            # exact integer shifts: log2 ratios are integers already
+            assert np.array_equal(np.asarray(m2.shifts), [[12, 8, 5, 0]])
+
+    def test_dequant_roundtrip_vs_unconstrained(self):
+        """Constrained-scale dequantization stays close to the unconstrained
+        FGQ roundtrip: M2 within ~1/3 extra error, M1 (coarse pow-2 snap)
+        bounded by 2x, and the error ordering unconstrained <= m2 <= m1."""
+        rng = np.random.default_rng(8)
+        w = _rand_w(rng, out=32, inp=128, outlier=0.3)
+
+        def rt_err(scale):
+            qt = quantize_weight(w, "fp4_e2m1", group_size=32, scale=scale)
+            return float(jnp.linalg.norm(w - qt.dequantize()))
+
+        base_scale = quantize_weight(w, "fp4_e2m1", group_size=32).scale
+        e_raw = rt_err(None)
+        e_m2 = rt_err(constrain_scales_m2(base_scale).scales)
+        e_m1 = rt_err(constrain_scales_m1(base_scale))
+        assert e_raw <= e_m2 * (1 + 1e-6) <= e_m1 * (1 + 1e-6), (e_raw, e_m2, e_m1)
+        assert e_m2 < 1.35 * e_raw, (e_raw, e_m2)
+        assert e_m1 < 2.0 * e_raw, (e_raw, e_m1)
+
+    def test_m2_floor_rounding_never_saturates(self):
+        """rounding='floor' keeps every constrained scale >= the raw scale,
+        so content quantized with it cannot clip (the KV-cache contract);
+        'ceil' (the paper's weight path) snaps at-or-below."""
+        rng = np.random.default_rng(9)
+        s = jnp.asarray(np.abs(rng.normal(size=(16, 8))).astype(np.float32) + 1e-3)
+        lo = constrain_scales_m2(s, rounding="floor").scales
+        hi = constrain_scales_m2(s, rounding="ceil").scales
+        assert bool(jnp.all(lo >= s * (1 - 1e-6)))
+        assert bool(jnp.all(lo < 2 * s))
+        assert bool(jnp.all(hi <= s * (1 + 1e-6)))
+
 
 class TestGPTQ:
     def _calib(self, rng, n=512, d=64, correlated=True):

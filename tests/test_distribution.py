@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_smoke
 from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_mesh
 from repro.launch.sharding import _cache_leaf_spec, serve_rules, train_rules
 from repro.models.params import DEFAULT_RULES, ParamDef, pspec_leaf
 
@@ -113,11 +114,11 @@ MINI_DRYRUN = textwrap.dedent("""
     import json, sys
     import jax
     from repro.configs import get_smoke
+    from repro.launch.mesh import make_mesh
     from repro.launch.shapes import ShapeSpec
     from repro.launch.steps import lower_cell
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_smoke(sys.argv[1])
     shape = ShapeSpec("mini", sys.argv[2], seq=64, batch=4)
     lowered, meta = lower_cell(cfg, shape, mesh)

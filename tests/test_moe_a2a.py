@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
 from repro.models.moe import moe_layer, moe_params
 from repro.models.moe_a2a import moe_layer_a2a
 from repro.models.params import init_tree
@@ -21,8 +22,7 @@ def test_a2a_matches_einsum_single_device():
     cfg = get_smoke("olmoe-1b-7b")
     p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.bfloat16)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     y_ein, aux_e = moe_layer(p, x, cfg, group_size=32)
     y_a2a, aux_a = moe_layer_a2a(p, x, cfg, mesh)
     np.testing.assert_allclose(
@@ -35,8 +35,7 @@ def test_a2a_grads_finite():
     cfg = get_smoke("olmoe-1b-7b")
     p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     def loss(p):
         y, aux = moe_layer_a2a(p, x, cfg, mesh)
@@ -55,6 +54,7 @@ MULTIDEV = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from repro.configs import get_smoke
+    from repro.launch.mesh import make_mesh
     from repro.models.moe import moe_layer, moe_params
     from repro.models.moe_a2a import moe_layer_a2a
     from repro.models.params import init_tree
@@ -62,8 +62,7 @@ MULTIDEV = textwrap.dedent("""
     cfg = get_smoke("olmoe-1b-7b")  # 8 experts
     p = init_tree(moe_params(cfg), jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     y_ref, _ = moe_layer(p, x, cfg, group_size=32)
     fn = jax.jit(lambda p, x: moe_layer_a2a(p, x, cfg, mesh)[0])
     y = fn(p, x)

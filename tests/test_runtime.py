@@ -65,10 +65,11 @@ class TestCheckpoint:
         the topology-independence path."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        from repro.launch.mesh import make_mesh
+
         tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
         save(str(tmp_path), 3, tree)
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("model",))
         sh = {"w": NamedSharding(mesh, P(None, None))}
         out = restore(str(tmp_path), tree, shardings=sh)
         np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
@@ -147,10 +148,10 @@ class TestCompression:
 
 class TestOverlap:
     def test_ring_ag_matmul_matches_dense(self):
+        from repro.launch.mesh import make_mesh
         from repro.runtime.overlap import ring_ag_matmul
 
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         rng = np.random.default_rng(3)
         x = jnp.asarray(rng.normal(size=(2, 8, 16)).astype(np.float32))
         w = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
