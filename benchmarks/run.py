@@ -161,6 +161,55 @@ def kernel_microbench(tiny: bool = False):
     finally:
         kops.set_backend(prev)
 
+    # ---- paged decode attention vs the monolithic engine (CI-gated
+    # speedup/* trend line): paged decode gathers + attends only the pages
+    # a row actually owns (true context), where the legacy engine attends
+    # — and masks — the full max_seq row it reserved. Sized so compute
+    # dominates dispatch overhead; the work ratio (`over`x tokens) keeps
+    # the >= 1.0x gate far from CPU timing noise. -------------------------
+    pb, pkv, pg2, phd, ppp = (8, 2, 4, 64, 8) if tiny else (8, 4, 4, 64, 16)
+    over = 8  # max_seq = over x the true context
+    t_true = ppp * 16
+    max_ctx = t_true * over
+    pool2 = kvc.init_gqa_pool(1, pb * ppp, 16, pkv, phd, "fp8_e4m3")
+    pt2 = np.zeros((pb, ppp), np.int32)
+    kc2 = jnp.asarray(rng.normal(size=(1, 1, t_true, pkv, phd)).astype(np.float32))
+    for r in range(pb):
+        ids = np.arange(r * ppp, (r + 1) * ppp, dtype=np.int32)
+        pt2[r] = ids
+        pool2 = kvc.splice_prefill(pool2, {"k": kc2, "v": kc2}, ids, t_true)
+    layer2 = {k: v[0] for k, v in pool2.items()}
+    q2 = jnp.asarray(rng.normal(size=(pb, pkv * pg2, phd)).astype(np.float32))
+    lens2 = jnp.full((pb,), t_true, jnp.int32)
+    pt2j = jnp.asarray(pt2)
+    kfull = jnp.asarray(rng.normal(size=(pb, max_ctx, pkv, phd))
+                        .astype(np.float32)).astype(jnp.bfloat16)
+    vfull = jnp.asarray(rng.normal(size=(pb, max_ctx, pkv, phd))
+                        .astype(np.float32)).astype(jnp.bfloat16)
+
+    def legacy_decode(qv):
+        kf = jnp.repeat(kfull, pg2, axis=2)
+        vf = jnp.repeat(vfull, pg2, axis=2)
+        s = jnp.einsum("bhd,bthd->bht", qv.astype(jnp.bfloat16), kf,
+                       preferred_element_type=jnp.float32)
+        s = s / np.sqrt(phd)
+        s = jnp.where(jnp.arange(max_ctx)[None, None] < lens2[:, None, None],
+                      s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bht,bthd->bhd", p.astype(jnp.bfloat16), vf,
+                          preferred_element_type=jnp.float32)
+
+    prev = kops.get_backend()
+    try:
+        kops.set_backend("ref")
+        t_paged = timed(jax.jit(
+            lambda q: kops.paged_decode_attn(q, layer2, pt2j, lens2)), q2)
+        t_mono = timed(jax.jit(legacy_decode), q2)
+    finally:
+        kops.set_backend(prev)
+    rows.append(("kernel/paged_decode_true_ctx", t_paged, t_mono / t_paged))
+    rows.append(("kernel/mono_decode_max_seq", t_mono, 0.0))
+
     for name, us, _ in rows:
         print(f"{name:36s} {us:10.1f} us/call")
 
@@ -171,11 +220,124 @@ def kernel_microbench(tiny: bool = False):
         split = payload[f"kernel/w4a8_split_{tag}"]
         fusedt = payload[f"kernel/w4a8_fused_{tag}"]
         payload[f"speedup/w4a8_fused_{tag}"] = split / fusedt
+    payload["speedup/paged_decode_true_ctx"] = (
+        payload["kernel/mono_decode_max_seq"]
+        / payload["kernel/paged_decode_true_ctx"])
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"[wrote {os.path.normpath(out_path)}]")
     assert not slower, f"fused slower than split on: {slower}"
+    return rows
+
+
+def serving_bench(tiny: bool = False):
+    """Long-tail ``max_new`` serving workload: reserve-on-admit vs the
+    token-budget scheduler on the same tight FP8 page pool.
+
+    Reserve-on-admit charges worst-case pages (prompt + max_new) up front,
+    so one long-tail request blocks slots the short requests could use;
+    the token-budget scheduler charges prompt + headroom, grows pages on
+    demand and preempts by page steal. Same model, same requests, same
+    pool — the only variable is the admission policy, and both schedulers
+    produce bit-identical greedy tokens (resume is token-identical), so
+    tokens/sec and slot utilization are directly comparable.
+
+    Emits BENCH_serving.json: utilization + tokens/sec per scheduler and
+    the ``speedup/serving_tokens_per_sec`` key the serving-smoke CI job
+    gates >= 1.0x (plus ``utilization/token_budget >=
+    utilization/reserve_worst_case``). Each scheduler is run twice and the
+    second (hot jit cache) run is timed, so wall-clock compares steady
+    state, not compilation.
+    """
+    import json
+
+    from repro import models
+    from repro.models.config import ArchConfig
+    from repro.runtime.serve import Request, Server
+
+    tiny = tiny or os.environ.get("REPRO_BENCH_TINY") == "1"
+    cfg = ArchConfig(
+        name="serve-bench", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, attn_kind="gqa",
+        norm_kind="layernorm", act_kind="relu", mlp_gated=False,
+        use_bias=True, pos_embedding="learned", tie_embeddings=True,
+        max_position=256, attn_chunk=128,
+    )
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 10 if tiny else 24
+    base_new, tail_new, tail_every = 4, 64, 2
+    slots, page, pool_pages = 4, 8, (10 if tiny else 14)
+    max_seq = 96 if tiny else 160
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).tolist()
+               for n in rng.integers(4, 9, size=n_req)]
+    max_new = [tail_new if i % tail_every == 0 else base_new
+               for i in range(n_req)]
+
+    def run(sched):
+        srv = Server(params, cfg, slots=slots, max_seq=max_seq,
+                     kv_fmt="fp8_e4m3", page_size=page,
+                     pool_pages=pool_pages, a_fmt=None, scheduler=sched)
+        reqs = [Request(rid=i, prompt=list(p), max_new=mn)
+                for i, (p, mn) in enumerate(zip(prompts, max_new))]
+        for r in reqs:
+            srv.submit(r)
+        t0 = time.perf_counter()
+        done = srv.run_until_drained()
+        dt = time.perf_counter() - t0
+        assert len(done) == n_req, (sched, len(done))
+        toks = sum(len(r.out) for r in reqs)
+        return {"sec": dt, "tokens": toks, "tps": toks / dt,
+                "util": srv.utilization(), "steps": srv.stats["steps"],
+                "preemptions": srv.stats["preemptions"],
+                "resumes": srv.stats["resumes"],
+                "outs": {r.rid: tuple(r.out) for r in reqs}}
+
+    print("\n== serving bench (long-tail max_new, CPU) ==")
+    run("reserve")        # warmup: compile every prefill/decode shape
+    run("token_budget")
+
+    def timed_best(sched):
+        # best-of-2 (min-wall-time) per scheduler: noise only ever inflates
+        # wall time, so the min is the stable estimator — keeps the strict
+        # in-bench tokens/sec assert from flaking on a loaded CI runner
+        a, b = run(sched), run(sched)
+        return a if a["tps"] >= b["tps"] else b
+
+    rv = timed_best("reserve")
+    tb = timed_best("token_budget")
+    assert rv["outs"] == tb["outs"], \
+        "schedulers must produce bit-identical greedy tokens"
+    for name, r in (("reserve", rv), ("token_budget", tb)):
+        print(f"{name:14s} {r['tokens']} tok in {r['sec']:.2f}s = "
+              f"{r['tps']:7.1f} tok/s | util {r['util']:.3f} | "
+              f"{r['steps']} steps | {r['preemptions']} preemptions")
+
+    payload = {
+        "serving/tokens_per_sec/reserve": rv["tps"],
+        "serving/tokens_per_sec/token_budget": tb["tps"],
+        "utilization/reserve_worst_case": rv["util"],
+        "utilization/token_budget": tb["util"],
+        "serving/steps/reserve": float(rv["steps"]),
+        "serving/steps/token_budget": float(tb["steps"]),
+        "serving/preemptions/token_budget": float(tb["preemptions"]),
+        "serving/resumes/token_budget": float(tb["resumes"]),
+        "speedup/serving_tokens_per_sec": tb["tps"] / rv["tps"],
+    }
+    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[wrote {os.path.normpath(out_path)}]")
+
+    rows = [
+        ("serving/step_reserve", rv["sec"] / rv["steps"] * 1e6, rv["tps"]),
+        ("serving/step_token_budget", tb["sec"] / tb["steps"] * 1e6, tb["tps"]),
+    ]
+    # the paper-level claim this PR gates in CI: on-demand paging converts
+    # FP8's bytes-per-token win into strictly more concurrent work
+    assert tb["util"] > rv["util"], (tb["util"], rv["util"])
+    assert tb["tps"] > rv["tps"], (tb["tps"], rv["tps"])
     return rows
 
 
@@ -198,6 +360,7 @@ def main() -> None:
         ("tableA1", pt.table_a1_fp4_formats),
         ("roofline", roofline_table),
         ("kernels", kernel_microbench),
+        ("serving", serving_bench),
     ]
     slow = {"fig1", "table1", "table2", "table3", "tableA1"}
 

@@ -35,6 +35,20 @@ def main():
                          "per-(page, head) M2 scales, or bf16 (fallback)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--scheduler", default="token_budget",
+                    choices=["reserve", "token_budget"],
+                    help="admission policy: reserve-on-admit (worst-case "
+                         "pages up front) or token-budget (prompt pages + "
+                         "headroom, on-demand growth, page-steal preemption)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-new-tail", type=int, default=0,
+                    help="long-tail workload: every third request gets this "
+                         "max_new instead of --max-new (0 = uniform). "
+                         "Reproduces the serving benchmark's long-tail mix")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool capacity (0 = fully backed slots); set "
+                         "it tight to watch the token-budget scheduler "
+                         "preempt by page steal")
     args = ap.parse_args()
 
     params = trained_params()
@@ -56,14 +70,20 @@ def main():
     # W4A8 kernel (compiled on TPU, interpreter elsewhere)
     kv_fmt = None if args.kv_fmt == "bf16" else args.kv_fmt
     server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
-                    kernel_backend=args.backend, kv_fmt=kv_fmt, page_size=32)
+                    kernel_backend=args.backend, kv_fmt=kv_fmt, page_size=32,
+                    scheduler=args.scheduler,
+                    pool_pages=args.pool_pages or None)
     print(f"kv cache: paged {args.kv_fmt}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
-          f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token)")
+          f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
+          f"scheduler={args.scheduler}")
     reqs = []
     for rid in range(args.requests):
         prompt = rng.integers(1, BENCH_CFG.vocab_size, size=rng.integers(3, 10)).tolist()
-        r = Request(rid=rid, prompt=prompt, max_new=8)
+        max_new = args.max_new
+        if args.max_new_tail and rid % 3 == 0:
+            max_new = args.max_new_tail
+        r = Request(rid=rid, prompt=prompt, max_new=max_new)
         reqs.append(r)
         server.submit(r)
 
@@ -71,13 +91,17 @@ def main():
     steps = 0
     while server.step():
         steps += 1
-        if steps > 200:
+        if steps > 2000:
             break
     dt = time.time() - t0
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.1f}s "
           f"({steps} engine steps, backend={args.backend})")
+    print(f"slot utilization {server.utilization():.3f}, "
+          f"{server.stats['preemptions']} preemptions / "
+          f"{server.stats['resumes']} resumes "
+          f"({server.stats['pages_stolen']} pages stolen)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.prompt} -> {r.out}")
     ops.set_backend("ref")

@@ -32,7 +32,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.runtime.kv_cache import PagedState, append_paged
+from repro.runtime.kv_cache import (PagedState, append_paged,
+                                    append_prefill_chunk, gather_history)
 
 from .layers import ParamDef, accum_dtype, apply_rope, linear, quant_act, shard_heads
 
@@ -196,19 +197,49 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     if isinstance(cache_index, PagedState):
-        # paged decode: append this token at each row's true length, then
-        # run flash-decoding over the quantized page pool (kernels.ops
-        # routes pallas kernel vs jnp oracle). Per-row length masks replace
-        # the engine-level synchronized cache index.
-        assert s == 1, "paged KV path is decode-only (prefill is spliced)"
-        from repro.kernels import ops
+        if s == 1:
+            # paged decode: append this token at each row's true length,
+            # then run flash-decoding over the quantized page pool
+            # (kernels.ops routes pallas kernel vs jnp oracle). Per-row
+            # length masks replace the engine-level synchronized index.
+            from repro.kernels import ops
 
-        new_cache = append_paged(kv_cache, {"k": k, "v": v}, cache_index)
-        o = ops.paged_decode_attn(
-            q[:, 0], new_cache, cache_index.page_table,
-            cache_index.lengths + 1, window=cfg.window,
-        )
-        o = o[:, None].astype(x.dtype)  # (B, 1, H, hd)
+            new_cache = append_paged(kv_cache, {"k": k, "v": v}, cache_index)
+            o = ops.paged_decode_attn(
+                q[:, 0], new_cache, cache_index.page_table,
+                cache_index.lengths + 1, window=cfg.window,
+            )
+            o = o[:, None].astype(x.dtype)  # (B, 1, H, hd)
+        else:
+            # streaming paged prefill: write this page-aligned prompt chunk
+            # straight into the pool in-graph, then attend over the gathered
+            # *history* pages plus the chunk's own exact K/V (the chunk does
+            # not round-trip through the page grid, matching the monolithic
+            # prefill numerics). No contiguous max_seq scratch cache is ever
+            # materialized, and the engine trims the page table to the pages
+            # covering the prompt so far — gather cost tracks true length.
+            assert causal, "streaming paged prefill assumes causal decode LMs"
+            assert b == 1, "streaming paged prefill is row-wise (batch 1)"
+            new_cache = append_prefill_chunk(kv_cache, {"k": k, "v": v},
+                                             cache_index)
+            hist, hist_len = gather_history(new_cache, cache_index, s)
+            kc, vc = k, v
+            if hist_len:
+                kc = jnp.concatenate([hist["k"].astype(k.dtype), k], 1)
+                vc = jnp.concatenate([hist["v"].astype(v.dtype), v], 1)
+            kf, vf = _repeat_kv(kc, g), _repeat_kv(vc, g)
+            # history pages are full (chunk starts page-aligned): key i of the
+            # history sits at absolute position i < chunk start — always
+            # causally visible; within the chunk the mask is plain tril
+            ok = jnp.concatenate(
+                [jnp.ones((s, hist_len), jnp.bool_),
+                 jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
+            if cfg.window:
+                qi = cache_index.lengths[0] + jnp.arange(s)
+                ki = jnp.concatenate([jnp.arange(hist_len), qi])
+                ok &= ki[None, :] > qi[:, None] - cfg.window
+            o = _sdpa_full(q, kf, vf,
+                           jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32))
         o = o.reshape(b, s, h * hd)
         out = linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))
         return out, new_cache

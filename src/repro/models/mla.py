@@ -18,7 +18,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.runtime.kv_cache import PagedState, append_paged, gather_pages
+from repro.runtime.kv_cache import (PagedState, append_paged,
+                                    append_prefill_chunk, gather_history,
+                                    gather_pages)
 
 from .layers import (ParamDef, PackedLinear, accum_dtype, apply_rope, as_dense,
                      batched_linear, linear, norm, packed_head_view, quant_act,
@@ -94,19 +96,49 @@ def mla_attention(
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
 
     new_cache = None
-    is_decode = kv_cache is not None and s == 1
     paged = isinstance(cache_index, PagedState)
+    # the absorbed form serves both paged modes: single-token decode and
+    # the streaming prefill chunk (s > 1) — its einsums are s-generic
+    is_decode = kv_cache is not None and (s == 1 or paged)
     if paged:
-        # paged decode: append the compressed latent + rope key at each
-        # row's true position, then attend over the dequantized page gather
-        # (the latent has no head axis, so the absorbed einsums stay jnp —
-        # the pool is the same FP8-paged machinery as the GQA path)
-        assert is_decode, "paged MLA path is decode-only (prefill is spliced)"
-        new_cache = append_paged(
-            kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
-        )
-        ckv = gather_pages(new_cache, "ckv", cache_index).astype(jnp.bfloat16)
-        krope = gather_pages(new_cache, "krope", cache_index).astype(jnp.bfloat16)
+        # paged decode / streaming prefill chunk: append the compressed
+        # latent + rope key at each row's true position (one token) or the
+        # whole page-aligned chunk, then attend over the dequantized page
+        # gather (the latent has no head axis, so the absorbed einsums
+        # stay jnp — the pool is the same FP8-paged machinery as GQA)
+        if s == 1:
+            new_cache = append_paged(
+                kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
+            )
+            ckv = gather_pages(new_cache, "ckv", cache_index).astype(jnp.bfloat16)
+            krope = gather_pages(new_cache, "krope", cache_index).astype(jnp.bfloat16)
+            t = ckv.shape[1]
+            kv_len = cache_index.lengths + 1  # appended token at position len
+            pmsk4 = jnp.where(jnp.arange(t)[None] < kv_len[:, None], 0.0,
+                              -1e30)[:, None, None, :].astype(jnp.float32)
+        else:
+            # streaming prefill: write the page-aligned chunk in-graph, then
+            # attend over gathered *history* pages + the chunk's own exact
+            # latents (no page-grid round trip for the chunk itself). The
+            # history pages are full, so history key i sits at absolute
+            # position i < chunk start — always causally visible; the chunk
+            # masks plain tril
+            assert b == 1, "streaming paged prefill is row-wise (batch 1)"
+            new_cache = append_prefill_chunk(
+                kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
+            )
+            hist, hist_len = gather_history(new_cache, cache_index, s)
+            ckv = c_kv.astype(jnp.bfloat16)
+            krope = k_rope.astype(jnp.bfloat16)
+            if hist_len:
+                ckv = jnp.concatenate(
+                    [hist["ckv"].astype(jnp.bfloat16), ckv], axis=1)
+                krope = jnp.concatenate(
+                    [hist["krope"].astype(jnp.bfloat16), krope], axis=1)
+            ok = jnp.concatenate(
+                [jnp.ones((s, hist_len), jnp.bool_),
+                 jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
+            pmsk4 = jnp.where(ok, 0.0, -1e30)[None, None].astype(jnp.float32)
     elif kv_cache is not None:
         idx = 0 if cache_index is None else cache_index
         ckv_c = jax.lax.dynamic_update_slice(
@@ -144,10 +176,8 @@ def mla_attention(
                            preferred_element_type=accum_dtype()).astype(jnp.float32)
         s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
                             preferred_element_type=accum_dtype()).astype(jnp.float32)
-        if paged:  # per-row true lengths (the appended token is position len)
-            kv_len = cache_index.lengths + 1
-            msk4 = jnp.where(jnp.arange(t)[None] < kv_len[:, None], 0.0,
-                             -1e30)[:, None, None, :].astype(jnp.float32)
+        if paged:  # per-row masks built alongside the page gather above
+            msk4 = pmsk4
         else:
             msk4 = block_mask(s, t, cache_index, 0, False, 0,
                               kv_len=cache_index + s)[None, None]

@@ -27,6 +27,13 @@ inactive batch rows are redirected there instead of corrupting a live page.
 Write paths:
   * prefill splice (host-side, ``splice_prefill``): quantize the prompt's
     contiguous K/V page by page and scatter into the slot's allocated pages.
+    The splice walks the prompt in ``chunk_pages`` groups so the f32
+    staging transient is bounded by the chunk, not the prompt.
+  * streaming prefill (in-graph, ``append_prefill_chunk``): the serving
+    engine's chunked prefill writes each page-aligned chunk of prompt K/V
+    straight into the pool from inside the forward — no contiguous
+    max_seq scratch cache ever exists, so transient HBM tracks the chunk
+    size and admission cost tracks the true prompt length.
   * decode append (in-graph, ``append_paged``): the touched page is
     gathered, dequantized, the new token written at its row's true offset,
     the page's per-head scales recomputed (amax -> M2), and the page
@@ -43,6 +50,7 @@ from __future__ import annotations
 import math
 from typing import Dict, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -58,8 +66,10 @@ __all__ = [
     "quantize_pages",
     "dequantize_pages",
     "splice_prefill",
+    "append_prefill_chunk",
     "append_paged",
     "gather_pages",
+    "gather_history",
     "pool_bytes_per_token",
     "bf16_bytes_per_token",
 ]
@@ -158,43 +168,50 @@ def _with_head_axis(arr, has_heads: bool):
 
 
 def splice_prefill(pool: Dict, prefill_cache: Dict, page_ids: np.ndarray,
-                   n_tokens: int) -> Dict:
+                   n_tokens: int, chunk_pages: int = 8) -> Dict:
     """Quantize a batch-1 prefill's contiguous K/V into this slot's pages.
 
     prefill_cache: the segment cache from ``models.prefill`` — leaves
     (L, 1, max_seq, KV, hd) (GQA) or (L, 1, max_seq, dim) (MLA).
     page_ids: (n_pages_used,) page ids covering ``n_tokens`` (tail zero-pad).
+    chunk_pages: staging granularity — pages are quantized ``chunk_pages``
+    at a time, so the f32 staging copy never exceeds one chunk (a long
+    prompt no longer spikes a prompt-sized transient).
     """
     fp8 = _is_fp8(pool)
     out = dict(pool)
-    for name in pool_keys(pool):
-        has_heads = pool[name].ndim == 5
-        page = pool[name].shape[2]
-        npg = len(page_ids)
-        # the reserved pages may overhang the prefill cache's max_seq (when
-        # max_seq is not a page multiple): take what exists, pad the rest
-        src = prefill_cache[name][:, 0, : npg * page].astype(jnp.float32)
-        short = npg * page - src.shape[1]
-        if short > 0:
-            src = jnp.pad(src, ((0, 0), (0, short)) + ((0, 0),) * (src.ndim - 2))
-        if npg * page > n_tokens:  # zero the tail beyond the prompt so page
-            # amax stays clean
-            mask = (jnp.arange(npg * page) < n_tokens).astype(jnp.float32)
-            src = src * mask.reshape((1, npg * page) + (1,) * (src.ndim - 2))
-        src = _with_head_axis(src, has_heads)
-        nl, kv, hd = src.shape[0], src.shape[-2], src.shape[-1]
-        vals = src.reshape(nl, npg, page, kv, hd)
-        ids = jnp.asarray(page_ids, jnp.int32)
-        if fp8:
-            codes, smax, shifts = quantize_pages(vals)
-            if not has_heads:
-                codes = codes[..., 0, :]
-            out[name] = out[name].at[:, ids].set(codes)
-            out[name + "_smax"] = out[name + "_smax"].at[:, ids].set(smax)
-            out[name + "_shift"] = out[name + "_shift"].at[:, ids].set(shifts)
-        else:
-            store = vals if has_heads else vals[..., 0, :]
-            out[name] = out[name].at[:, ids].set(store.astype(pool[name].dtype))
+    n_total = len(page_ids)
+    for c0 in range(0, n_total, chunk_pages):
+        ids_np = np.asarray(page_ids[c0: c0 + chunk_pages], np.int32)
+        npg = len(ids_np)
+        for name in pool_keys(pool):
+            has_heads = pool[name].ndim == 5
+            page = pool[name].shape[2]
+            t0 = c0 * page
+            # the reserved pages may overhang the prefill cache's max_seq
+            # (when max_seq is not a page multiple): take what exists, pad
+            src = prefill_cache[name][:, 0, t0: t0 + npg * page].astype(jnp.float32)
+            short = npg * page - src.shape[1]
+            if short > 0:
+                src = jnp.pad(src, ((0, 0), (0, short)) + ((0, 0),) * (src.ndim - 2))
+            if t0 + npg * page > n_tokens:  # zero the tail beyond the prompt
+                # so page amax stays clean
+                mask = (t0 + jnp.arange(npg * page) < n_tokens).astype(jnp.float32)
+                src = src * mask.reshape((1, npg * page) + (1,) * (src.ndim - 2))
+            src = _with_head_axis(src, has_heads)
+            nl, kv, hd = src.shape[0], src.shape[-2], src.shape[-1]
+            vals = src.reshape(nl, npg, page, kv, hd)
+            ids = jnp.asarray(ids_np)
+            if fp8:
+                codes, smax, shifts = quantize_pages(vals)
+                if not has_heads:
+                    codes = codes[..., 0, :]
+                out[name] = out[name].at[:, ids].set(codes)
+                out[name + "_smax"] = out[name + "_smax"].at[:, ids].set(smax)
+                out[name + "_shift"] = out[name + "_shift"].at[:, ids].set(shifts)
+            else:
+                store = vals if has_heads else vals[..., 0, :]
+                out[name] = out[name].at[:, ids].set(store.astype(pool[name].dtype))
     return out
 
 
@@ -247,6 +264,53 @@ def append_paged(pool_layer: Dict, new_vals: Dict, state: PagedState) -> Dict:
     return out
 
 
+def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
+                         state: PagedState) -> Dict:
+    """Write one page-aligned chunk of a (batch-1) streaming prefill.
+
+    pool_layer: one layer's slice of a pool (no leading L dim).
+    new_vals: {"k": (1, S, KV, hd), ...} or {"ckv": (1, S, r), ...} — S
+    prompt tokens starting at position ``state.lengths[0]``, which must be
+    a page-size multiple (the engine feeds page-aligned chunks; only the
+    final chunk of a prompt may be partial). The tail of a partial last
+    page is zero-padded so the page amax stays clean; a later decode
+    append at that offset requantizes the page exactly as usual.
+
+    Unlike ``splice_prefill`` this runs *inside* the jitted chunk forward:
+    the prompt's K/V never exists as a contiguous max_seq scratch cache —
+    transient memory is bounded by the chunk, and the pages written here
+    are immediately the attention source for the next chunk.
+    """
+    fp8 = _is_fp8(pool_layer)
+    out = dict(pool_layer)
+    start = state.lengths[0]
+    for name in pool_keys(pool_layer):
+        store = pool_layer[name]
+        has_heads = store.ndim == 4  # (P+1, page, KV, hd) vs (P+1, page, dim)
+        page = store.shape[1]
+        new = new_vals[name].astype(jnp.float32)[0]  # (S, KV, hd) | (S, dim)
+        s = new.shape[0]
+        npg = -(-s // page)
+        pad = npg * page - s
+        if pad:
+            new = jnp.pad(new, ((0, pad),) + ((0, 0),) * (new.ndim - 1))
+        new = _with_head_axis(new, has_heads)  # (npg * page, KV|1, hd)
+        vals = new.reshape(npg, page, new.shape[-2], new.shape[-1])
+        pid = jax.lax.dynamic_slice_in_dim(
+            state.page_table[0], start // page, npg)
+        if fp8:
+            codes, smax, shifts = quantize_pages(vals)
+            if not has_heads:
+                codes = codes[..., 0, :]
+            out[name] = store.at[pid].set(codes)
+            out[name + "_smax"] = pool_layer[name + "_smax"].at[pid].set(smax)
+            out[name + "_shift"] = pool_layer[name + "_shift"].at[pid].set(shifts)
+        else:
+            stv = vals if has_heads else vals[..., 0, :]
+            out[name] = store.at[pid].set(stv.astype(store.dtype))
+    return out
+
+
 def gather_pages(pool_layer: Dict, name: str, state: PagedState):
     """Dequantized gather for the jnp paths: (B, PP * page, KV, hd) f32 for
     GQA leaves, (B, PP * page, dim) for MLA leaves."""
@@ -264,6 +328,27 @@ def gather_pages(pool_layer: Dict, name: str, state: PagedState):
     else:
         vals = pages.astype(jnp.float32)
     return vals.reshape(b, pp * page, *vals.shape[3:])
+
+
+def gather_history(pool_layer: Dict, state: PagedState, chunk_len: int):
+    """History prefix for a streaming-prefill chunk (the shared page math
+    for the GQA and MLA model glue — keep it in one place).
+
+    A chunk starts page-aligned and occupies the *last*
+    ``ceil(chunk_len / page)`` entries of the (engine-trimmed) page table,
+    so everything before them is fully-packed history: token i of the
+    gather sits at absolute position i. Returns
+    ``({name: (B, hist_len, ...)}, hist_len)`` of dequantized history
+    leaves — ``({}, 0)`` when the chunk is the start of the prompt.
+    """
+    first = pool_layer[pool_keys(pool_layer)[0]]
+    page = first.shape[1]
+    hist_w = state.page_table.shape[1] - (-(-chunk_len // page))
+    if hist_w <= 0:
+        return {}, 0
+    hstate = PagedState(state.page_table[:, :hist_w], state.lengths)
+    return ({name: gather_pages(pool_layer, name, hstate)
+             for name in pool_keys(pool_layer)}, hist_w * page)
 
 
 # ---------------------------------------------------------------------------

@@ -3,19 +3,35 @@
 Serving model: ``Server`` owns `slots` concurrent sequences (slot = batch
 row). Requests join free slots; each engine step decodes one token for every
 active slot. Prefill for a new request runs row-wise (batch-1) and is
-*spliced into pages*: the prompt's K/V is quantized page by page into the
-pool (runtime.kv_cache), so the engine never holds a monolithic
-(slots, max_seq, ...) cache. This is the scheduling skeleton of a
-vLLM-style paged engine adapted to fixed-shape jit programs (page table and
-per-slot lengths are jit *inputs*; shapes never change -> one compiled
-decode step).
+*streamed into pages*: the prompt is fed through the model in page-aligned
+chunks and each chunk's K/V is quantized straight into the pool
+(runtime.kv_cache.append_prefill_chunk), so the engine never holds a
+monolithic (slots, max_seq, ...) cache — nor even a transient per-request
+max_seq scratch. This is the scheduling skeleton of a vLLM-style paged
+engine adapted to fixed-shape jit programs (page table and per-slot lengths
+are jit *inputs*; shapes never change -> one compiled decode step).
+
+Scheduling (``scheduler`` knob):
+  * ``"token_budget"`` (default): admission charges only the prompt's pages
+    plus ``headroom_pages`` of decode headroom; every step allocates pages
+    on demand as rows cross page boundaries. On pool exhaustion the
+    scheduler preempts the lowest-priority running request by *stealing its
+    pages*: the victim's page payload (codes + scales) is spilled to host
+    memory and its pages returned to the pool, so it resumes
+    token-identically — bit-identical page contents are restored into
+    whatever pages are free — once capacity returns. Watermarks and a
+    steal cooldown give anti-thrash hysteresis; readmission is
+    longest-waiting-first, with preempted requests strictly ahead of fresh
+    ones (no overtaking — fresh work cannot starve a spilled request).
+  * ``"reserve"``: the legacy reserve-on-admit policy — worst-case pages
+    (prompt + max_new) are reserved up front, so admitted requests never
+    stall but slot utilization collapses under long-tail ``max_new``.
 
 ``kv_fmt`` selects the page payload: ``"fp8_e4m3"`` stores packed FP8 codes
 with per-(page, head) M2 scales (~0.52x the bytes of bf16 -> ~2x the slot
 pool per HBM byte), ``None`` keeps bf16 pages as the fallback path. Both
-run the same paged decode attention with per-slot *true* lengths — the old
-``idx = max(lengths)`` synchronized-index masking hack is gone; rows carry
-their own positions and length masks end to end.
+run the same paged decode attention with per-slot *true* lengths — rows
+carry their own positions and length masks end to end.
 
 Families whose decode state cannot be paged (enc-dec cross-attention
 caches, SSM/xLSTM recurrent states) keep the legacy monolithic engine.
@@ -24,6 +40,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional
 
@@ -36,6 +53,16 @@ from repro.models.transformer import segments_for
 from repro.runtime import kv_cache as kvc
 
 __all__ = ["Request", "Server"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
+def _decode_step_jit(params, caches, tokens, cache_index, cfg, a_fmt):
+    """Module-level jitted engine step: ``cfg`` is a frozen (hashable)
+    ArchConfig, so the compiled program cache is shared across Server
+    instances — a restarted or side-by-side server reuses every
+    prefill-chunk and decode executable instead of recompiling."""
+    return models.decode_step(params, cfg, tokens, caches, cache_index,
+                              a_fmt=a_fmt)
 
 
 @contextlib.contextmanager
@@ -61,8 +88,24 @@ class Request:
     rid: int
     prompt: list
     max_new: int = 16
+    priority: int = 0  # higher = steal from it last; ties -> newest admitted
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    preemptions: int = 0  # times this request's pages were stolen
+
+
+@dataclasses.dataclass
+class _Spill:
+    """A preempted request's resumable state: the exact page payload
+    (codes + scales per pool leaf, all layers) at preemption time. Restoring
+    these bytes into any free pages reproduces the pool state bit-exactly,
+    so the resumed request generates token-identical output."""
+
+    req: Request
+    ctx_len: int  # tokens of KV spilled (prompt + generated-so-far)
+    pages: List[Dict[str, np.ndarray]]  # per segment: leaf -> (L, npg, ...)
+    since: int  # engine step when preempted (longest-waiting-first key)
+    seq: int  # original admission sequence — age/priority is kept on resume
 
 
 class Server:
@@ -71,7 +114,13 @@ class Server:
                  kernel_backend: Optional[str] = None,
                  kv_fmt: Optional[str] = None,
                  page_size: int = 64,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 scheduler: str = "token_budget",
+                 headroom_pages: int = 1,
+                 low_watermark: int = 0,
+                 resume_watermark: int = 1,
+                 steal_cooldown: int = 2,
+                 prefill_chunk_pages: int = 4):
         """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
         prefill/decode through the fused single-pass W4A8 kernel, and paged
         decode attention through the flash-decoding page-gather kernel;
@@ -80,7 +129,25 @@ class Server:
         ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
         per-(page, head) M2 scales) or None (bf16 pages, fallback path).
         ``page_size``: tokens per page. ``pool_pages``: pool capacity in
-        pages (default: slots * pages_per_slot — full backing)."""
+        pages (default: slots * pages_per_slot — full backing).
+
+        Scheduler knobs (paged engine, ``scheduler='token_budget'``):
+          * ``headroom_pages``: decode headroom charged at admission on top
+            of the prompt's pages — the first page boundary never stalls.
+          * ``low_watermark``: pages that must stay free *after* admitting
+            fresh work while other requests run (growth slack; hysteresis
+            against admit-then-steal thrash).
+          * ``resume_watermark``: extra free pages, beyond the spilled
+            context, required to resume a preempted request while other
+            requests run (hysteresis against steal/resume ping-pong).
+          * ``steal_cooldown``: steps a freshly admitted/resumed request is
+            protected from preemption (unless no other victim exists).
+          * ``prefill_chunk_pages``: streaming-prefill chunk, in pages.
+        Both watermarks are bypassed when nothing is running — the pool is
+        then fully available, so progress is always made when physically
+        possible."""
+        if scheduler not in ("token_budget", "reserve"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.kernel_backend = kernel_backend
         self.params = params
         self.cfg = cfg
@@ -88,9 +155,23 @@ class Server:
         self.max_seq = max_seq
         self.a_fmt = a_fmt
         self.kv_fmt = kv_fmt
+        self.scheduler = scheduler
+        self.headroom_pages = headroom_pages
+        self.low_watermark = low_watermark
+        self.resume_watermark = resume_watermark
+        self.steal_cooldown = steal_cooldown
+        self.prefill_chunk_pages = prefill_chunk_pages
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
+        self.preempted: List[_Spill] = []
         self.finished: List[Request] = []
+        self.stats = {
+            "steps": 0, "slot_steps": 0, "decoded_tokens": 0,
+            "prefill_tokens": 0, "preemptions": 0, "resumes": 0,
+            "pages_stolen": 0,
+        }
+        self._step_no = 0
+        self._admit_seq = 0
 
         self.paged = cfg.encoder_layers == 0 and cfg.ssm is None
         if not self.paged:
@@ -100,9 +181,8 @@ class Server:
                     "decode state (enc-dec / SSM families keep bf16 caches)")
             self.caches = models.init_cache(cfg, slots, max_seq)
             self.lengths = np.zeros(slots, dtype=np.int64)
-            self._decode = jax.jit(
-                lambda p, c, t, i: models.decode_step(p, cfg, t, c, i, a_fmt=a_fmt)
-            )
+            self._decode = functools.partial(_decode_step_jit, cfg=cfg,
+                                             a_fmt=a_fmt)
             return
 
         # ---- paged pool + host-side allocator ----------------------------
@@ -127,68 +207,219 @@ class Server:
         self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
         self.page_table = np.zeros((slots, self.pages_per_slot), np.int32)
         self.lengths = np.zeros(slots, dtype=np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, st: models.decode_step(p, cfg, t, c, st, a_fmt=a_fmt)
-        )
+        self._slot_seq = [0] * slots  # admission sequence of the occupant
+        self._slot_since = [0] * slots  # step admitted/resumed (cooldown)
+        self._decode = functools.partial(_decode_step_jit, cfg=cfg,
+                                         a_fmt=a_fmt)
+
+    # -- page accounting -------------------------------------------------------
+    def _worst_case_pages(self, req: Request) -> int:
+        """Pages this request can ever hold (prompt + max_new, max_seq cap)."""
+        return kvc.pages_needed(
+            min(len(req.prompt) + req.max_new, self.max_seq), self.page_size)
+
+    def _alloc(self, slot: int, npg: int) -> List[int]:
+        ids = [self.free_pages.pop(0) for _ in range(npg)]
+        self.slot_pages[slot].extend(ids)
+        owned = self.slot_pages[slot]
+        self.page_table[slot, :len(owned)] = owned
+        return ids
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
-        if self.paged:  # fail fast on requests no retirement can ever fit
-            need = kvc.pages_needed(
-                min(len(req.prompt) + req.max_new, self.max_seq), self.page_size)
-            if need > self._n_pages:
-                raise ValueError(
-                    f"request {req.rid}: needs {need} pages but the pool has "
-                    f"{self._n_pages}; raise pool_pages or shrink prompt/max_new")
+        if len(req.prompt) >= self.max_seq:
+            # fail fast here: the streaming prefill would otherwise run out
+            # of reserved pages mid-chunk with an opaque shape error
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} must be "
+                f"< max_seq={self.max_seq} (no room left to decode)")
+        if self.paged and self._worst_case_pages(req) > self._n_pages:
+            # fail fast on requests no retirement can ever fit
+            raise ValueError(
+                f"request {req.rid}: needs {self._worst_case_pages(req)} pages "
+                f"but the pool has {self._n_pages}; raise pool_pages or "
+                "shrink prompt/max_new")
         self.queue.append(req)
 
     def _admit(self):
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                if self.paged and not self._reserve(slot, self.queue[0]):
-                    break  # pool exhausted: wait for retirements
-                req = self.queue.pop(0)
-                self.active[slot] = req
-                self._prefill_slot(slot, req)
+            if self.active[slot] is not None:
+                continue
+            if not (self.preempted or self.queue):
+                break
+            if not self._admit_one(slot):
+                break  # head of line does not fit: wait (no overtaking)
 
-    def _reserve(self, slot: int, req: Request) -> bool:
-        """Reserve this request's worst-case pages up front (prompt +
-        generated tokens): no mid-flight stalls once admitted."""
-        need_tokens = min(len(req.prompt) + req.max_new, self.max_seq)
-        npg = kvc.pages_needed(need_tokens, self.page_size)
-        if len(self.free_pages) < npg:
+    def _admit_one(self, slot: int) -> bool:
+        """Admit the next candidate into ``slot``. Preempted requests come
+        strictly first (longest-waiting-first) so fresh arrivals can never
+        starve a spilled request whose readmission they would outbid."""
+        any_active = any(r is not None for r in self.active)
+        free = len(self.free_pages)
+        if not self.paged:
+            req = self.queue.pop(0)
+            self.active[slot] = req
+            self._prefill_slot(slot, req)
+            return True
+        if self.scheduler == "token_budget" and self.preempted:
+            spill = min(self.preempted, key=lambda sp: sp.since)
+            need = min(kvc.pages_needed(spill.ctx_len, self.page_size)
+                       + self.headroom_pages,
+                       self._worst_case_pages(spill.req))
+            margin = self.resume_watermark if any_active else 0
+            if free - need < margin:
+                return False
+            self.preempted.remove(spill)
+            self._resume(slot, spill, need)
+            return True
+        if not self.queue:
             return False
-        ids = [self.free_pages.pop(0) for _ in range(npg)]
-        self.slot_pages[slot] = ids
-        row = np.zeros(self.pages_per_slot, np.int32)
-        row[: len(ids)] = ids
-        self.page_table[slot] = row
+        req = self.queue[0]
+        if self.scheduler == "reserve":
+            need = self._worst_case_pages(req)
+            if free < need:
+                return False
+        else:
+            need = min(kvc.pages_needed(len(req.prompt), self.page_size)
+                       + self.headroom_pages, self._worst_case_pages(req))
+            margin = self.low_watermark if any_active else 0
+            if free - need < margin:
+                return False
+        self.queue.pop(0)
+        self.active[slot] = req
+        self._slot_seq[slot] = self._admit_seq
+        self._slot_since[slot] = self._step_no
+        self._admit_seq += 1
+        self._alloc(slot, need)
+        self._prefill_slot(slot, req)
         return True
 
+    # -- streaming paged prefill ----------------------------------------------
     def _prefill_slot(self, slot: int, req: Request):
-        """Row-wise prefill, then splice the prompt's caches into this
-        slot's row (legacy) or quantize them into the slot's pages."""
-        toks = jnp.asarray([req.prompt], jnp.int32)
-        with _backend_scope(self.kernel_backend):
-            logits, c1 = models.prefill(self.params, self.cfg,
-                                        {"tokens": toks}, self.max_seq,
-                                        a_fmt=self.a_fmt)
+        """Prefill a new request. Paged engine: stream the prompt through
+        the model in page-aligned chunks, each chunk's K/V written straight
+        into this slot's pages inside the jitted forward (no contiguous
+        max_seq scratch cache; the page table passed per chunk is trimmed
+        to the pages covering the prompt so far). Legacy engine: row-wise
+        monolithic prefill spliced into the batch cache."""
         n = len(req.prompt)
-        if self.paged:
-            used = kvc.pages_needed(n, self.page_size)
-            ids = np.asarray(self.slot_pages[slot][:used], np.int32)
-            for i, pool in enumerate(self.pools):
-                self.pools[i] = {"kv": kvc.splice_prefill(pool["kv"],
-                                                          c1[i]["kv"], ids, n)}
-        else:
+        if not self.paged:
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            with _backend_scope(self.kernel_backend):
+                logits, c1 = models.prefill(self.params, self.cfg,
+                                            {"tokens": toks}, self.max_seq,
+                                            a_fmt=self.a_fmt)
+
             def splice(full, one):
                 return jax.lax.dynamic_update_slice_in_dim(
                     full, one.astype(full.dtype), slot, axis=1
                 )
 
             self.caches = jax.tree.map(splice, self.caches, c1)
+            self.lengths[slot] = n
+            req.out.append(int(jnp.argmax(logits[0])))
+            return
+
+        chunk = self.prefill_chunk_pages * self.page_size
+        ids = self.slot_pages[slot]
+        logits = None
+        pos = 0
+        while pos < n:
+            take = min(chunk, n - pos)
+            toks = jnp.asarray([req.prompt[pos: pos + take]], jnp.int32)
+            w = kvc.pages_needed(pos + take, self.page_size)
+            table = np.zeros((1, w), np.int32)
+            table[0] = ids[:w]
+            state = kvc.PagedState(jnp.asarray(table),
+                                   jnp.asarray([pos], jnp.int32))
+            with _backend_scope(self.kernel_backend):
+                logits, pools = self._decode(self.params, self.pools,
+                                             toks, state)
+            self.pools = pools
+            pos += take
         self.lengths[slot] = n
+        self.stats["prefill_tokens"] += n
         req.out.append(int(jnp.argmax(logits[0])))
+
+    # -- preemption by page steal ----------------------------------------------
+    def _preempt(self, slot: int):
+        """Steal this slot's pages: spill its page payload (codes + scales,
+        bit-exact) to host memory, return the pages to the pool, and park
+        the request for longest-waiting-first readmission."""
+        req = self.active[slot]
+        ctx_len = int(self.lengths[slot])
+        npg = kvc.pages_needed(ctx_len, self.page_size)
+        ids = jnp.asarray(self.slot_pages[slot][:npg], jnp.int32)
+        pages = []
+        for seg in self.pools:
+            pool = seg["kv"]
+            pages.append({name: np.asarray(leaf[:, ids])
+                          for name, leaf in pool.items()})
+        self.preempted.append(_Spill(req=req, ctx_len=ctx_len, pages=pages,
+                                     since=self._step_no,
+                                     seq=self._slot_seq[slot]))
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.stats["pages_stolen"] += len(self.slot_pages[slot])
+        self.free_pages.extend(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot] = 0
+        self.lengths[slot] = 0
+        self.active[slot] = None
+
+    def _resume(self, slot: int, spill: _Spill, need: int):
+        """Restore a spilled request into fresh pages (token-identical: the
+        page payload is bit-exact, and page ids are logical — attention
+        only sees the page table)."""
+        self.active[slot] = spill.req
+        self._slot_seq[slot] = spill.seq  # keeps its original age/priority
+        self._slot_since[slot] = self._step_no
+        new_ids = self._alloc(slot, need)
+        npg = kvc.pages_needed(spill.ctx_len, self.page_size)
+        ids = jnp.asarray(new_ids[:npg], jnp.int32)
+        for i, seg_pages in enumerate(spill.pages):
+            pool = dict(self.pools[i]["kv"])
+            for name, arr in seg_pages.items():
+                pool[name] = pool[name].at[:, ids].set(jnp.asarray(arr))
+            self.pools[i] = {"kv": pool}
+        self.lengths[slot] = spill.ctx_len
+        self.stats["resumes"] += 1
+
+    def _steal_for(self, needer: int) -> bool:
+        """Free pages by preempting the lowest-priority active request
+        (ties: most recently admitted). Requests inside the steal cooldown
+        are protected unless no other victim exists. The needer itself is a
+        valid victim — if it is the lowest-priority request running, it is
+        the one that yields."""
+        cands = [s for s, r in enumerate(self.active) if r is not None]
+        if not cands:
+            return False
+        warm = [s for s in cands
+                if self._step_no - self._slot_since[s] >= self.steal_cooldown]
+        pick_from = warm or cands
+        victim = min(pick_from,
+                     key=lambda s: (self.active[s].priority, -self._slot_seq[s]))
+        self._preempt(victim)
+        return True
+
+    def _grow(self):
+        """On-demand page allocation: before the decode step, every active
+        row whose next token crosses into an unallocated page gets one from
+        the pool — stealing from the lowest-priority request on exhaustion.
+        Rows are served in priority order (then admission order), so a
+        steal always benefits the higher-priority work."""
+        order = sorted(
+            (s for s, r in enumerate(self.active) if r is not None),
+            key=lambda s: (-self.active[s].priority, self._slot_seq[s]))
+        for slot in order:
+            while self.active[slot] is not None:
+                need_idx = int(self.lengths[slot]) // self.page_size
+                if need_idx < len(self.slot_pages[slot]):
+                    break
+                if self.free_pages:
+                    self._alloc(slot, 1)
+                elif not self._steal_for(slot):
+                    break  # pragma: no cover — needer itself is a candidate
 
     # -- retirement ----------------------------------------------------------
     def _retire(self, slot: int, req: Request):
@@ -198,9 +429,9 @@ class Server:
         if not self.paged:
             return
         # freed pages are NOT zeroed (that would rewrite the whole pool per
-        # retirement): recycled pages are overwritten by splice_prefill, and
-        # decode appends mask positions past the new owner's length before
-        # recomputing page scales, so stale codes can never leak
+        # retirement): recycled pages are overwritten by the prefill stream,
+        # and decode appends mask positions past the new owner's length
+        # before recomputing page scales, so stale codes can never leak
         self.free_pages.extend(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.page_table[slot] = 0
@@ -211,10 +442,15 @@ class Server:
         """One decode step for all active slots. The paged engine passes
         per-slot true lengths + the page table into the jitted step (per-row
         positions and length masks); the legacy engine keeps the documented
-        common-index simplification."""
+        common-index simplification. Returns True if any slot decoded."""
         self._admit()
+        if self.paged and self.scheduler == "token_budget":
+            self._grow()
         if not any(self.active):
             return False
+        self._step_no += 1
+        self.stats["steps"] += 1
+        self.stats["slot_steps"] += sum(r is not None for r in self.active)
         tok = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:
@@ -235,20 +471,48 @@ class Server:
                 continue
             req.out.append(int(nxt[s]))
             self.lengths[s] += 1
+            self.stats["decoded_tokens"] += 1
             if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
                 self._retire(s, req)
         return True
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        """Step until queue + slots are empty; returns the requests finished
-        during this call (in retirement order)."""
+        """Step until queue, preempted set and slots are all empty; returns
+        the requests finished during this call (in retirement order).
+
+        Starvation guard: if an engine step makes no progress while work is
+        still waiting (queued or preempted-but-never-resumed — e.g. the pool
+        was fully stolen and nothing can be readmitted), this raises instead
+        of spinning to ``max_steps`` and silently dropping the stragglers."""
         start = len(self.finished)
         for _ in range(max_steps):
-            if not self.step() and not self.queue:
+            if self.step():
+                continue
+            if not self.queue and not self.preempted:
                 break
+            raise RuntimeError(
+                f"serving starved: {len(self.queue)} queued + "
+                f"{len(self.preempted)} preempted request(s) cannot be "
+                f"(re)admitted with {len(self.free_pages)}/{self._n_pages} "
+                "pool pages free and no active work to retire — the pool is "
+                "too small for the waiting context (or pages leaked)")
+        else:
+            pending = (len(self.queue) + len(self.preempted)
+                       + sum(r is not None for r in self.active))
+            if pending:
+                raise RuntimeError(
+                    f"run_until_drained: max_steps={max_steps} exhausted "
+                    f"with {pending} request(s) still pending")
         return self.finished[start:]
 
     # -- accounting ------------------------------------------------------------
+    def utilization(self) -> float:
+        """Mean fraction of slots that decoded per engine step — the number
+        the token-budget scheduler raises under long-tail max_new."""
+        if not self.stats["steps"]:
+            return 0.0
+        return self.stats["slot_steps"] / (self.stats["steps"] * self.slots)
+
     def kv_bytes_per_token(self) -> float:
         """Pool bytes per token slot across the whole layer stack (paged
         engine only) — the number the FP8 pool halves vs bf16."""

@@ -1,0 +1,34 @@
+"""Shared fixtures: the trained tiny LM used by every serving-path suite.
+
+Training once per session keeps the paged-KV and scheduler suites cheap;
+the brief training makes greedy logit gaps decisive, so token-identity
+assertions are robust to FP8 KV noise.
+"""
+import pytest
+
+from repro.models.config import ArchConfig
+
+
+def tiny_lm_cfg():
+    return ArchConfig(
+        name="kvtest", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=64, attn_kind="gqa",
+        norm_kind="layernorm", act_kind="relu", mlp_gated=False,
+        use_bias=True, pos_embedding="learned", tie_embeddings=True,
+        max_position=128, attn_chunk=128,
+    )
+
+
+@pytest.fixture(scope="session")
+def trained_tiny():
+    """A briefly-trained tiny LM: greedy logit gaps are decisive, so
+    token-identity assertions are robust to FP8 KV noise."""
+    from repro.data.pipeline import DataConfig
+    from repro.optimizer import AdamWConfig
+    from repro.runtime.train import TrainLoopConfig, train_loop
+
+    cfg = tiny_lm_cfg()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=3)
+    oc = AdamWConfig(lr=8e-3, warmup=20, total_steps=150)
+    state, _ = train_loop(cfg, dc, oc, TrainLoopConfig(steps=150, log_every=150))
+    return cfg, state.params

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro import models
 from repro.kernels import ops
-from repro.models.config import ArchConfig
 from repro.runtime import kv_cache as kvc
 from repro.runtime.serve import Request, Server
 
@@ -240,31 +239,6 @@ class TestPagedMLA:
         scale = np.abs(a).max() + 1e-9
         tol = 0.1 if kv_fmt else 2e-2
         assert np.abs(a - b).max() / scale < tol
-
-
-def _tiny_cfg():
-    return ArchConfig(
-        name="kvtest", family="dense", n_layers=2, d_model=64, n_heads=4,
-        n_kv_heads=2, d_ff=128, vocab_size=64, attn_kind="gqa",
-        norm_kind="layernorm", act_kind="relu", mlp_gated=False,
-        use_bias=True, pos_embedding="learned", tie_embeddings=True,
-        max_position=128, attn_chunk=128,
-    )
-
-
-@pytest.fixture(scope="module")
-def trained_tiny():
-    """A briefly-trained tiny LM: greedy logit gaps are decisive, so the
-    token-identity assertions below are robust to FP8 KV noise."""
-    from repro.data.pipeline import DataConfig
-    from repro.optimizer import AdamWConfig
-    from repro.runtime.train import TrainLoopConfig, train_loop
-
-    cfg = _tiny_cfg()
-    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=3)
-    oc = AdamWConfig(lr=8e-3, warmup=20, total_steps=150)
-    state, _ = train_loop(cfg, dc, oc, TrainLoopConfig(steps=150, log_every=150))
-    return cfg, state.params
 
 
 def _greedy_legacy(params, cfg, prompt, max_new, max_seq=64):

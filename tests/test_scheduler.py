@@ -1,0 +1,300 @@
+"""Token-budget continuous-batching scheduler: page-steal preemption,
+streaming paged prefill, pool-accounting invariants.
+
+Covers: preempted-then-resumed requests generate token-identical greedy
+output vs an uncontended solo run (bf16 + fp8 pages — spills restore page
+payloads bit-exactly); a seeded fuzz of admit/steal/resume sequences
+asserting the pool never leaks or double-owns a page; streaming chunked
+prefill parity against the monolithic-prefill + one-shot-splice path (GQA
+and MLA); watermark admission hysteresis; the run_until_drained starvation
+guard; and token-budget vs reserve-on-admit utilization under a long-tail
+max_new workload."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import tiny_lm_cfg
+
+from repro import models
+from repro.runtime import kv_cache as kvc
+from repro.runtime.serve import Request, Server
+
+
+def _assert_pool_invariants(srv):
+    """No leaked or double-owned pages: the slots' pages and the free list
+    partition the pool exactly, and the page table mirrors ownership."""
+    owned = [pid for ids in srv.slot_pages for pid in ids]
+    assert len(owned) == len(set(owned)), f"double-owned pages: {owned}"
+    assert not (set(owned) & set(srv.free_pages)), "page both owned and free"
+    assert sorted(owned + srv.free_pages) == list(range(srv._n_pages)), \
+        "pages leaked from the pool"
+    for slot, ids in enumerate(srv.slot_pages):
+        np.testing.assert_array_equal(srv.page_table[slot, :len(ids)], ids)
+
+
+def _drain_checked(srv, max_steps=500):
+    """Step to drain, asserting pool invariants after every engine step."""
+    done_before = len(srv.finished)
+    for _ in range(max_steps):
+        went = srv.step()
+        _assert_pool_invariants(srv)
+        if not went and not srv.queue and not srv.preempted:
+            break
+    else:
+        raise AssertionError("drain did not converge")
+    return srv.finished[done_before:]
+
+
+class TestPreemptResume:
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_resume_token_identical(self, trained_tiny, kv_fmt):
+        """A preempted-then-resumed request produces token-identical greedy
+        output vs an uncontended run: the steal spills the page payload
+        bit-exactly and the restored pages are logically identical."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(1, cfg.vocab_size, size=5).tolist()
+                   for _ in range(2)]
+        # pool of 6 x 4-token pages; both requests charge 2 prompt pages + 1
+        # headroom, then both grow past 12 tokens -> the later-admitted
+        # request (rid 1) is the steal victim and must resume afterwards
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt=kv_fmt,
+                     page_size=4, pool_pages=6, a_fmt=None)
+        reqs = [Request(rid=i, prompt=p, max_new=10)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        _drain_checked(srv)
+        assert reqs[1].preemptions >= 1, "scenario must actually preempt"
+        assert srv.stats["resumes"] >= 1
+        for r in reqs:
+            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
+                          page_size=4, a_fmt=None)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+    def test_priority_protects_high(self, trained_tiny):
+        """Steal victims are picked lowest-priority-first, not by slot
+        order: the high-priority request is never preempted."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(3)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=6, a_fmt=None)
+        lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=10, priority=0)
+        hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=10, priority=1)
+        srv.submit(lo)
+        srv.submit(hi)  # admitted later -> default tie-break victim, but
+        _drain_checked(srv)  # priority=1 shields it
+        assert srv.stats["preemptions"] >= 1
+        assert hi.preemptions == 0
+        assert lo.preemptions >= 1
+
+
+class TestFuzzAccounting:
+    def test_admit_steal_resume_fuzz(self):
+        """Seeded fuzz over staggered submissions on a tight pool: every
+        step preserves pool-accounting invariants, every request finishes
+        fully, and the drained pool is whole again."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(7)
+        srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=9, a_fmt=None,
+                     headroom_pages=1, steal_cooldown=1)
+        # prompt lengths restricted to a few values: each distinct length is
+        # a fresh prefill-chunk jit trace on CPU
+        reqs = [Request(rid=i, prompt=rng.integers(1, 64, rng.choice([3, 5, 9])).tolist(),
+                        max_new=int(rng.choice([2, 6, 14])),
+                        priority=int(rng.choice([0, 1])))
+                for i in range(12)]
+        pending = list(reqs)
+        for _ in range(4):  # staggered arrivals fuzz the admit sequence
+            srv.submit(pending.pop(0))
+        for step in range(600):
+            went = srv.step()
+            _assert_pool_invariants(srv)
+            if pending and step % 3 == 0:
+                srv.submit(pending.pop(0))
+            if not went and not pending and not srv.queue and not srv.preempted:
+                break
+        assert len(srv.finished) == len(reqs)
+        assert all(len(r.out) == r.max_new for r in reqs)
+        assert sorted(srv.free_pages) == list(range(srv._n_pages))
+        assert srv.stats["preemptions"] >= 1, "fuzz should exercise steals"
+        assert srv.stats["preemptions"] == srv.stats["resumes"]
+
+
+class TestStreamingPrefill:
+    def test_gqa_stream_matches_splice(self):
+        """Chunked in-graph prefill writes bit-identical pages to the
+        monolithic prefill + one-shot splice, and the final-chunk logits
+        match the full prefill's last-token logits."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(1, cfg.vocab_size, size=11).tolist()
+        page, n = 4, 11
+        for fmt in (None, "fp8_e4m3"):
+            logits_ref, caches = models.prefill(
+                params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)}, 12)
+            pool_ref = kvc.init_gqa_pool(cfg.n_layers, 6, page, cfg.n_kv_heads,
+                                         cfg.resolved_head_dim, fmt)
+            pool_ref = kvc.splice_prefill(pool_ref, caches[0]["kv"],
+                                          np.array([0, 1, 2]), n)
+            pools = [{"kv": kvc.init_gqa_pool(cfg.n_layers, 6, page,
+                                              cfg.n_kv_heads,
+                                              cfg.resolved_head_dim, fmt)}]
+            pos, ids = 0, [0, 1, 2]
+            while pos < n:
+                take = min(2 * page, n - pos)
+                w = kvc.pages_needed(pos + take, page)
+                table = np.zeros((1, w), np.int32)
+                table[0] = ids[:w]
+                st = kvc.PagedState(jnp.asarray(table),
+                                    jnp.asarray([pos], jnp.int32))
+                logits, pools = models.decode_step(
+                    params, cfg, jnp.asarray([prompt[pos: pos + take]], jnp.int32),
+                    pools, st)
+                pos += take
+            st = kvc.PagedState(jnp.asarray([[0, 1, 2]], jnp.int32),
+                                jnp.asarray([n], jnp.int32))
+            for name in ("k", "v"):
+                a = kvc.gather_pages({k: v[0] for k, v in pool_ref.items()},
+                                     name, st)
+                b = kvc.gather_pages(
+                    {k: v[0] for k, v in pools[0]["kv"].items()}, name, st)
+                np.testing.assert_allclose(np.asarray(b)[0, :n],
+                                           np.asarray(a)[0, :n],
+                                           rtol=5e-2, atol=5e-2)
+            lr, ls = np.asarray(logits_ref[0]), np.asarray(logits[0])
+            tol = 0.08 if fmt else 1e-3
+            assert np.abs(lr - ls).max() / (np.abs(lr).max() + 1e-9) < tol
+
+    def test_mla_stream_matches_splice(self):
+        """The MLA absorbed chunk path: streamed latent pages match the
+        materialized-prefill splice, and final-chunk logits agree."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("minicpm3-4b")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(1, cfg.vocab_size, size=13).tolist()
+        page, n = 8, 13
+        for fmt in (None, "fp8_e4m3"):
+            logits_ref, caches = models.prefill(
+                params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)}, 16)
+            pool_ref = kvc.init_mla_pool(cfg.n_layers, 4, page,
+                                         cfg.mla.kv_lora_rank,
+                                         cfg.mla.qk_rope_dim, fmt)
+            pool_ref = kvc.splice_prefill(pool_ref, caches[0]["kv"],
+                                          np.array([0, 1]), n)
+            pools = [{"kv": kvc.init_mla_pool(cfg.n_layers, 4, page,
+                                              cfg.mla.kv_lora_rank,
+                                              cfg.mla.qk_rope_dim, fmt)}]
+            pos, ids = 0, [0, 1]
+            while pos < n:
+                take = min(page, n - pos)
+                w = kvc.pages_needed(pos + take, page)
+                table = np.zeros((1, w), np.int32)
+                table[0] = ids[:w]
+                st = kvc.PagedState(jnp.asarray(table),
+                                    jnp.asarray([pos], jnp.int32))
+                logits, pools = models.decode_step(
+                    params, cfg, jnp.asarray([prompt[pos: pos + take]], jnp.int32),
+                    pools, st)
+                pos += take
+            st = kvc.PagedState(jnp.asarray([[0, 1]], jnp.int32),
+                                jnp.asarray([n], jnp.int32))
+            for name in ("ckv", "krope"):
+                a = kvc.gather_pages({k: v[0] for k, v in pool_ref.items()},
+                                     name, st)
+                b = kvc.gather_pages({k: v[0] for k, v in pools[0]["kv"].items()},
+                                     name, st)
+                np.testing.assert_allclose(np.asarray(b)[0, :n],
+                                           np.asarray(a)[0, :n],
+                                           rtol=8e-2, atol=8e-2)
+            lr, ls = np.asarray(logits_ref[0]), np.asarray(logits[0])
+            tol = 0.12 if fmt else 3e-2  # absorbed-vs-materialized reorder
+            assert np.abs(lr - ls).max() / (np.abs(lr).max() + 1e-9) < tol
+
+
+class TestSchedulerPolicy:
+    def test_low_watermark_defers_fresh_admission(self):
+        """With active work running, fresh admission must leave
+        ``low_watermark`` pages free (growth slack) — the second request
+        waits even though its charge would physically fit."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=4, a_fmt=None,
+                     headroom_pages=1, low_watermark=2)
+        a = Request(rid=0, prompt=rng.integers(1, 64, 3).tolist(), max_new=3)
+        b = Request(rid=1, prompt=rng.integers(1, 64, 3).tolist(), max_new=3)
+        srv.submit(a)
+        srv.submit(b)
+        srv.step()  # admits a (pool idle: watermark bypassed), defers b
+        assert srv.active.count(None) == 1 and b in srv.queue
+        _drain_checked(srv)
+        assert a.done and b.done
+
+    def test_overlong_prompt_fails_fast(self):
+        """A prompt with no decode room left must be rejected at submit,
+        not crash mid-prefill after pages were already allocated."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None)
+        with pytest.raises(ValueError, match="max_seq"):
+            srv.submit(Request(rid=0, prompt=list(range(1, 41)), max_new=4))
+
+    def test_starvation_guard_raises(self):
+        """If the pool is fully stolen and nothing can ever be readmitted,
+        run_until_drained raises a clear error instead of spinning (or
+        silently dropping preempted-but-never-resumed requests)."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=4, a_fmt=None)
+        r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=8)
+        srv.submit(r)
+        srv.step()
+        srv._preempt(0)  # steal the only runner's pages ...
+        srv.free_pages.clear()  # ... and simulate the pool never recovering
+        with pytest.raises(RuntimeError, match="starved"):
+            srv.run_until_drained()
+
+    def test_token_budget_beats_reserve_under_long_tail(self, trained_tiny):
+        """The acceptance claim at test scale: under a long-tail max_new
+        workload on a tight pool, token-budget admission achieves strictly
+        higher slot utilization (and fewer engine steps for the same
+        tokens) than reserve-on-admit, with identical greedy outputs."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(17)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(m)).tolist()
+                   for m in rng.integers(3, 8, size=8)]
+        outs, stats = {}, {}
+        for sched in ("reserve", "token_budget"):
+            srv = Server(params, cfg, slots=4, max_seq=48, kv_fmt="fp8_e4m3",
+                         page_size=4, pool_pages=12, a_fmt=None,
+                         scheduler=sched)
+            reqs = [Request(rid=i, prompt=list(p),
+                            max_new=24 if i % 4 == 0 else 4)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                srv.submit(r)
+            done = srv.run_until_drained()
+            assert len(done) == len(reqs)
+            outs[sched] = {r.rid: r.out for r in reqs}
+            stats[sched] = (srv.utilization(), srv.stats["steps"])
+        assert outs["reserve"] == outs["token_budget"]
+        (u_rv, steps_rv), (u_tb, steps_tb) = stats["reserve"], stats["token_budget"]
+        assert u_tb > u_rv, (u_tb, u_rv)
+        assert steps_tb <= steps_rv, (steps_tb, steps_rv)
