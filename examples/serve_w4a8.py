@@ -7,6 +7,11 @@ Loads (or trains) the benchmark model, packs it to the W4A8 deployment form
 batched requests through the continuous-batching engine. ``--backend
 pallas_interpret`` executes every quantized matmul through the Pallas TPU
 kernel in interpret mode (slow on CPU; bit-identical quantization).
+
+``--families`` additionally serves the whisper-tiny enc-dec config (write-
+once cross-attention pages) and the minicpm3 MLA config (latent decode
+kernel) through the same paged FP8 engine, asserting each request's greedy
+tokens are identical to the legacy contiguous-cache decode path.
 """
 import argparse
 import os
@@ -24,6 +29,92 @@ from repro.kernels import ops
 from repro.runtime.serve import Request, Server
 
 from benchmarks.common import BENCH_CFG, trained_params
+
+
+def _train_smoke(cfg, tag, steps=150, with_frames=False):
+    """Briefly train a smoke config (cached in .bench_cache) so greedy
+    logit gaps are decisive and fp8-vs-legacy token identity is meaningful."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import latest_step, restore, save
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.steps import TrainState, make_train_step
+    from repro.optimizer import AdamWConfig, adamw_init
+
+    from benchmarks.common import CACHE
+
+    ckpt = os.path.join(CACHE, f"{tag}_{steps}")
+    init = models.init_params(cfg, jax.random.PRNGKey(0))
+    if latest_step(ckpt) is not None:
+        return restore(ckpt, init)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=24, global_batch=8,
+                    seed=7)
+    oc = AdamWConfig(lr=6e-3, warmup=20, total_steps=steps)
+    state = TrainState(params=init, opt=adamw_init(init, oc))
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnums=(0,))
+    data = SyntheticLM(dc)
+    frng = np.random.default_rng(11)
+    for step in range(steps):
+        b = dict(data.batch(step))
+        if with_frames:
+            b["frames"] = jnp.asarray(frng.normal(
+                size=(dc.global_batch, cfg.encoder_seq, cfg.d_model)
+            ).astype(np.float32))
+        state, _ = step_fn(state, b)
+    save(ckpt, steps, state.params)
+    return state.params
+
+
+def _greedy_legacy(params, cfg, prompt, max_new, max_seq, frames=None):
+    import jax.numpy as jnp
+
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if frames is not None:
+        batch["frames"] = jnp.asarray(frames[None])
+    logits, caches = models.prefill(params, cfg, batch, max_seq)
+    out = [int(jnp.argmax(logits[0]))]
+    idx = len(prompt)
+    while len(out) < max_new:
+        logits, caches = models.decode_step(
+            params, cfg, jnp.asarray([[out[-1]]], jnp.int32), caches, idx)
+        out.append(int(jnp.argmax(logits[0])))
+        idx += 1
+    return out
+
+
+def serve_families(backend):
+    """Whisper-tiny (enc-dec cross pages) and minicpm3 (MLA latent decode)
+    through the paged FP8 engine, token-identical to the legacy decode."""
+    from repro.configs import get_smoke
+
+    rng = np.random.default_rng(0)
+    for arch, tag in (("whisper-tiny", "whisper_smoke"),
+                      ("minicpm3-4b", "mla_smoke")):
+        cfg = get_smoke(arch)
+        encdec = cfg.encoder_layers > 0
+        params = _train_smoke(cfg, tag, with_frames=encdec)
+        srv = Server(params, cfg, slots=3, max_seq=64, kv_fmt="fp8_e4m3",
+                     page_size=8, kernel_backend=backend, a_fmt=None)
+        reqs = []
+        for rid in range(3):
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  size=rng.integers(3, 10)).tolist()
+            frames = (rng.normal(size=(cfg.encoder_seq, cfg.d_model))
+                      .astype(np.float32) if encdec else None)
+            r = Request(rid=rid, prompt=prompt, max_new=6, frames=frames)
+            reqs.append(r)
+            srv.submit(r)
+        srv.run_until_drained()
+        for r in reqs:
+            ref = _greedy_legacy(params, cfg, r.prompt, 6, 64, r.frames)
+            assert r.out == ref, (arch, r.rid, r.out, ref)
+        extra = (f", cross pages for {cfg.encoder_seq} encoder frames"
+                 if encdec else ", latent decode kernel path")
+        print(f"{arch}: {len(reqs)} requests through the paged FP8 engine"
+              f"{extra}; greedy tokens identical to the legacy decode")
+        for r in reqs[:2]:
+            print(f"  req {r.rid}: {r.prompt} -> {r.out}")
 
 
 def main():
@@ -49,7 +140,15 @@ def main():
                     help="page-pool capacity (0 = fully backed slots); set "
                          "it tight to watch the token-budget scheduler "
                          "preempt by page steal")
+    ap.add_argument("--families", action="store_true",
+                    help="also serve the whisper-tiny enc-dec and minicpm3 "
+                         "MLA smoke configs through the paged FP8 engine "
+                         "(asserts token identity vs the legacy decode)")
     args = ap.parse_args()
+
+    if args.families:
+        serve_families(None if args.backend == "ref" else args.backend)
+        return
 
     params = trained_params()
     policy = QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3", scale_mode="m2",

@@ -35,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.formats import FORMATS
 from .common import decode_fp8
 
-__all__ = ["paged_decode_attn_pallas"]
+__all__ = ["paged_decode_attn_pallas", "paged_mla_decode_attn_pallas"]
 
 _NEG_INF = -1e30
 
@@ -140,3 +140,120 @@ def paged_decode_attn_pallas(q, k_pages, v_pages, k_smax, k_shift, v_smax,
     )(page_table, kv_lens, k_smax, k_shift, v_smax, v_shift, qg,
       k_pages, v_pages)
     return out[:, :, :g].reshape(b, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent decode: KV = 1 head, k = concat(ckv, krope), v = ckv view
+# ---------------------------------------------------------------------------
+def _mla_kernel(pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
+                ql_ref, qr_ref, ckv_ref, kr_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, page, pp, scale, kv_fmt):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0, 0].astype(jnp.float32)  # (bq, r)
+    qr = qr_ref[0, 0].astype(jnp.float32)  # (bq, dr)
+    if kv_fmt is not None:
+        fmt = FORMATS[kv_fmt]
+        pid = pt_ref[b, j]
+        # the latent has no head axis: one M2 shift per page (head index 0),
+        # applied as the same exponent add + one s_max multiply per page
+        ckv = decode_fp8(ckv_ref[0], fmt, csh_ref[pid, 0]) * csm_ref[pid]
+        kr = decode_fp8(kr_ref[0], fmt, rsh_ref[pid, 0]) * rsm_ref[pid]
+    else:
+        ckv = ckv_ref[0].astype(jnp.float32)  # (page, r)
+        kr = kr_ref[0].astype(jnp.float32)  # (page, dr)
+
+    # scores against k = concat(ckv, krope) without materializing the
+    # concat: contract the latent and rope halves separately and add
+    s = (jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)) * scale
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < len_ref[b]
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    # v is the ckv view: the attention-weighted latent IS the context
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == pp - 1)
+    def _done():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "kv_fmt", "bq",
+                                             "interpret"))
+def paged_mla_decode_attn_pallas(q_lat, q_rope, ckv_pages, krope_pages,
+                                 ckv_smax, ckv_shift, krope_smax, krope_shift,
+                                 page_table, kv_lens, scale,
+                                 kv_fmt=None, bq: int = 8,
+                                 interpret: bool = True):
+    """MLA absorbed decode over latent pages (flash-decoding dataflow).
+
+    q_lat: (B, H, r) queries absorbed into the latent space; q_rope:
+    (B, H, dr) rope-space queries; ckv_pages: (P+1, page, r) and
+    krope_pages: (P+1, page, dr) uint8 FP8 codes (``kv_fmt`` set) or bf16;
+    c/r smax: (P+1,) f32; c/r shift: (P+1, 1) int32 (single scale "head");
+    page_table: (B, PP) int32; kv_lens: (B,); ``scale``: softmax scale
+    (1/sqrt(qk_nope + qk_rope)). Returns the latent context (B, H, r) f32 —
+    the caller applies the absorbed v_up projection.
+
+    KV is a single head: every query head scores the same k =
+    concat(ckv, krope) page block and v is the ckv view, so the grid is
+    (B, ceil(H / bq), pages) with the page loop innermost and the latent
+    never gathered into HBM.
+    """
+    b, h, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    p1, page, _ = ckv_pages.shape
+    pp = page_table.shape[1]
+    hb = -(-h // bq)
+    pad = hb * bq - h
+    if pad:
+        q_lat = jnp.pad(q_lat, ((0, 0), (0, pad), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0)))
+    ql = q_lat.reshape(b, hb, bq, r)
+    qr = q_rope.reshape(b, hb, bq, dr)
+
+    def page_map(bi, hi, ji, pt, ln, *_s):
+        return (pt[bi, ji], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(b, hb, pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, r), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, bq, dr), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page, r), page_map),
+            pl.BlockSpec((1, page, dr), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, r),
+                               lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, r), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_mla_kernel, page=page, pp=pp, scale=scale,
+                          kv_fmt=kv_fmt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hb, bq, r), jnp.float32),
+        interpret=interpret,
+    )(page_table, kv_lens, ckv_smax, ckv_shift, krope_smax, krope_shift,
+      ql, qr, ckv_pages, krope_pages)
+    return out.reshape(b, hb * bq, r)[:, :h]

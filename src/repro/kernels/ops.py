@@ -163,6 +163,52 @@ def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
     )
 
 
+def paged_mla_decode_attn(q_lat, q_rope, pool_layer, page_table, kv_lens,
+                          scale: float):
+    """MLA absorbed decode over one layer's latent page pool slice.
+
+    q_lat: (B, H, r) queries absorbed into the latent space; q_rope:
+    (B, H, dr); pool_layer: one layer of a runtime.kv_cache MLA pool
+    ({'ckv', 'krope'} + fp8 scale leaves); page_table: (B, PP) int32;
+    kv_lens: (B,) int32; ``scale``: softmax scale (1/sqrt(nope + rope
+    dims)). Returns the latent context (B, H, r) f32 — KV is one head,
+    k = concat(ckv, krope), v = the ckv view.
+
+    Pallas backend: the latent flash-decoding kernel gathers pages through
+    the scalar-prefetched page table and dequantizes FP8 in VMEM. Ref: the
+    gathered-page jnp oracle.
+    """
+    cp, rp = pool_layer["ckv"], pool_layer["krope"]
+    kv_fmt = "fp8_e4m3" if cp.dtype == jnp.uint8 else None
+    if kv_fmt:
+        csm, csh = pool_layer["ckv_smax"], pool_layer["ckv_shift"]
+        rsm, rsh = pool_layer["krope_smax"], pool_layer["krope_shift"]
+    else:  # dummies keep the kernel operand list static across formats
+        csm = rsm = jnp.zeros((1,), jnp.float32)
+        csh = rsh = jnp.zeros((1, 1), jnp.int32)
+    if _BACKEND.startswith("pallas"):
+        from .autotune import best_block_sizes
+        from .decode_attn import paged_mla_decode_attn_pallas
+
+        b, h, r = q_lat.shape
+        page = cp.shape[1]
+        # same autotune kind as GQA decode: bm is the query-head block,
+        # bn the page size; the latent contraction dim is r + dr
+        bq, _ = best_block_sizes(
+            "decode_attn", batch=b, m=h, n=page, k=r + q_rope.shape[-1],
+            w_fmt=kv_fmt or "bf16", a_fmt=None, group_size=page, m2=True,
+            lorc_rank=0,
+        )
+        return paged_mla_decode_attn_pallas(
+            q_lat, q_rope, cp, rp, csm, csh, rsm, rsh, page_table, kv_lens,
+            scale, kv_fmt=kv_fmt, bq=bq, interpret=interpret_mode(),
+        )
+    return _ref.paged_mla_decode_attn_ref(
+        q_lat, q_rope, cp, rp, csm, csh, rsm, rsh, page_table, kv_lens,
+        scale, kv_fmt=kv_fmt,
+    )
+
+
 def dequant_packed(w):
     """PackedLinear -> dense f32 weights. Ref-backend fallback for einsum
     call-sites; the pallas backend routes those through w4a8_matmul_batched

@@ -14,7 +14,8 @@ from repro.core.quantize import quantize_act_tokenwise
 from .common import decode_fp8
 
 __all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref",
-           "w4a8_batched_matmul_ref", "paged_decode_attn_ref"]
+           "w4a8_batched_matmul_ref", "paged_decode_attn_ref",
+           "paged_mla_decode_attn_ref"]
 
 
 def act_quant_ref(x, fmt_name: str = "fp8_e4m3"):
@@ -141,3 +142,40 @@ def paged_decode_attn_ref(q, k_pages, v_pages, k_smax, k_shift, v_smax,
     p = jnp.where(valid, p, 0.0)
     o = jnp.einsum("bkgt,btkd->bkgd", p, vf)
     return o.reshape(b, h, dv)
+
+
+def paged_mla_decode_attn_ref(q_lat, q_rope, ckv_pages, krope_pages,
+                              ckv_smax, ckv_shift, krope_smax, krope_shift,
+                              page_table, kv_lens, scale, kv_fmt=None):
+    """Oracle for the MLA latent decode kernel.
+
+    q_lat: (B, H, r) absorbed queries; q_rope: (B, H, dr); ckv_pages:
+    (P+1, page, r) / krope_pages: (P+1, page, dr) uint8 FP8 codes
+    (``kv_fmt`` set) or bf16; c/r smax: (P+1,) f32; c/r shift: (P+1, 1)
+    int32 (the latent has a single scale "head"); page_table: (B, PP);
+    kv_lens: (B,). Scores are the k = concat(ckv, krope) contraction, v is
+    the ckv view. Returns the latent context (B, H, r) f32.
+    """
+    b, h, r = q_lat.shape
+    _, page, _ = ckv_pages.shape
+    pp = page_table.shape[1]
+
+    def dq(pages, smax, shift):
+        gathered = pages[page_table]  # (B, PP, page, d)
+        if kv_fmt is None:
+            return gathered.astype(jnp.float32).reshape(b, pp * page, -1)
+        fmt = FORMATS[kv_fmt]
+        vals = decode_fp8(gathered, fmt, shift[page_table][..., None])
+        vals = vals * smax[page_table][:, :, None, None]
+        return vals.reshape(b, pp * page, -1)
+
+    ckv = dq(ckv_pages, ckv_smax, ckv_shift)  # (B, T, r)
+    kr = dq(krope_pages, krope_smax, krope_shift)  # (B, T, dr)
+    s = (jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32), ckv)
+         + jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), kr)) * scale
+    t = pp * page
+    valid = jnp.arange(t)[None, None, :] < kv_lens[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    return jnp.einsum("bht,btr->bhr", p, ckv)

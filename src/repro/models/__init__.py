@@ -2,6 +2,7 @@
 from .api import (
     build_def,
     decode_step,
+    encode_cross_pages,
     forward_hidden,
     init_cache,
     init_params,
@@ -15,7 +16,8 @@ from .params import DEFAULT_RULES, ZERO1_RULES, ParamDef, init_tree, pspec_tree,
 
 __all__ = [
     "ArchConfig", "MLASpec", "MoESpec", "SSMSpec", "ParamDef",
-    "build_def", "decode_step", "forward_hidden", "init_cache", "init_params",
+    "build_def", "decode_step", "encode_cross_pages", "forward_hidden",
+    "init_cache", "init_params",
     "loss_fn", "param_pspecs", "param_shapes", "prefill",
     "DEFAULT_RULES", "ZERO1_RULES", "init_tree", "pspec_tree", "shape_tree",
 ]

@@ -23,9 +23,17 @@ __all__ = [
     "loss_fn",
     "prefill",
     "decode_step",
+    "encode_cross_pages",
     "forward_hidden",
     "init_cache",
 ]
+
+
+def encode_cross_pages(params, cfg, frames, caches, cross_table, a_fmt=None):
+    """Enc-dec admission step: run the encoder once and write every decoder
+    layer's cross K/V into its write-once cross pages (see encdec module)."""
+    return _encdec.encode_cross_pages(params, cfg, frames, caches,
+                                      cross_table, a_fmt=a_fmt)
 
 
 def _is_encdec(cfg) -> bool:
@@ -135,7 +143,11 @@ def decode_step(params, cfg, tokens, caches, cache_index, a_fmt=None):
     ``cache_index`` is either a scalar int (legacy contiguous caches, one
     synchronized position for every row) or a runtime.kv_cache.PagedState
     (paged pool: per-row true lengths + page table — each row gets its own
-    positions and length masks)."""
+    positions and length masks). A PagedState with ``chunk_len`` set is a
+    bucketed streaming-prefill chunk: positions past chunk_len are pad, so
+    the logits row is the last *true* token, not the last row."""
+    from repro.runtime.kv_cache import PagedState
+
     batch = {"tokens": tokens}
     if _is_encdec(cfg):
         hidden, caches, _ = _encdec_decode(params, cfg, tokens, caches, cache_index, a_fmt)
@@ -143,11 +155,15 @@ def decode_step(params, cfg, tokens, caches, cache_index, a_fmt=None):
         hidden, caches, _ = forward_hidden(
             params, cfg, batch, a_fmt=a_fmt, caches=caches, cache_index=cache_index
         )
+    if isinstance(cache_index, PagedState) and cache_index.chunk_len is not None:
+        h_last = hidden[:, cache_index.chunk_len[0] - 1]
+    else:
+        h_last = hidden[:, -1]
     w = _head_w(params, cfg)
     from .layers import accum_dtype
 
     logits = jax.lax.dot_general(
-        hidden[:, -1], w, (((1,), (1,)), ((), ())), preferred_element_type=accum_dtype()
+        h_last, w, (((1,), (1,)), ((), ())), preferred_element_type=accum_dtype()
     ).astype(jnp.float32)
     return logits, caches
 

@@ -33,11 +33,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime.kv_cache import (PagedState, append_paged,
-                                    append_prefill_chunk, gather_history)
+                                    append_prefill_chunk, gather_history,
+                                    gather_pages)
 
 from .layers import ParamDef, accum_dtype, apply_rope, linear, quant_act, shard_heads
 
-__all__ = ["attn_params", "attention", "init_kv_cache"]
+__all__ = ["attn_params", "attention", "paged_cross_attention", "init_kv_cache"]
 
 _NEG_INF = -1e30
 
@@ -197,7 +198,11 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     if isinstance(cache_index, PagedState):
-        if s == 1:
+        # chunk_len distinguishes a (possibly length-1) streaming-prefill
+        # chunk from a decode step: decode's append redirects lengths == 0
+        # rows to the null page, which would silently drop a prompt's
+        # first token if a 1-token chunk took that path
+        if s == 1 and cache_index.chunk_len is None:
             # paged decode: append this token at each row's true length,
             # then run flash-decoding over the quantized page pool
             # (kernels.ops routes pallas kernel vs jnp oracle). Per-row
@@ -213,29 +218,34 @@ def attention(
         else:
             # streaming paged prefill: write this page-aligned prompt chunk
             # straight into the pool in-graph, then attend over the gathered
-            # *history* pages plus the chunk's own exact K/V (the chunk does
-            # not round-trip through the page grid, matching the monolithic
+            # table plus the chunk's own exact K/V (the chunk does not
+            # round-trip through the page grid, matching the monolithic
             # prefill numerics). No contiguous max_seq scratch cache is ever
-            # materialized, and the engine trims the page table to the pages
-            # covering the prompt so far — gather cost tracks true length.
+            # materialized; gathered columns at or past the chunk start —
+            # the chunk's own pages, or null-page fill when the engine
+            # bucketed the table width — are masked, so only true history
+            # (token i of the gather at absolute position i < start) is read
+            # from pages.
             assert causal, "streaming paged prefill assumes causal decode LMs"
             assert b == 1, "streaming paged prefill is row-wise (batch 1)"
             new_cache = append_prefill_chunk(kv_cache, {"k": k, "v": v},
                                              cache_index)
             hist, hist_len = gather_history(new_cache, cache_index, s)
+            start = cache_index.lengths[0]
             kc, vc = k, v
             if hist_len:
                 kc = jnp.concatenate([hist["k"].astype(k.dtype), k], 1)
                 vc = jnp.concatenate([hist["v"].astype(v.dtype), v], 1)
             kf, vf = _repeat_kv(kc, g), _repeat_kv(vc, g)
-            # history pages are full (chunk starts page-aligned): key i of the
-            # history sits at absolute position i < chunk start — always
-            # causally visible; within the chunk the mask is plain tril
+            # within the chunk the mask is plain tril (a bucketed chunk's
+            # pad columns are only visible to pad rows, whose outputs are
+            # discarded); history columns are visible iff truly history
             ok = jnp.concatenate(
-                [jnp.ones((s, hist_len), jnp.bool_),
+                [jnp.broadcast_to(jnp.arange(hist_len)[None, :] < start,
+                                  (s, hist_len)),
                  jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
             if cfg.window:
-                qi = cache_index.lengths[0] + jnp.arange(s)
+                qi = start + jnp.arange(s)
                 ki = jnp.concatenate([jnp.arange(hist_len), qi])
                 ok &= ki[None, :] > qi[:, None] - cfg.window
             o = _sdpa_full(q, kf, vf,
@@ -274,3 +284,44 @@ def attention(
     o = o.reshape(b, s, h * hd)
     out = linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))
     return out, new_cache
+
+
+def paged_cross_attention(p, x, cfg, positions, cross_layer,
+                          state: PagedState, a_fmt: Optional[str] = None):
+    """Enc-dec decoder cross-attention over *write-once* cross pages.
+
+    The encoder ran once at admission and its per-layer K/V was quantized
+    into immutable cross pages (``kv_cache.write_cross_pages``); here the
+    decoder only ever reads them. Decode (s == 1) runs the same paged
+    flash-decoding kernel as self-attention with ``kv_lens =
+    state.enc_lengths`` — cross-attention is non-causal, so the per-row
+    length mask *is* the whole mask. Prefill chunks (s > 1, batch 1) gather
+    the cross pages once and attend with the encoder-length mask.
+
+    Returns the projected output (no cache: cross pages never change).
+    """
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    b, s, _ = x.shape
+    xq = quant_act(x, a_fmt)
+    q = linear(p["wq"], xq, p.get("bq")).reshape(b, s, h, hd)
+    if cfg.pos_embedding == "rope":  # mirror the legacy cross path
+        q = apply_rope(q, positions, cfg.rope_theta)
+    if s == 1 and state.chunk_len is None:
+        from repro.kernels import ops
+
+        o = ops.paged_decode_attn(q[:, 0], cross_layer, state.cross_table,
+                                  state.enc_lengths, window=0)
+        o = o[:, None].astype(x.dtype)  # (B, 1, H, hd)
+    else:
+        assert b == 1, "streaming paged prefill is row-wise (batch 1)"
+        cstate = PagedState(state.cross_table, state.enc_lengths)
+        kf = gather_pages(cross_layer, "k", cstate).astype(x.dtype)
+        vf = gather_pages(cross_layer, "v", cstate).astype(x.dtype)
+        t = kf.shape[1]
+        kf, vf = _repeat_kv(kf, g), _repeat_kv(vf, g)
+        ok = jnp.arange(t)[None, :] < state.enc_lengths[:1, None]  # (1, t)
+        msk = jnp.where(jnp.broadcast_to(ok, (s, t)), 0.0, _NEG_INF)
+        o = _sdpa_full(q, kf, vf, msk.astype(jnp.float32))
+    o = o.reshape(b, s, h * hd)
+    return linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))

@@ -16,7 +16,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .layers import ParamDef, norm, norm_params
+from repro.runtime.kv_cache import PagedState, write_cross_pages
+
+from .layers import ParamDef, linear, norm, norm_params
 from .transformer import (
     SegmentSpec,
     _segment_scan,
@@ -26,7 +28,8 @@ from .transformer import (
     lm_logits,
 )
 
-__all__ = ["build_encdec", "encode", "encdec_forward", "init_encdec_cache"]
+__all__ = ["build_encdec", "encode", "encode_cross_pages", "encdec_forward",
+           "init_encdec_cache"]
 
 
 def _enc_seg(cfg) -> SegmentSpec:
@@ -64,6 +67,35 @@ def encode(params, cfg, frames, a_fmt: Optional[str] = None, remat: bool = False
     return norm(params["enc_ln"], x, cfg.norm_kind, cfg.norm_eps)
 
 
+def encode_cross_pages(params, cfg, frames, caches, cross_table,
+                       a_fmt: Optional[str] = None):
+    """Run the encoder once and quantize every decoder layer's cross K/V
+    into its *write-once* cross pages (the paged engine's admission step).
+
+    frames: (1, T_enc, d) stub frame embeddings; caches: the paged cache
+    list — ``caches[0]["cross"]`` holds the decoder's cross pool, leaves
+    (L, P+1, page, KV, hd); cross_table: (1, cross_pp) page ids reserved
+    for this request. Returns the cache list with the cross pool written;
+    the pages are never touched again for the request's lifetime (decode
+    only reads them — see kv_cache.init_cross_pool).
+    """
+    enc_out = encode(params, cfg, frames, a_fmt=a_fmt)  # (1, T_enc, d)
+    b, t = enc_out.shape[:2]
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def body(_, xs):
+        p_layer, pool_layer = xs
+        pc = p_layer["mixer"]["cross"]
+        ek = linear(pc["wk"], enc_out).reshape(b, t, kv, hd)
+        ev = linear(pc["wv"], enc_out, pc.get("bv")).reshape(b, t, kv, hd)
+        return _, write_cross_pages(pool_layer, {"k": ek, "v": ev},
+                                    cross_table)
+
+    cross = caches[0]["cross"]
+    _, new_cross = jax.lax.scan(body, 0, (params["decoder"], cross))
+    return [dict(caches[0], cross=new_cross)]
+
+
 def encdec_forward(
     params,
     cfg,
@@ -76,17 +108,26 @@ def encdec_forward(
 ):
     """Decoder pass. Returns (hidden, new_caches, aux)."""
     b, s = tokens.shape
-    offset = 0 if cache_index is None else cache_index
-    positions = jnp.arange(s) + offset
     x = jnp.take(params["embed"], tokens, axis=0)
-    x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset, s, axis=0)[None].astype(x.dtype)
+    if isinstance(cache_index, PagedState):
+        # per-row true lengths -> (B, S) positions (each slot decodes at
+        # its own depth; no synchronized offset)
+        positions = cache_index.lengths[:, None] + jnp.arange(s)[None]
+        x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(x.dtype)
+    else:
+        offset = 0 if cache_index is None else cache_index
+        positions = jnp.arange(s) + offset
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], offset, s, axis=0)[None].astype(x.dtype)
     dec_cfg = dataclasses.replace(cfg, pos_embedding="learned_applied")
+    paged = isinstance(cache_index, PagedState)
+    seg_caches = caches[0] if (paged and caches is not None) else caches
     x, aux, new_caches = _segment_scan(
-        params["decoder"], x, dec_cfg, _dec_seg(cfg), positions, caches, cache_index,
-        a_fmt, enc_out, remat,
+        params["decoder"], x, dec_cfg, _dec_seg(cfg), positions, seg_caches,
+        cache_index, a_fmt, enc_out, remat,
     )
     x = norm(params["final_ln"], x, cfg.norm_kind, cfg.norm_eps)
-    return x, new_caches, aux
+    return x, ([new_caches] if paged else new_caches), aux
 
 
 def init_encdec_cache(cfg, batch: int, max_seq: int):

@@ -15,6 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.kv_cache import PagedState, gather_slabs, scatter_slabs
+
 from .attention import attention, attn_params, init_kv_cache
 from .layers import ParamDef, mlp, mlp_params, norm, norm_params, shard_residual
 from .ssm import init_mamba2_cache, mamba2_block, mamba2_params
@@ -69,10 +71,21 @@ def hybrid_forward(
     remat: bool = False,
 ):
     """Returns (hidden, new_caches, aux). caches = {'mamba': stacked ssm
-    caches, 'shared_kv': (n_inv, B, S, kv, hd) x2} or None."""
+    caches, 'shared_kv': (n_inv, B, S, kv, hd) x2} or None.
+
+    Paged engine (``cache_index`` is a PagedState): 'mamba' leaves are
+    slab-pooled — (L, n_slabs + 1, ...), gathered per row by
+    ``cache_index.slabs`` — and 'shared_kv' is a paged KV pool with the
+    invocation index in place of the layer axis ((n_inv, P+1, page, kv,
+    hd) + scale leaves), so the shared block's per-invocation caches ride
+    the same page table as any GQA layer stack."""
     b, s = tokens.shape
-    offset = 0 if cache_index is None else cache_index
-    positions = jnp.arange(s) + offset
+    paged = isinstance(cache_index, PagedState)
+    if paged:
+        positions = cache_index.lengths[:, None] + jnp.arange(s)[None]
+    else:
+        offset = 0 if cache_index is None else cache_index
+        positions = jnp.arange(s) + offset
     x = jnp.take(params["embed"], tokens, axis=0)
 
     every = cfg.ssm.attn_every
@@ -80,7 +93,10 @@ def hybrid_forward(
 
     def body(carry, layer_in):
         h, shared_kv = carry
-        (p_layer, mcache), li = layer_in
+        (p_layer, mcache_pool), li = layer_in
+        mcache = mcache_pool
+        if paged and mcache_pool is not None:
+            mcache = gather_slabs(mcache_pool, cache_index.slabs)
         h = shard_residual(h)  # sequence-parallel residual (no-op off-mesh)
 
         if shared_p is not None:
@@ -116,6 +132,8 @@ def hybrid_forward(
             cache=mcache, a_fmt=a_fmt,
         )
         h = h + dh
+        if paged and new_m is not None:
+            new_m = scatter_slabs(mcache_pool, cache_index.slabs, new_m)
         return (h, shared_kv), new_m
 
     if remat:

@@ -19,8 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime.kv_cache import (PagedState, append_paged,
-                                    append_prefill_chunk, gather_history,
-                                    gather_pages)
+                                    append_prefill_chunk, gather_history)
 
 from .layers import (ParamDef, PackedLinear, accum_dtype, apply_rope, as_dense,
                      batched_linear, linear, norm, packed_head_view, quant_act,
@@ -103,31 +102,29 @@ def mla_attention(
     if paged:
         # paged decode / streaming prefill chunk: append the compressed
         # latent + rope key at each row's true position (one token) or the
-        # whole page-aligned chunk, then attend over the dequantized page
-        # gather (the latent has no head axis, so the absorbed einsums
-        # stay jnp — the pool is the same FP8-paged machinery as GQA)
-        if s == 1:
+        # whole page-aligned chunk. Single-token decode then runs entirely
+        # inside the latent flash-decoding kernel (ops.paged_mla_decode_attn
+        # — KV = 1 head, k = concat(ckv, krope), v = the ckv view); the
+        # chunk path attends the dequantized page gather in jnp.
+        if s == 1 and cache_index.chunk_len is None:
             new_cache = append_paged(
                 kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
             )
-            ckv = gather_pages(new_cache, "ckv", cache_index).astype(jnp.bfloat16)
-            krope = gather_pages(new_cache, "krope", cache_index).astype(jnp.bfloat16)
-            t = ckv.shape[1]
-            kv_len = cache_index.lengths + 1  # appended token at position len
-            pmsk4 = jnp.where(jnp.arange(t)[None] < kv_len[:, None], 0.0,
-                              -1e30)[:, None, None, :].astype(jnp.float32)
         else:
             # streaming prefill: write the page-aligned chunk in-graph, then
-            # attend over gathered *history* pages + the chunk's own exact
-            # latents (no page-grid round trip for the chunk itself). The
-            # history pages are full, so history key i sits at absolute
-            # position i < chunk start — always causally visible; the chunk
-            # masks plain tril
+            # attend over the gathered table + the chunk's own exact latents
+            # (no page-grid round trip for the chunk itself). Gathered
+            # columns at or past the chunk start — the chunk's own pages or
+            # bucketed null-page fill — are masked; true history key i sits
+            # at absolute position i < start, always causally visible. The
+            # chunk masks plain tril (bucketed pad columns are only visible
+            # to pad rows, whose outputs are discarded).
             assert b == 1, "streaming paged prefill is row-wise (batch 1)"
             new_cache = append_prefill_chunk(
                 kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
             )
             hist, hist_len = gather_history(new_cache, cache_index, s)
+            start = cache_index.lengths[0]
             ckv = c_kv.astype(jnp.bfloat16)
             krope = k_rope.astype(jnp.bfloat16)
             if hist_len:
@@ -136,7 +133,8 @@ def mla_attention(
                 krope = jnp.concatenate(
                     [hist["krope"].astype(jnp.bfloat16), krope], axis=1)
             ok = jnp.concatenate(
-                [jnp.ones((s, hist_len), jnp.bool_),
+                [jnp.broadcast_to(jnp.arange(hist_len)[None, :] < start,
+                                  (s, hist_len)),
                  jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
             pmsk4 = jnp.where(ok, 0.0, -1e30)[None, None].astype(jnp.float32)
     elif kv_cache is not None:
@@ -154,7 +152,6 @@ def mla_attention(
         if not paged:
             ckv = new_cache["ckv"]  # (B, T, r) bf16
             krope = new_cache["krope"]  # (B, T, dr)
-        t = ckv.shape[1]
         # q absorbed into latent space: (B, S, H, r). The projection
         # contracts wk_b's *out* rows (per head), so a packed weight runs
         # the batched fused kernel in transposed orientation — no densify.
@@ -172,20 +169,35 @@ def mla_attention(
                 jnp.einsum("bshn,hnr->hbsr", q_nope, wk_b,
                            preferred_element_type=accum_dtype()), 0, 2
             ).astype(x.dtype)
-        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv,
-                           preferred_element_type=accum_dtype()).astype(jnp.float32)
-        s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
-                            preferred_element_type=accum_dtype()).astype(jnp.float32)
-        if paged:  # per-row masks built alongside the page gather above
-            msk4 = pmsk4
+        if paged and s == 1 and cache_index.chunk_len is None:
+            # latent flash decoding over the page pool: the gather, FP8
+            # dequant, score concat and online softmax all happen inside
+            # the kernel (ref backend: the jnp oracle with identical
+            # semantics) — no dequantized (B, T, r) latent gather in HBM
+            from repro.kernels import ops
+
+            ctx_lat = ops.paged_mla_decode_attn(
+                q_lat[:, 0], q_rope[:, 0], new_cache,
+                cache_index.page_table, cache_index.lengths + 1,
+                scale=1.0 / float(scale_dim) ** 0.5,
+            )[:, None].astype(x.dtype)  # (B, 1, H, r)
         else:
-            msk4 = block_mask(s, t, cache_index, 0, False, 0,
-                              kv_len=cache_index + s)[None, None]
-        att = jax.nn.softmax((s_lat + s_rope) / jnp.sqrt(scale_dim) + msk4, axis=-1)
-        ctx_lat = jnp.moveaxis(
-            jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
-                       preferred_element_type=accum_dtype()), 1, 2
-        ).astype(x.dtype)
+            t = ckv.shape[1]
+            s_lat = jnp.einsum("bshr,btr->bhst", q_lat, ckv,
+                               preferred_element_type=accum_dtype()).astype(jnp.float32)
+            s_rope = jnp.einsum("bshr,btr->bhst", q_rope, krope.astype(q_rope.dtype),
+                                preferred_element_type=accum_dtype()).astype(jnp.float32)
+            if paged:  # per-row masks built alongside the page gather above
+                msk4 = pmsk4
+            else:
+                msk4 = block_mask(s, t, cache_index, 0, False, 0,
+                                  kv_len=cache_index + s)[None, None]
+            att = jax.nn.softmax((s_lat + s_rope) / jnp.sqrt(scale_dim) + msk4,
+                                 axis=-1)
+            ctx_lat = jnp.moveaxis(
+                jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
+                           preferred_element_type=accum_dtype()), 1, 2
+            ).astype(x.dtype)
         if isinstance(p["wv_b"], PackedLinear):
             wv_v = packed_head_view(p["wv_b"], h)  # (H, v, r) packed
             ctx_h = jnp.moveaxis(ctx_lat, 2, 0).reshape(h, b * s, m.kv_lora_rank)

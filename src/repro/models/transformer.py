@@ -23,7 +23,9 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
-from .attention import attention, attn_params, init_kv_cache
+from repro.runtime.kv_cache import PagedState, gather_slabs, scatter_slabs
+
+from .attention import attention, attn_params, init_kv_cache, paged_cross_attention
 from .layers import (ParamDef, linear, mlp, mlp_params, norm, norm_params,
                      quant_act, shard_residual)
 from .mla import init_mla_cache, mla_attention, mla_params
@@ -146,6 +148,7 @@ def block_apply(
     nk = cfg.norm_kind
     pm = p["mixer"]
     new_cache = None
+    paged = isinstance(cache_index, PagedState)
 
     if seg.mixer == "gqa":
         h, new_kv = attention(
@@ -157,21 +160,30 @@ def block_apply(
         if cache is not None:
             new_cache = dict(cache, kv=new_kv)
         if seg.cross:
-            is_decode = cache is not None and x.shape[1] == 1
-            if is_decode:  # prefill computed + stored these from enc_out
-                cross_kv = (cache["cross_k"], cache["cross_v"])
+            if paged:
+                # write-once cross pages: the engine ran the encoder at
+                # admission and quantized its K/V into cache["cross"];
+                # decode and prefill chunks only ever read them
+                h = paged_cross_attention(
+                    pm["cross"], norm(pm["ln_cross"], x, nk, cfg.norm_eps),
+                    cfg, positions, cache["cross"], cache_index, a_fmt=a_fmt,
+                )
             else:
-                b, t = x.shape[0], enc_out.shape[1]
-                kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-                ek = linear(pm["cross"]["wk"], enc_out).reshape(b, t, kv, hd)
-                ev = linear(pm["cross"]["wv"], enc_out, pm["cross"].get("bv")).reshape(b, t, kv, hd)
-                cross_kv = (ek, ev)
-                if cache is not None:
-                    new_cache = dict(new_cache, cross_k=ek, cross_v=ev)
-            h, _ = attention(
-                pm["cross"], norm(pm["ln_cross"], x, nk, cfg.norm_eps), cfg, positions,
-                a_fmt=a_fmt, cross_kv=cross_kv,
-            )
+                is_decode = cache is not None and x.shape[1] == 1
+                if is_decode:  # prefill computed + stored these from enc_out
+                    cross_kv = (cache["cross_k"], cache["cross_v"])
+                else:
+                    b, t = x.shape[0], enc_out.shape[1]
+                    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+                    ek = linear(pm["cross"]["wk"], enc_out).reshape(b, t, kv, hd)
+                    ev = linear(pm["cross"]["wv"], enc_out, pm["cross"].get("bv")).reshape(b, t, kv, hd)
+                    cross_kv = (ek, ev)
+                    if cache is not None:
+                        new_cache = dict(new_cache, cross_k=ek, cross_v=ev)
+                h, _ = attention(
+                    pm["cross"], norm(pm["ln_cross"], x, nk, cfg.norm_eps),
+                    cfg, positions, a_fmt=a_fmt, cross_kv=cross_kv,
+                )
             x = x + h
     elif seg.mixer == "mla":
         h, new_kv = mla_attention(
@@ -183,25 +195,40 @@ def block_apply(
         if cache is not None:
             new_cache = dict(cache, kv=new_kv)
     elif seg.mixer == "mamba2":
+        # slab-pooled recurrent state (paged engine): leaves are
+        # (n_slabs + 1, ...); gather each row's slab, step, scatter back
+        mc = None if cache is None else cache["ssm"]
+        if paged and cache is not None:
+            mc = gather_slabs(mc, cache_index.slabs)
         h, new_ssm = mamba2_block(
             pm["mamba"], norm(pm["ln"], x, nk, cfg.norm_eps), cfg,
-            cache=None if cache is None else cache["ssm"], a_fmt=a_fmt,
+            cache=mc, a_fmt=a_fmt,
         )
         x = x + h
         if cache is not None:
+            if paged:
+                new_ssm = scatter_slabs(cache["ssm"], cache_index.slabs, new_ssm)
             new_cache = dict(cache, ssm=new_ssm)
     elif seg.mixer == "xlstm_pair":
+        mlc = None if cache is None else cache["mlstm"]
+        slc = None if cache is None else cache["slstm"]
+        if paged and cache is not None:
+            mlc = gather_slabs(mlc, cache_index.slabs)
+            slc = gather_slabs(slc, cache_index.slabs)
         h, new_m = mlstm_block(
             pm["mlstm"], norm(pm["ln_m"], x, nk, cfg.norm_eps), cfg,
-            cache=None if cache is None else cache["mlstm"], a_fmt=a_fmt,
+            cache=mlc, a_fmt=a_fmt,
         )
         x = x + h
         h, new_s = slstm_block(
             pm["slstm"], norm(pm["ln_s"], x, nk, cfg.norm_eps), cfg,
-            cache=None if cache is None else cache["slstm"], a_fmt=a_fmt,
+            cache=slc, a_fmt=a_fmt,
         )
         x = x + h
         if cache is not None:
+            if paged:
+                new_m = scatter_slabs(cache["mlstm"], cache_index.slabs, new_m)
+                new_s = scatter_slabs(cache["slstm"], cache_index.slabs, new_s)
             new_cache = dict(cache, mlstm=new_m, slstm=new_s)
     else:
         raise ValueError(seg.mixer)

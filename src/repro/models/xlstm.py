@@ -72,8 +72,11 @@ def init_mlstm_cache(cfg, batch):
     }
 
 
-def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int, s0=None):
     """q,k,v: (B, T, H, dk); log_f (<=0), log_i: (B, T, H).
+    ``s0``: optional incoming (c, n, m) state in the recurrent-step
+    convention (what ``_mlstm_step`` carries) — used by the serving
+    engine's streaming prefill to continue a prompt chunk by chunk.
     Returns (h (B,T,H,dk), state (c, n, m))."""
     b, t, h, dk = q.shape
     chunk = min(chunk, t)
@@ -95,10 +98,18 @@ def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
     causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
 
     def step(carry, ci):
-        c_st, n_st, m_st, l_off = carry  # state weighted exp(-(L_s - i_s) - m_st)
+        # carry state is in the recurrent-step convention: c/n stabilized by
+        # m_st, decayed to the end of the previous chunk. All exponents here
+        # are *chunk-local* (L measured from the chunk start): the decay
+        # from the previous chunk's end to position t is exp(L_t), so
+        # e_inter = L_t + m_st and the carry-to-carry decay uses L_tot.
+        # (A global running L offset in the carry double-counted the decay
+        # of earlier chunks — state died off exp(L_prev) too fast for any
+        # T > chunk.)
+        c_st, n_st, m_st = carry
         qb, kb, vb = qs[:, ci], ks[:, ci], vs[:, ci]
         lf, li = lfs[:, ci], lis[:, ci]
-        lcum = jnp.cumsum(lf, axis=1) + l_off[:, None]  # global L_t, (B, c, H)
+        lcum = jnp.cumsum(lf, axis=1)  # chunk-local L_t, (B, c, H)
         lt = jnp.transpose(lcum, (0, 2, 1))  # (B, H, c)
         # intra-chunk exponent: E_ts = L_t - L_s + i_s
         e_intra = lt[:, :, :, None] - lt[:, :, None, :] + jnp.transpose(li, (0, 2, 1))[:, :, None, :]
@@ -131,13 +142,15 @@ def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
         n_new = n_st * jnp.exp(m_st + l_tot - m_end)[..., None] + jnp.einsum(
             "bshd,bsh->bhd", kb, wk_exp
         )
-        return (c_new, n_new, m_end, l_tot), h_out
+        return (c_new, n_new, m_end), h_out
 
-    c0 = jnp.zeros((b, h, dk, dk), jnp.float32)
-    n0 = jnp.zeros((b, h, dk), jnp.float32)
-    m0 = jnp.full((b, h), -1e30, jnp.float32)
-    l0 = jnp.zeros((b, h), jnp.float32)
-    (c_f, n_f, m_f, _), hs = jax.lax.scan(step, (c0, n0, m0, l0), jnp.arange(nc))
+    if s0 is None:
+        c0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (s.astype(jnp.float32) for s in s0)
+    (c_f, n_f, m_f), hs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(nc))
     hh = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, dk)[:, :t]
     return hh, (c_f, n_f, m_f)
 
@@ -188,7 +201,11 @@ def mlstm_block(p, x, cfg, cache=None, a_fmt: Optional[str] = None):
         hh = hh[:, None]
         new_cache = {"c": c_n, "n": n_n, "m": m_n, "conv": new_conv.astype(jnp.float32)}
     else:
-        hh, (c_n, n_n, m_n) = _mlstm_chunked(q, k, v, log_f, log_i, chunk=256)
+        s0 = None
+        if cache is not None:  # streaming prefill continues the carried state
+            s0 = (cache["c"], cache["n"], cache["m"])
+        hh, (c_n, n_n, m_n) = _mlstm_chunked(q, k, v, log_f, log_i, chunk=256,
+                                             s0=s0)
         if cache is not None:
             new_cache = {"c": c_n, "n": n_n, "m": m_n, "conv": new_conv.astype(jnp.float32)}
 

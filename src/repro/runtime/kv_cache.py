@@ -62,14 +62,18 @@ __all__ = [
     "PagedState",
     "init_gqa_pool",
     "init_mla_pool",
+    "init_cross_pool",
     "pool_keys",
     "quantize_pages",
     "dequantize_pages",
     "splice_prefill",
     "append_prefill_chunk",
+    "write_cross_pages",
     "append_paged",
     "gather_pages",
     "gather_history",
+    "gather_slabs",
+    "scatter_slabs",
     "pool_bytes_per_token",
     "bf16_bytes_per_token",
 ]
@@ -79,10 +83,27 @@ _EPS = 1e-12
 
 class PagedState(NamedTuple):
     """Per-row cache index for paged decode: which pages each slot owns and
-    how many tokens it has really generated (no synchronized-length hack)."""
+    how many tokens it has really generated (no synchronized-length hack).
+
+    The optional fields extend the same index to every decode family:
+      * ``chunk_len`` — (1,) true token count of a *bucketed* streaming
+        prefill chunk (the engine pads chunks to powers of two so jit trace
+        count is O(log max_seq), not O(distinct lengths); positions >=
+        chunk_len are pad and must be masked out of page writes/logits).
+      * ``cross_table``/``enc_lengths`` — enc-dec decoders: page ids of the
+        write-once cross-attention pages and the true encoder lengths.
+      * ``slabs`` — recurrent families (SSM/xLSTM): per-row state-slab ids
+        into the fixed-size slab pool (the last slab id is the reserved
+        null slab, like the null page).
+    Unused fields stay ``None``; models treat the tuple as an opaque pytree.
+    """
 
     page_table: jnp.ndarray  # (B, pages_per_slot) int32 page ids
     lengths: jnp.ndarray  # (B,) int32 true per-slot lengths
+    chunk_len: Optional[jnp.ndarray] = None  # (1,) true prefill-chunk tokens
+    cross_table: Optional[jnp.ndarray] = None  # (B, cross_pp) int32 page ids
+    enc_lengths: Optional[jnp.ndarray] = None  # (B,) int32 encoder lengths
+    slabs: Optional[jnp.ndarray] = None  # (B,) int32 state-slab ids
 
 
 def _is_fp8(pool: Dict) -> bool:
@@ -133,6 +154,21 @@ def init_mla_pool(n_layers, n_pages, page_size, kv_lora_rank, qk_rope_dim,
         store["_"] = store["_"][:, :, :, 0]  # (L, P+1, page, dim)
         pool.update(_named(store, name))
     return pool
+
+
+def init_cross_pool(n_layers, n_pages, page_size, n_kv, head_dim,
+                    fmt: Optional[str] = "fp8_e4m3") -> Dict:
+    """Immutable cross-attention pages (enc-dec decoders).
+
+    Same storage layout as a GQA pool — k/v codes + per-(page, head) M2
+    scales — but with *write-once* semantics: the encoder runs exactly once
+    per request, so a slot's cross pages are written in one shot at encode
+    time (``write_cross_pages``) and never touched again. There is no
+    append path for them: decode only ever reads (``ops.paged_decode_attn``
+    with ``kv_lens = enc_lengths``), which is what lets the per-page scales
+    stay frozen at their encode-time amax for the request's whole lifetime.
+    """
+    return init_gqa_pool(n_layers, n_pages, page_size, n_kv, head_dim, fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +316,11 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
     the prompt's K/V never exists as a contiguous max_seq scratch cache —
     transient memory is bounded by the chunk, and the pages written here
     are immediately the attention source for the next chunk.
+
+    When ``state.chunk_len`` is set, the chunk was padded to a power-of-two
+    bucket: positions >= chunk_len carry pad-token K/V and are zeroed here
+    so they cannot leak into the page amax (and so the scales). Pages the
+    pad region overhangs must point at the null page in ``page_table``.
     """
     fp8 = _is_fp8(pool_layer)
     out = dict(pool_layer)
@@ -290,6 +331,9 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
         page = store.shape[1]
         new = new_vals[name].astype(jnp.float32)[0]  # (S, KV, hd) | (S, dim)
         s = new.shape[0]
+        if state.chunk_len is not None:  # zero the pad tail of a bucketed chunk
+            live = (jnp.arange(s) < state.chunk_len[0]).astype(jnp.float32)
+            new = new * live.reshape((s,) + (1,) * (new.ndim - 1))
         npg = -(-s // page)
         pad = npg * page - s
         if pad:
@@ -309,6 +353,47 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
             stv = vals if has_heads else vals[..., 0, :]
             out[name] = store.at[pid].set(stv.astype(store.dtype))
     return out
+
+
+def write_cross_pages(pool_layer: Dict, new_vals: Dict,
+                      cross_table: jnp.ndarray) -> Dict:
+    """Write one layer's encoder-derived cross K/V into its (write-once)
+    cross pages, in one shot at encode time.
+
+    pool_layer: one layer's slice of an ``init_cross_pool`` pool.
+    new_vals: {"k": (1, T_enc, KV, hd), "v": ...} — the full encoder
+    sequence. cross_table: (1, cross_pp) page ids covering T_enc (tail
+    entries past ceil(T_enc / page) are never written).
+
+    This is the *only* writer of cross pages: decode never appends to them,
+    so the per-(page, head) M2 scales computed here are final.
+    """
+    state = PagedState(cross_table, jnp.zeros((1,), jnp.int32))
+    return append_prefill_chunk(pool_layer, new_vals, state)
+
+
+# ---------------------------------------------------------------------------
+# State slabs (SSM / xLSTM recurrent state)
+# ---------------------------------------------------------------------------
+def gather_slabs(pool_layer, slab_ids):
+    """Recurrent-state read for one layer: slab-pool leaves (S+1, ...) ->
+    per-row state (B, ...). ``slab_ids``: (B,) int32; the last slab (index
+    S) is the reserved null slab inactive rows point at.
+
+    A slab is the fixed-size analogue of a page for families whose decode
+    state does not grow with context (SSM state + conv tail, xLSTM
+    (c, n, m) cells): one slab per running request, allocated at admission,
+    steal/spill-able like pages — just never grown."""
+    return jax.tree.map(lambda a: a[slab_ids], pool_layer)
+
+
+def scatter_slabs(pool_layer, slab_ids, new_rows):
+    """Recurrent-state write-back: scatter each row's updated state into
+    its slab. Rows sharing the null slab overwrite each other there —
+    harmless by construction (the null slab is never read as live state)."""
+    return jax.tree.map(
+        lambda full, row: full.at[slab_ids].set(row.astype(full.dtype)),
+        pool_layer, new_rows)
 
 
 def gather_pages(pool_layer: Dict, name: str, state: PagedState):
@@ -331,24 +416,27 @@ def gather_pages(pool_layer: Dict, name: str, state: PagedState):
 
 
 def gather_history(pool_layer: Dict, state: PagedState, chunk_len: int):
-    """History prefix for a streaming-prefill chunk (the shared page math
+    """History gather for a streaming-prefill chunk (the shared page math
     for the GQA and MLA model glue — keep it in one place).
 
-    A chunk starts page-aligned and occupies the *last*
-    ``ceil(chunk_len / page)`` entries of the (engine-trimmed) page table,
-    so everything before them is fully-packed history: token i of the
-    gather sits at absolute position i. Returns
-    ``({name: (B, hist_len, ...)}, hist_len)`` of dequantized history
-    leaves — ``({}, 0)`` when the chunk is the start of the prompt.
+    The chunk starts page-aligned at ``state.lengths[0]``, so every token
+    of the gather below that (dynamic) position is fully-packed history:
+    token i sits at absolute position i. The *whole* (engine-trimmed or
+    power-of-two-bucketed) table is gathered — including the chunk's own
+    just-written pages and any null-page fill — and the caller masks
+    columns ``>= lengths[0]``: those positions are covered exactly by the
+    chunk's inline K/V (no early FP8 round trip) or are pad. Returns
+    ``({name: (B, W * page, ...)}, W * page)``, or ``({}, 0)`` when the
+    table is no wider than the chunk itself (prompt fits one chunk,
+    nothing could be history).
     """
     first = pool_layer[pool_keys(pool_layer)[0]]
     page = first.shape[1]
-    hist_w = state.page_table.shape[1] - (-(-chunk_len // page))
-    if hist_w <= 0:
+    if state.page_table.shape[1] <= -(-chunk_len // page):
         return {}, 0
-    hstate = PagedState(state.page_table[:, :hist_w], state.lengths)
-    return ({name: gather_pages(pool_layer, name, hstate)
-             for name in pool_keys(pool_layer)}, hist_w * page)
+    return ({name: gather_pages(pool_layer, name, state)
+             for name in pool_keys(pool_layer)},
+            state.page_table.shape[1] * page)
 
 
 # ---------------------------------------------------------------------------

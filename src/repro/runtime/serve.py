@@ -11,30 +11,58 @@ max_seq scratch. This is the scheduling skeleton of a vLLM-style paged
 engine adapted to fixed-shape jit programs (page table and per-slot lengths
 are jit *inputs*; shapes never change -> one compiled decode step).
 
+The paged pool is the *single* decode path — every model family runs on it:
+
+  * decoder-only transformers (GQA and MLA attention, dense or MoE) keep
+    per-layer K/V (or compressed latent) pages; MLA decode runs entirely
+    inside the latent flash-decoding kernel (ops.paged_mla_decode_attn).
+  * enc-dec (Whisper-style) decoders add *write-once cross pages*: the
+    encoder runs once at admission, every decoder layer's cross K/V is
+    quantized into immutable pages (kv_cache.write_cross_pages), and
+    admission charges ``pages(prompt) + pages(encoder_seq)`` from the same
+    free list.
+  * recurrent families (SSM / xLSTM, and the Zamba2 hybrid's Mamba2
+    backbone) hold their fixed-size decode state in *state slabs*: one
+    slab per running request, allocated at admission, steal/spill-able
+    exactly like pages — just never grown. The hybrid's shared-attention
+    KV rides an ordinary page pool with the invocation index as the
+    layer axis.
+
 Scheduling (``scheduler`` knob):
   * ``"token_budget"`` (default): admission charges only the prompt's pages
-    plus ``headroom_pages`` of decode headroom; every step allocates pages
-    on demand as rows cross page boundaries. On pool exhaustion the
-    scheduler preempts the lowest-priority running request by *stealing its
-    pages*: the victim's page payload (codes + scales) is spilled to host
-    memory and its pages returned to the pool, so it resumes
-    token-identically — bit-identical page contents are restored into
-    whatever pages are free — once capacity returns. Watermarks and a
-    steal cooldown give anti-thrash hysteresis; readmission is
-    longest-waiting-first, with preempted requests strictly ahead of fresh
-    ones (no overtaking — fresh work cannot starve a spilled request).
+    plus ``headroom_pages`` of decode headroom (plus the encoder pages /
+    one slab where the family needs them); every step allocates pages on
+    demand as rows cross page boundaries. On pool exhaustion the scheduler
+    preempts the lowest-priority running request by *stealing its pages*
+    (and slab): the victim's payload (codes + scales + recurrent state,
+    all layers) is spilled to host memory and its pages returned to the
+    pool, so it resumes token-identically — bit-identical contents are
+    restored into whatever pages are free — once capacity returns.
+    Watermarks and a steal cooldown give anti-thrash hysteresis;
+    readmission is longest-waiting-first, with preempted requests strictly
+    ahead of fresh ones (no overtaking — fresh work cannot starve a
+    spilled request). Host spill residency is bounded by
+    ``spill_budget_bytes``: when exceeded, the oldest spill is *evicted* —
+    its request re-queues at the head of the line and re-prefills its full
+    context instead of restoring bytes (host memory can no longer OOM on
+    pathological steal storms).
   * ``"reserve"``: the legacy reserve-on-admit policy — worst-case pages
     (prompt + max_new) are reserved up front, so admitted requests never
-    stall but slot utilization collapses under long-tail ``max_new``.
+    stall but slot utilization collapses under long-tail ``max_new``. Kept
+    as the serving benchmark's baseline.
+
+Streaming-prefill chunks are *bucketed*: chunk lengths and page-table
+widths are padded to powers of two (pad tokens masked everywhere — page
+writes, attention, logits row), so a high-entropy prompt-length workload
+compiles O(log max_seq) prefill programs instead of one per distinct
+(chunk_len, table_width) pair. Families with recurrent state stream exact
+chunks instead (pad tokens cannot be masked out of a recurrence's carry).
 
 ``kv_fmt`` selects the page payload: ``"fp8_e4m3"`` stores packed FP8 codes
 with per-(page, head) M2 scales (~0.52x the bytes of bf16 -> ~2x the slot
 pool per HBM byte), ``None`` keeps bf16 pages as the fallback path. Both
 run the same paged decode attention with per-slot *true* lengths — rows
 carry their own positions and length masks end to end.
-
-Families whose decode state cannot be paged (enc-dec cross-attention
-caches, SSM/xLSTM recurrent states) keep the legacy monolithic engine.
 """
 from __future__ import annotations
 
@@ -42,7 +70,7 @@ import contextlib
 import dataclasses
 import functools
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +93,13 @@ def _decode_step_jit(params, caches, tokens, cache_index, cfg, a_fmt):
                               a_fmt=a_fmt)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
+def _encode_cross_jit(params, frames, caches, cross_table, cfg, a_fmt):
+    """Enc-dec admission step: encoder forward + write-once cross pages."""
+    return models.encode_cross_pages(params, cfg, frames, caches,
+                                     cross_table, a_fmt=a_fmt)
+
+
 @contextlib.contextmanager
 def _backend_scope(name: Optional[str]):
     """Temporarily select a kernel backend (None = leave untouched). Keeps a
@@ -83,27 +118,41 @@ def _backend_scope(name: Optional[str]):
         _kops.set_backend(prev)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _is_hybrid(cfg) -> bool:
+    return (cfg.ssm is not None and cfg.ssm.kind == "mamba2"
+            and cfg.family == "hybrid")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: list
     max_new: int = 16
     priority: int = 0  # higher = steal from it last; ties -> newest admitted
+    frames: Optional[np.ndarray] = None  # enc-dec: (encoder_seq, d) embeddings
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     preemptions: int = 0  # times this request's pages were stolen
+    evictions: int = 0  # times its host spill was dropped (re-prefilled)
+    resume_ctx: Optional[list] = None  # evicted: full context to re-prefill
 
 
 @dataclasses.dataclass
 class _Spill:
-    """A preempted request's resumable state: the exact page payload
-    (codes + scales per pool leaf, all layers) at preemption time. Restoring
-    these bytes into any free pages reproduces the pool state bit-exactly,
-    so the resumed request generates token-identical output."""
+    """A preempted request's resumable state: the exact page / slab payload
+    (codes + scales + recurrent state per pool leaf, all layers) at
+    preemption time. Restoring these bytes into any free pages/slab
+    reproduces the pool state bit-exactly, so the resumed request generates
+    token-identical output."""
 
     req: Request
     ctx_len: int  # tokens of KV spilled (prompt + generated-so-far)
-    pages: List[Dict[str, np.ndarray]]  # per segment: leaf -> (L, npg, ...)
+    payload: List[Dict[str, np.ndarray]]  # per engine unit: leaf -> array
+    nbytes: int  # host bytes this spill holds (spill_budget accounting)
     since: int  # engine step when preempted (longest-waiting-first key)
     seq: int  # original admission sequence — age/priority is kept on resume
 
@@ -115,23 +164,29 @@ class Server:
                  kv_fmt: Optional[str] = None,
                  page_size: int = 64,
                  pool_pages: Optional[int] = None,
+                 pool_slabs: Optional[int] = None,
                  scheduler: str = "token_budget",
                  headroom_pages: int = 1,
                  low_watermark: int = 0,
                  resume_watermark: int = 1,
                  steal_cooldown: int = 2,
-                 prefill_chunk_pages: int = 4):
+                 prefill_chunk_pages: int = 4,
+                 spill_budget_bytes: Optional[int] = None):
         """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
         prefill/decode through the fused single-pass W4A8 kernel, and paged
-        decode attention through the flash-decoding page-gather kernel;
-        'ref' forces the jnp oracles; None keeps the process-wide setting.
+        decode attention (GQA and MLA-latent) through the flash-decoding
+        page-gather kernels; 'ref' forces the jnp oracles; None keeps the
+        process-wide setting.
 
         ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
         per-(page, head) M2 scales) or None (bf16 pages, fallback path).
+        Recurrent state slabs always hold exact f32 state regardless.
         ``page_size``: tokens per page. ``pool_pages``: pool capacity in
-        pages (default: slots * pages_per_slot — full backing).
+        pages (default: full backing — slots * pages per slot, plus the
+        encoder pages for enc-dec). ``pool_slabs``: state slabs for
+        recurrent families (default: one per slot — full backing).
 
-        Scheduler knobs (paged engine, ``scheduler='token_budget'``):
+        Scheduler knobs (``scheduler='token_budget'``):
           * ``headroom_pages``: decode headroom charged at admission on top
             of the prompt's pages — the first page boundary never stalls.
           * ``low_watermark``: pages that must stay free *after* admitting
@@ -143,6 +198,9 @@ class Server:
           * ``steal_cooldown``: steps a freshly admitted/resumed request is
             protected from preemption (unless no other victim exists).
           * ``prefill_chunk_pages``: streaming-prefill chunk, in pages.
+          * ``spill_budget_bytes``: cap on host bytes held by spills; on
+            overflow the oldest spill is evicted and its request re-queued
+            for a full re-prefill (None = unbounded).
         Both watermarks are bypassed when nothing is running — the pool is
         then fully available, so progress is always made when physically
         possible."""
@@ -161,6 +219,7 @@ class Server:
         self.resume_watermark = resume_watermark
         self.steal_cooldown = steal_cooldown
         self.prefill_chunk_pages = prefill_chunk_pages
+        self.spill_budget_bytes = spill_budget_bytes
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.preempted: List[_Spill] = []
@@ -168,55 +227,152 @@ class Server:
         self.stats = {
             "steps": 0, "slot_steps": 0, "decoded_tokens": 0,
             "prefill_tokens": 0, "preemptions": 0, "resumes": 0,
-            "pages_stolen": 0,
+            "pages_stolen": 0, "spill_evictions": 0,
         }
         self._step_no = 0
         self._admit_seq = 0
+        self._spill_bytes = 0
+        # distinct (padded_chunk_len, table_width) prefill signatures fed to
+        # the jitted step — with a fixed cfg this IS the prefill trace
+        # count, which bucketing bounds to O(log max_seq)
+        self.prefill_traces: set = set()
 
-        self.paged = cfg.encoder_layers == 0 and cfg.ssm is None
-        if not self.paged:
-            if kv_fmt is not None:
-                raise ValueError(
-                    f"kv_fmt={kv_fmt!r}: paged KV quantization needs pageable "
-                    "decode state (enc-dec / SSM families keep bf16 caches)")
-            self.caches = models.init_cache(cfg, slots, max_seq)
-            self.lengths = np.zeros(slots, dtype=np.int64)
-            self._decode = functools.partial(_decode_step_jit, cfg=cfg,
-                                             a_fmt=a_fmt)
-            return
-
-        # ---- paged pool + host-side allocator ----------------------------
+        self._encdec = cfg.encoder_layers > 0
+        self._hybrid = _is_hybrid(cfg)
         self.page_size = page_size
         self.pages_per_slot = math.ceil(max_seq / page_size)
-        n_pages = pool_pages or slots * self.pages_per_slot
-        self._n_pages = n_pages
-        self.pools = []
-        for seg in segments_for(cfg):
-            if seg.mixer == "gqa":
-                pool = kvc.init_gqa_pool(seg.count, n_pages, page_size,
-                                         cfg.n_kv_heads, cfg.resolved_head_dim,
-                                         kv_fmt)
-            elif seg.mixer == "mla":
-                pool = kvc.init_mla_pool(seg.count, n_pages, page_size,
-                                         cfg.mla.kv_lora_rank,
-                                         cfg.mla.qk_rope_dim, kv_fmt)
-            else:  # pragma: no cover — guarded by self.paged above
-                raise ValueError(f"unpageable mixer {seg.mixer!r}")
-            self.pools.append({"kv": pool})
-        self.free_pages: List[int] = list(range(n_pages))
-        self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
-        self.page_table = np.zeros((slots, self.pages_per_slot), np.int32)
-        self.lengths = np.zeros(slots, dtype=np.int32)
-        self._slot_seq = [0] * slots  # admission sequence of the occupant
-        self._slot_since = [0] * slots  # step admitted/resumed (cooldown)
+        self._cross_pp = (kvc.pages_needed(cfg.encoder_seq, page_size)
+                          if self._encdec else 0)
         self._decode = functools.partial(_decode_step_jit, cfg=cfg,
                                          a_fmt=a_fmt)
 
+        # ---- pools: one unit per (path into the cache tree, kind) --------
+        # every unit's leaves are (lead, pool_size + 1, ...): lead = stacked
+        # layers (or hybrid shared-block invocations), index 1 = page/slab id
+        # with the last id reserved (null page / null slab)
+        self._units: List[Tuple[tuple, str]] = []
+        kv_n, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        self._n_slabs = 0
+        if cfg.ssm is not None:
+            self._n_slabs = pool_slabs or slots
+        n_pages = pool_pages or slots * (self.pages_per_slot
+                                         + (self._cross_pp if self._encdec
+                                            else 0))
+        if self._hybrid:
+            from repro.models.hybrid import n_attn_invocations
+            from repro.models.ssm import init_mamba2_cache
+
+            one = init_mamba2_cache(cfg, self._n_slabs + 1)
+            mamba = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+            self.pools = {"mamba": mamba}
+            self._units.append((("mamba",), "slab"))
+            n_inv = n_attn_invocations(cfg)
+            if n_inv:
+                self.pools["shared_kv"] = kvc.init_gqa_pool(
+                    n_inv, n_pages, page_size, kv_n, hd, kv_fmt)
+                self._units.append((("shared_kv",), "kv"))
+        else:
+            self.pools = []
+            for i, seg in enumerate(segments_for(cfg)):
+                seg_pools = {}
+                if seg.mixer == "gqa":
+                    seg_pools["kv"] = kvc.init_gqa_pool(
+                        seg.count, n_pages, page_size, kv_n, hd, kv_fmt)
+                    self._units.append(((i, "kv"), "kv"))
+                    if seg.cross:
+                        seg_pools["cross"] = kvc.init_cross_pool(
+                            seg.count, n_pages, page_size, kv_n, hd, kv_fmt)
+                        self._units.append(((i, "cross"), "cross"))
+                elif seg.mixer == "mla":
+                    seg_pools["kv"] = kvc.init_mla_pool(
+                        seg.count, n_pages, page_size, cfg.mla.kv_lora_rank,
+                        cfg.mla.qk_rope_dim, kv_fmt)
+                    self._units.append(((i, "kv"), "kv"))
+                elif seg.mixer == "xlstm_pair":
+                    from repro.models.xlstm import (init_mlstm_cache,
+                                                    init_slstm_cache)
+
+                    for name, init in (("mlstm", init_mlstm_cache),
+                                       ("slstm", init_slstm_cache)):
+                        one = init(cfg, self._n_slabs + 1)
+                        seg_pools[name] = jax.tree.map(
+                            lambda a: jnp.broadcast_to(
+                                a, (seg.count,) + a.shape), one)
+                        self._units.append(((i, name), "slab"))
+                elif seg.mixer == "mamba2":
+                    from repro.models.ssm import init_mamba2_cache
+
+                    one = init_mamba2_cache(cfg, self._n_slabs + 1)
+                    seg_pools["ssm"] = jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a, (seg.count,) + a.shape), one)
+                    self._units.append(((i, "ssm"), "slab"))
+                else:  # pragma: no cover
+                    raise ValueError(f"unknown mixer {seg.mixer!r}")
+                self.pools.append(seg_pools)
+
+        self._has_pages = any(kind in ("kv", "cross")
+                              for _, kind in self._units)
+        self._has_slabs = any(kind == "slab" for _, kind in self._units)
+        # pristine one-slab state per slab unit: recycled slabs are reset to
+        # this at allocation (pages are fully overwritten by the prefill
+        # stream, but a recurrent prefill *continues* from whatever state
+        # its slab holds — a previous owner's leftovers must not leak in)
+        self._slab_init = {
+            ui: {name: np.asarray(leaf[:, :1])
+                 for name, leaf in self._unit(path).items()}
+            for ui, (path, kind) in enumerate(self._units) if kind == "slab"
+        }
+        # (recurrent-only families hold exact f32 state slabs: there is no
+        # page payload for kv_fmt to select, and the knob is simply unused)
+        self._n_pages = n_pages if self._has_pages else 0
+        # recurrent state cannot mask pad tokens out of its carry, so
+        # slab-holding families stream exact chunk lengths instead
+        self._bucket_prefill = not self._has_slabs
+
+        self.free_pages: List[int] = list(range(self._n_pages))
+        self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        self.page_table = np.full(
+            (slots, max(1, self.pages_per_slot if self._has_pages else 1)),
+            self._null_page, np.int32)
+        self.free_slabs: List[int] = list(range(self._n_slabs))
+        self.slot_slab: List[int] = [-1] * slots
+        self.slab_table = np.full((slots,), self._n_slabs, np.int32)
+        self.slot_cross: List[List[int]] = [[] for _ in range(slots)]
+        self.cross_table = np.full((slots, max(1, self._cross_pp)),
+                                   self._null_page, np.int32)
+        self.enc_lengths = np.zeros((slots,), np.int32)
+        self.lengths = np.zeros(slots, dtype=np.int32)
+        self._slot_seq = [0] * slots  # admission sequence of the occupant
+        self._slot_since = [0] * slots  # step admitted/resumed (cooldown)
+
+    @property
+    def _null_page(self) -> int:
+        """The reserved null page id (index P of every page pool)."""
+        return getattr(self, "_n_pages", 0)
+
+    def _unit(self, path):
+        node = self.pools
+        for p in path:
+            node = node[p]
+        return node
+
+    def _set_unit(self, path, value):
+        node = self.pools
+        for p in path[:-1]:
+            node = node[p]
+        node[path[-1]] = value
+
     # -- page accounting -------------------------------------------------------
     def _worst_case_pages(self, req: Request) -> int:
-        """Pages this request can ever hold (prompt + max_new, max_seq cap)."""
+        """Pages this request can ever hold (prompt + max_new capped at
+        max_seq, plus the write-once encoder pages for enc-dec)."""
+        if not self._has_pages:
+            return 0
         return kvc.pages_needed(
-            min(len(req.prompt) + req.max_new, self.max_seq), self.page_size)
+            min(len(req.prompt) + req.max_new, self.max_seq),
+            self.page_size) + self._cross_pp
 
     def _alloc(self, slot: int, npg: int) -> List[int]:
         ids = [self.free_pages.pop(0) for _ in range(npg)]
@@ -224,6 +380,27 @@ class Server:
         owned = self.slot_pages[slot]
         self.page_table[slot, :len(owned)] = owned
         return ids
+
+    def _alloc_cross(self, slot: int) -> List[int]:
+        ids = [self.free_pages.pop(0) for _ in range(self._cross_pp)]
+        self.slot_cross[slot] = ids
+        self.cross_table[slot, :len(ids)] = ids
+        return ids
+
+    def _alloc_slab(self, slot: int, reset: bool = True) -> int:
+        sid = self.free_slabs.pop(0)
+        self.slot_slab[slot] = sid
+        self.slab_table[slot] = sid
+        if reset:  # a resume overwrites the slab with its spill right after
+            ids = jnp.asarray([sid], jnp.int32)
+            for ui, (path, kind) in enumerate(self._units):
+                if kind != "slab":
+                    continue
+                pool = dict(self._unit(path))
+                for name, arr in self._slab_init[ui].items():
+                    pool[name] = pool[name].at[:, ids].set(jnp.asarray(arr))
+                self._set_unit(path, pool)
+        return sid
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
@@ -233,7 +410,17 @@ class Server:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} must be "
                 f"< max_seq={self.max_seq} (no room left to decode)")
-        if self.paged and self._worst_case_pages(req) > self._n_pages:
+        if self._encdec:
+            if req.frames is None:
+                raise ValueError(
+                    f"request {req.rid}: enc-dec serving needs per-request "
+                    "encoder frames (Request.frames)")
+            if req.frames.shape[0] != self.cfg.encoder_seq:
+                raise ValueError(
+                    f"request {req.rid}: frames length {req.frames.shape[0]} "
+                    f"!= encoder_seq={self.cfg.encoder_seq} (pad the input; "
+                    "the encoder program is fixed-shape)")
+        if self._has_pages and self._worst_case_pages(req) > self._n_pages:
             # fail fast on requests no retirement can ever fit
             raise ValueError(
                 f"request {req.rid}: needs {self._worst_case_pages(req)} pages "
@@ -250,155 +437,289 @@ class Server:
             if not self._admit_one(slot):
                 break  # head of line does not fit: wait (no overtaking)
 
+    def _pick_victim(self) -> Optional[int]:
+        """Lowest-priority active slot (ties: most recently admitted).
+        Requests inside the steal cooldown are protected unless no other
+        victim exists."""
+        cands = [s for s, r in enumerate(self.active) if r is not None]
+        if not cands:
+            return None
+        warm = [s for s in cands
+                if self._step_no - self._slot_since[s] >= self.steal_cooldown]
+        pick_from = warm or cands
+        return min(pick_from,
+                   key=lambda s: (self.active[s].priority, -self._slot_seq[s]))
+
+    def _slab_available(self, want_priority: int) -> bool:
+        """True if a slab is free, or (token-budget scheduler only) one can
+        be stolen for a waiter whose priority strictly beats the victim's.
+        Reserve-on-admit never preempts — that is its whole contract — so
+        under it slab exhaustion simply defers admission."""
+        if not self._has_slabs:
+            return True
+        if self.free_slabs:
+            return True
+        if self.scheduler != "token_budget":
+            return False
+        victim = self._pick_victim()
+        if victim is not None and self.active[victim].priority < want_priority:
+            self._preempt(victim)
+            return True
+        return False
+
     def _admit_one(self, slot: int) -> bool:
         """Admit the next candidate into ``slot``. Preempted requests come
         strictly first (longest-waiting-first) so fresh arrivals can never
         starve a spilled request whose readmission they would outbid."""
         any_active = any(r is not None for r in self.active)
         free = len(self.free_pages)
-        if not self.paged:
-            req = self.queue.pop(0)
-            self.active[slot] = req
-            self._prefill_slot(slot, req)
-            return True
         if self.scheduler == "token_budget" and self.preempted:
             spill = min(self.preempted, key=lambda sp: sp.since)
-            need = min(kvc.pages_needed(spill.ctx_len, self.page_size)
-                       + self.headroom_pages,
-                       self._worst_case_pages(spill.req))
-            margin = self.resume_watermark if any_active else 0
-            if free - need < margin:
+            need = 0
+            if self._has_pages:
+                need = min(kvc.pages_needed(spill.ctx_len, self.page_size)
+                           + self.headroom_pages,
+                           self._worst_case_pages(spill.req) - self._cross_pp)
+                need += self._cross_pp
+                margin = self.resume_watermark if any_active else 0
+                if free - need < margin:
+                    return False
+            if not self._slab_available(spill.req.priority):
                 return False
             self.preempted.remove(spill)
-            self._resume(slot, spill, need)
+            self._spill_bytes -= spill.nbytes
+            self._resume(slot, spill, need - self._cross_pp)
             return True
         if not self.queue:
             return False
         req = self.queue[0]
-        if self.scheduler == "reserve":
-            need = self._worst_case_pages(req)
-            if free < need:
-                return False
-        else:
-            need = min(kvc.pages_needed(len(req.prompt), self.page_size)
-                       + self.headroom_pages, self._worst_case_pages(req))
-            margin = self.low_watermark if any_active else 0
-            if free - need < margin:
-                return False
+        ctx_len = len(req.resume_ctx if req.resume_ctx is not None
+                      else req.prompt)
+        need = 0
+        if self._has_pages:
+            if self.scheduler == "reserve":
+                need = self._worst_case_pages(req)
+                if free < need:
+                    return False
+            else:
+                need = min(kvc.pages_needed(ctx_len, self.page_size)
+                           + self.headroom_pages,
+                           self._worst_case_pages(req) - self._cross_pp)
+                need += self._cross_pp
+                margin = self.low_watermark if any_active else 0
+                if free - need < margin:
+                    return False
+        if not self._slab_available(req.priority):
+            return False
         self.queue.pop(0)
         self.active[slot] = req
         self._slot_seq[slot] = self._admit_seq
         self._slot_since[slot] = self._step_no
         self._admit_seq += 1
-        self._alloc(slot, need)
+        if self._has_pages:
+            self._alloc(slot, need - self._cross_pp)
+            if self._encdec:
+                self._alloc_cross(slot)
+        if self._has_slabs:
+            self._alloc_slab(slot)
         self._prefill_slot(slot, req)
         return True
 
     # -- streaming paged prefill ----------------------------------------------
+    def _state_for(self, rows, lengths, chunk_len=None):
+        """Build the PagedState for ``rows`` (a slice or index list)."""
+        return kvc.PagedState(
+            page_table=jnp.asarray(self.page_table[rows]),
+            lengths=jnp.asarray(lengths),
+            chunk_len=chunk_len,
+            cross_table=(jnp.asarray(self.cross_table[rows])
+                         if self._encdec else None),
+            enc_lengths=(jnp.asarray(self.enc_lengths[rows])
+                         if self._encdec else None),
+            slabs=(jnp.asarray(self.slab_table[rows])
+                   if self._has_slabs else None),
+        )
+
     def _prefill_slot(self, slot: int, req: Request):
-        """Prefill a new request. Paged engine: stream the prompt through
-        the model in page-aligned chunks, each chunk's K/V written straight
+        """Prefill a (re)admitted request: stream its context through the
+        model in page-aligned chunks, each chunk's K/V written straight
         into this slot's pages inside the jitted forward (no contiguous
-        max_seq scratch cache; the page table passed per chunk is trimmed
-        to the pages covering the prompt so far). Legacy engine: row-wise
-        monolithic prefill spliced into the batch cache."""
-        n = len(req.prompt)
-        if not self.paged:
-            toks = jnp.asarray([req.prompt], jnp.int32)
+        max_seq scratch cache). Chunk lengths and page-table widths are
+        bucketed to powers of two (pad + mask) so trace count is
+        O(log max_seq); recurrent families stream exact chunks (pad tokens
+        cannot be masked out of a recurrence). Enc-dec requests first run
+        the encoder once, writing every decoder layer's cross K/V into the
+        slot's write-once cross pages."""
+        ctx = req.resume_ctx if req.resume_ctx is not None else list(req.prompt)
+        fresh = req.resume_ctx is None
+        req.resume_ctx = None
+        n = len(ctx)
+        page = self.page_size
+        if self._encdec:
+            frames = jnp.asarray(req.frames, jnp.float32)[None]
+            table = jnp.asarray(self.cross_table[slot:slot + 1])
             with _backend_scope(self.kernel_backend):
-                logits, c1 = models.prefill(self.params, self.cfg,
-                                            {"tokens": toks}, self.max_seq,
-                                            a_fmt=self.a_fmt)
+                self.pools = _encode_cross_jit(self.params, frames,
+                                               self.pools, table,
+                                               cfg=self.cfg, a_fmt=self.a_fmt)
+            self.enc_lengths[slot] = self.cfg.encoder_seq
 
-            def splice(full, one):
-                return jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=1
-                )
-
-            self.caches = jax.tree.map(splice, self.caches, c1)
-            self.lengths[slot] = n
-            req.out.append(int(jnp.argmax(logits[0])))
-            return
-
-        chunk = self.prefill_chunk_pages * self.page_size
-        ids = self.slot_pages[slot]
+        chunk = self.prefill_chunk_pages * page
+        own = self.slot_pages[slot]
         logits = None
         pos = 0
         while pos < n:
             take = min(chunk, n - pos)
-            toks = jnp.asarray([req.prompt[pos: pos + take]], jnp.int32)
-            w = kvc.pages_needed(pos + take, self.page_size)
-            table = np.zeros((1, w), np.int32)
-            table[0] = ids[:w]
-            state = kvc.PagedState(jnp.asarray(table),
-                                   jnp.asarray([pos], jnp.int32))
+            if self._bucket_prefill:
+                padded = min(_next_pow2(take), chunk)
+                w = _next_pow2(pos // page + kvc.pages_needed(padded, page))
+            else:
+                padded = take
+                w = (kvc.pages_needed(pos + take, page) if self._has_pages
+                     else 1)
+            toks = ctx[pos: pos + take] + [0] * (padded - take)
+            table = np.full((1, w), self._null_page, np.int32)
+            m = min(w, len(own))
+            table[0, :m] = own[:m]
+            # chunk_len rides along for every prefill chunk (not just
+            # bucketed ones): models use it both to mask pad positions and
+            # to tell a 1-token chunk apart from a decode step
+            chunk_len = jnp.asarray([take], jnp.int32)
+            state = self._state_for(slice(slot, slot + 1),
+                                    np.asarray([pos], np.int32), chunk_len)
+            state = state._replace(page_table=jnp.asarray(table))
             with _backend_scope(self.kernel_backend):
                 logits, pools = self._decode(self.params, self.pools,
-                                             toks, state)
+                                             jnp.asarray([toks], jnp.int32),
+                                             state)
             self.pools = pools
+            self.prefill_traces.add((padded, w))
             pos += take
         self.lengths[slot] = n
         self.stats["prefill_tokens"] += n
-        req.out.append(int(jnp.argmax(logits[0])))
+        if fresh:
+            req.out.append(int(jnp.argmax(logits[0])))
 
     # -- preemption by page steal ----------------------------------------------
     def _preempt(self, slot: int):
-        """Steal this slot's pages: spill its page payload (codes + scales,
-        bit-exact) to host memory, return the pages to the pool, and park
-        the request for longest-waiting-first readmission."""
+        """Steal this slot's pages (and slab): spill its payload (codes +
+        scales + recurrent state, bit-exact) to host memory, return the
+        pages to the pool, and park the request for longest-waiting-first
+        readmission."""
         req = self.active[slot]
         ctx_len = int(self.lengths[slot])
         npg = kvc.pages_needed(ctx_len, self.page_size)
-        ids = jnp.asarray(self.slot_pages[slot][:npg], jnp.int32)
-        pages = []
-        for seg in self.pools:
-            pool = seg["kv"]
-            pages.append({name: np.asarray(leaf[:, ids])
-                          for name, leaf in pool.items()})
-        self.preempted.append(_Spill(req=req, ctx_len=ctx_len, pages=pages,
+        payload = []
+        nbytes = 0
+        for path, kind in self._units:
+            pool = self._unit(path)
+            if kind == "kv":
+                ids = jnp.asarray(self.slot_pages[slot][:npg], jnp.int32)
+            elif kind == "cross":
+                ids = jnp.asarray(self.slot_cross[slot], jnp.int32)
+            else:  # slab
+                ids = jnp.asarray([self.slot_slab[slot]], jnp.int32)
+            part = {name: np.asarray(leaf[:, ids])
+                    for name, leaf in pool.items()}
+            nbytes += sum(a.nbytes for a in part.values())
+            payload.append(part)
+        self.preempted.append(_Spill(req=req, ctx_len=ctx_len,
+                                     payload=payload, nbytes=nbytes,
                                      since=self._step_no,
                                      seq=self._slot_seq[slot]))
+        self._spill_bytes += nbytes
         req.preemptions += 1
         self.stats["preemptions"] += 1
-        self.stats["pages_stolen"] += len(self.slot_pages[slot])
+        self.stats["pages_stolen"] += (len(self.slot_pages[slot])
+                                       + len(self.slot_cross[slot]))
         self.free_pages.extend(self.slot_pages[slot])
+        self.free_pages.extend(self.slot_cross[slot])
         self.slot_pages[slot] = []
-        self.page_table[slot] = 0
+        self.slot_cross[slot] = []
+        self.page_table[slot] = self._null_page
+        self.cross_table[slot] = self._null_page
+        self.enc_lengths[slot] = 0
+        if self.slot_slab[slot] >= 0:
+            self.free_slabs.append(self.slot_slab[slot])
+            self.slot_slab[slot] = -1
+            self.slab_table[slot] = self._n_slabs
         self.lengths[slot] = 0
         self.active[slot] = None
 
-    def _resume(self, slot: int, spill: _Spill, need: int):
-        """Restore a spilled request into fresh pages (token-identical: the
-        page payload is bit-exact, and page ids are logical — attention
-        only sees the page table)."""
+    def _enforce_spill_budget(self):
+        """ROADMAP (b): host spills are bounded. When resident spill bytes
+        exceed ``spill_budget_bytes``, evict oldest-first: drop the spill's
+        bytes and re-queue its request at the head of the line with its
+        full context (prompt + tokens generated so far) marked for
+        re-prefill — the request still finishes, token-identically, it
+        just pays a prompt re-prefill instead of a byte restore.
+
+        Runs at the top of every engine step, never from inside
+        ``_preempt``: a steal can fire mid-admission (``_slab_available``),
+        and evicting there would mutate ``queue``/``preempted`` under
+        ``_admit_one``'s feet — the admitted request's ``queue.pop(0)``
+        would pop the freshly re-queued eviction instead. Enforcing at the
+        step boundary means the budget can overshoot by the spills of a
+        single scheduling round, and evicted requests re-enter admission
+        in the same step they are dropped."""
+        if self.spill_budget_bytes is None:
+            return
+        evicted = []
+        while (self._spill_bytes > self.spill_budget_bytes
+               and self.preempted):
+            sp = min(self.preempted, key=lambda s: s.since)
+            self.preempted.remove(sp)
+            self._spill_bytes -= sp.nbytes
+            req = sp.req
+            # KV context at preemption = prompt + out[:-1] (the newest token
+            # was produced but not yet fed back); re-prefilling exactly that
+            # context lets decode continue by feeding out[-1] as usual
+            req.resume_ctx = list(req.prompt) + list(req.out[:-1])
+            req.evictions += 1
+            self.stats["spill_evictions"] += 1
+            evicted.append(sp)
+        self.queue[:0] = [sp.req for sp in sorted(evicted,
+                                                  key=lambda s: s.since)]
+
+    def _resume(self, slot: int, spill: _Spill, need_kv: int):
+        """Restore a spilled request into fresh pages/slab (token-identical:
+        the payload is bit-exact, and page/slab ids are logical — the model
+        only sees the tables)."""
         self.active[slot] = spill.req
         self._slot_seq[slot] = spill.seq  # keeps its original age/priority
         self._slot_since[slot] = self._step_no
-        new_ids = self._alloc(slot, need)
+        new_kv: List[int] = []
+        new_cross: List[int] = []
+        if self._has_pages:
+            new_kv = self._alloc(slot, need_kv)
+            if self._encdec:
+                new_cross = self._alloc_cross(slot)
+                self.enc_lengths[slot] = self.cfg.encoder_seq
+        if self._has_slabs:
+            self._alloc_slab(slot, reset=False)  # restored from spill below
         npg = kvc.pages_needed(spill.ctx_len, self.page_size)
-        ids = jnp.asarray(new_ids[:npg], jnp.int32)
-        for i, seg_pages in enumerate(spill.pages):
-            pool = dict(self.pools[i]["kv"])
-            for name, arr in seg_pages.items():
+        for (path, kind), part in zip(self._units, spill.payload):
+            if kind == "kv":
+                ids = jnp.asarray(new_kv[:npg], jnp.int32)
+            elif kind == "cross":
+                ids = jnp.asarray(new_cross, jnp.int32)
+            else:  # slab
+                ids = jnp.asarray([self.slot_slab[slot]], jnp.int32)
+            pool = dict(self._unit(path))
+            for name, arr in part.items():
                 pool[name] = pool[name].at[:, ids].set(jnp.asarray(arr))
-            self.pools[i] = {"kv": pool}
+            self._set_unit(path, pool)
         self.lengths[slot] = spill.ctx_len
         self.stats["resumes"] += 1
 
     def _steal_for(self, needer: int) -> bool:
-        """Free pages by preempting the lowest-priority active request
-        (ties: most recently admitted). Requests inside the steal cooldown
-        are protected unless no other victim exists. The needer itself is a
-        valid victim — if it is the lowest-priority request running, it is
-        the one that yields."""
-        cands = [s for s, r in enumerate(self.active) if r is not None]
-        if not cands:
+        """Free pages by preempting the cooldown-aware lowest-priority
+        victim (see _pick_victim). The needer itself is a valid victim —
+        if it is the lowest-priority request running, it is the one that
+        yields."""
+        victim = self._pick_victim()
+        if victim is None:
             return False
-        warm = [s for s in cands
-                if self._step_no - self._slot_since[s] >= self.steal_cooldown]
-        pick_from = warm or cands
-        victim = min(pick_from,
-                     key=lambda s: (self.active[s].priority, -self._slot_seq[s]))
         self._preempt(victim)
         return True
 
@@ -408,6 +729,8 @@ class Server:
         the pool — stealing from the lowest-priority request on exhaustion.
         Rows are served in priority order (then admission order), so a
         steal always benefits the higher-priority work."""
+        if not self._has_pages:
+            return
         order = sorted(
             (s for s, r in enumerate(self.active) if r is not None),
             key=lambda s: (-self.active[s].priority, self._slot_seq[s]))
@@ -426,25 +749,33 @@ class Server:
         req.done = True
         self.active[slot] = None
         self.finished.append(req)
-        if not self.paged:
-            return
         # freed pages are NOT zeroed (that would rewrite the whole pool per
         # retirement): recycled pages are overwritten by the prefill stream,
         # and decode appends mask positions past the new owner's length
         # before recomputing page scales, so stale codes can never leak
         self.free_pages.extend(self.slot_pages[slot])
+        self.free_pages.extend(self.slot_cross[slot])
         self.slot_pages[slot] = []
-        self.page_table[slot] = 0
+        self.slot_cross[slot] = []
+        self.page_table[slot] = self._null_page
+        self.cross_table[slot] = self._null_page
+        self.enc_lengths[slot] = 0
+        if self.slot_slab[slot] >= 0:
+            self.free_slabs.append(self.slot_slab[slot])
+            self.slot_slab[slot] = -1
+            self.slab_table[slot] = self._n_slabs
         self.lengths[slot] = 0
 
     # -- engine step ----------------------------------------------------------
     def step(self):
-        """One decode step for all active slots. The paged engine passes
-        per-slot true lengths + the page table into the jitted step (per-row
-        positions and length masks); the legacy engine keeps the documented
-        common-index simplification. Returns True if any slot decoded."""
+        """One decode step for all active slots. Per-slot true lengths, the
+        page table (and for enc-dec the cross table / for recurrent
+        families the slab ids) ride into the jitted step as inputs —
+        per-row positions and length masks, one fixed-shape program.
+        Returns True if any slot decoded."""
+        self._enforce_spill_budget()
         self._admit()
-        if self.paged and self.scheduler == "token_budget":
+        if self.scheduler == "token_budget":
             self._grow()
         if not any(self.active):
             return False
@@ -455,16 +786,10 @@ class Server:
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 tok[s, 0] = req.out[-1]
+        state = self._state_for(slice(None), self.lengths)
         with _backend_scope(self.kernel_backend):
-            if self.paged:
-                state = kvc.PagedState(jnp.asarray(self.page_table),
-                                       jnp.asarray(self.lengths))
-                logits, self.pools = self._decode(self.params, self.pools,
-                                                  jnp.asarray(tok), state)
-            else:
-                idx = int(self.lengths.max())
-                logits, self.caches = self._decode(self.params, self.caches,
-                                                   jnp.asarray(tok), idx)
+            logits, self.pools = self._decode(self.params, self.pools,
+                                              jnp.asarray(tok), state)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for s, req in enumerate(self.active):
             if req is None:
@@ -494,7 +819,8 @@ class Server:
                 f"serving starved: {len(self.queue)} queued + "
                 f"{len(self.preempted)} preempted request(s) cannot be "
                 f"(re)admitted with {len(self.free_pages)}/{self._n_pages} "
-                "pool pages free and no active work to retire — the pool is "
+                f"pool pages and {len(self.free_slabs)}/{self._n_slabs} "
+                "slabs free and no active work to retire — the pool is "
                 "too small for the waiting context (or pages leaked)")
         else:
             pending = (len(self.queue) + len(self.preempted)
@@ -514,11 +840,11 @@ class Server:
         return self.stats["slot_steps"] / (self.stats["steps"] * self.slots)
 
     def kv_bytes_per_token(self) -> float:
-        """Pool bytes per token slot across the whole layer stack (paged
-        engine only) — the number the FP8 pool halves vs bf16."""
-        assert self.paged
-        return sum(kvc.pool_bytes_per_token(p["kv"]) for p in self.pools)
+        """Pool bytes per token slot across the whole layer stack (page
+        units only) — the number the FP8 pool halves vs bf16."""
+        return sum(kvc.pool_bytes_per_token(self._unit(path))
+                   for path, kind in self._units if kind in ("kv", "cross"))
 
     def kv_bf16_bytes_per_token(self) -> float:
-        assert self.paged
-        return sum(kvc.bf16_bytes_per_token(p["kv"]) for p in self.pools)
+        return sum(kvc.bf16_bytes_per_token(self._unit(path))
+                   for path, kind in self._units if kind in ("kv", "cross"))

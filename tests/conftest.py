@@ -32,3 +32,51 @@ def trained_tiny():
     oc = AdamWConfig(lr=8e-3, warmup=20, total_steps=150)
     state, _ = train_loop(cfg, dc, oc, TrainLoopConfig(steps=150, log_every=150))
     return cfg, state.params
+
+
+@pytest.fixture(scope="session")
+def trained_tiny_mla():
+    """A briefly-trained MLA smoke config (minicpm3 shape) for paged-vs-
+    legacy greedy parity through the latent decode kernel."""
+    from repro.configs import get_smoke
+    from repro.data.pipeline import DataConfig
+    from repro.optimizer import AdamWConfig
+    from repro.runtime.train import TrainLoopConfig, train_loop
+
+    cfg = get_smoke("minicpm3-4b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=5)
+    oc = AdamWConfig(lr=6e-3, warmup=20, total_steps=150)
+    state, _ = train_loop(cfg, dc, oc, TrainLoopConfig(steps=150, log_every=150))
+    return cfg, state.params
+
+
+@pytest.fixture(scope="session")
+def trained_tiny_encdec():
+    """A briefly-trained whisper smoke config. The synthetic corpus drives
+    the decoder; frames are random per step, so the learned logit gaps come
+    from token structure and stay decisive under any request's frames."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.launch.steps import TrainState, make_train_step
+    from repro.optimizer import AdamWConfig, adamw_init
+    from repro import models
+
+    cfg = get_smoke("whisper-tiny")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=24, global_batch=8, seed=7)
+    oc = AdamWConfig(lr=6e-3, warmup=20, total_steps=150)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params=params, opt=adamw_init(params, oc))
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnums=(0,))
+    data = SyntheticLM(dc)
+    frng = np.random.default_rng(11)
+    for step in range(150):
+        b = dict(data.batch(step))
+        b["frames"] = jnp.asarray(frng.normal(
+            size=(dc.global_batch, cfg.encoder_seq, cfg.d_model)
+        ).astype(np.float32))
+        state, _ = step_fn(state, b)
+    return cfg, state.params

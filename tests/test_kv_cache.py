@@ -205,6 +205,69 @@ def _mla_smoke_cfg():
     return get_smoke("minicpm3-4b")
 
 
+def _filled_mla_pool(rng, r, dr, page, pp, lens, fmt):
+    """A 1-layer MLA latent pool spliced with per-row random prompts."""
+    b = len(lens)
+    pool = kvc.init_mla_pool(1, b * pp, page, r, dr, fmt)
+    pt = np.zeros((b, pp), np.int32)
+    ck = rng.normal(size=(b, 1, 1, pp * page, r)).astype(np.float32)
+    kr = rng.normal(size=(b, 1, 1, pp * page, dr)).astype(np.float32)
+    for row in range(b):
+        npg = kvc.pages_needed(int(lens[row]), page)
+        ids = np.arange(row * pp, row * pp + npg, dtype=np.int32)
+        pt[row, :npg] = ids
+        pool = kvc.splice_prefill(
+            pool, {"ckv": jnp.asarray(ck[row]), "krope": jnp.asarray(kr[row])},
+            ids, int(lens[row]))
+    layer = {k: v[0] for k, v in pool.items()}
+    return layer, pt, ck[:, 0, 0], kr[:, 0, 0]
+
+
+class TestPagedMLAKernel:
+    """The latent flash-decoding kernel (KV = 1 head, k = concat(ckv,
+    krope), v = ckv view) vs the jnp oracle and the exact numpy softmax."""
+
+    @pytest.mark.parametrize("h,r,dr,page,pp", [
+        (4, 16, 8, 8, 3),    # minicpm3-ish smoke
+        (8, 32, 16, 16, 2),  # wider latent
+        (3, 16, 8, 4, 4),    # odd head count (bq padding path)
+        (16, 64, 32, 8, 2),  # many heads, deepseek-ish ratio
+    ])
+    def test_kernel_matches_oracle(self, h, r, dr, page, pp):
+        rng = np.random.default_rng(hash((h, r, dr, page)) % 2**31)
+        lens = np.array([page * pp - 3, max(1, page // 2)], np.int32)
+        ql = jnp.asarray(rng.normal(size=(2, h, r)).astype(np.float32))
+        qr = jnp.asarray(rng.normal(size=(2, h, dr)).astype(np.float32))
+        scale = 1.0 / float(r + dr) ** 0.5
+        prev = ops.get_backend()
+        try:
+            for fmt in ("fp8_e4m3", None):
+                layer, pt, ck, kr = _filled_mla_pool(rng, r, dr, page, pp,
+                                                     lens, fmt)
+                ops.set_backend("ref")
+                o_ref = ops.paged_mla_decode_attn(
+                    ql, qr, layer, jnp.asarray(pt), jnp.asarray(lens), scale)
+                ops.set_backend("pallas")
+                o_pal = ops.paged_mla_decode_attn(
+                    ql, qr, layer, jnp.asarray(pt), jnp.asarray(lens), scale)
+                np.testing.assert_allclose(np.asarray(o_pal),
+                                           np.asarray(o_ref),
+                                           rtol=2e-5, atol=2e-5)
+                # vs the exact (unquantized, unpaged) softmax
+                for row in range(2):
+                    n = int(lens[row])
+                    s = (np.asarray(ql[row]) @ ck[row, :n].T
+                         + np.asarray(qr[row]) @ kr[row, :n].T) * scale
+                    p = np.exp(s - s.max(-1, keepdims=True))
+                    p /= p.sum(-1, keepdims=True)
+                    exact = p @ ck[row, :n]
+                    err = np.abs(np.asarray(o_ref[row]) - exact).max()
+                    tol = 0.12 if fmt else 0.01
+                    assert err / (np.abs(exact).max() + 1e-9) < tol, (fmt, err)
+        finally:
+            ops.set_backend(prev)
+
+
 class TestPagedMLA:
     @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
     def test_paged_decode_matches_legacy(self, kv_fmt):
@@ -241,10 +304,13 @@ class TestPagedMLA:
         assert np.abs(a - b).max() / scale < tol
 
 
-def _greedy_legacy(params, cfg, prompt, max_new, max_seq=64):
-    """Reference greedy loop over the contiguous (non-paged) cache."""
-    toks = jnp.asarray([prompt], jnp.int32)
-    logits, caches = models.prefill(params, cfg, {"tokens": toks}, max_seq)
+def _greedy_legacy(params, cfg, prompt, max_new, max_seq=64, frames=None):
+    """Reference greedy loop over the contiguous (non-paged) cache — the
+    pre-paged-engine decode path kept by the model layer."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if frames is not None:
+        batch["frames"] = jnp.asarray(frames[None])
+    logits, caches = models.prefill(params, cfg, batch, max_seq)
     out = [int(jnp.argmax(logits[0]))]
     idx = len(prompt)
     while len(out) < max_new:
@@ -337,10 +403,99 @@ class TestServerPaged:
         with pytest.raises(ValueError, match="pages"):
             srv.submit(Request(rid=0, prompt=list(range(1, 20)), max_new=10))
 
-    def test_unpageable_family_rejects_kv_fmt(self):
-        from repro.configs import get_smoke
+    def test_mla_served_greedy_matches_legacy(self, trained_tiny_mla):
+        """The acceptance claim for MLA: the paged engine (latent decode
+        kernel path) reproduces the legacy contiguous-cache greedy output,
+        bf16 and fp8, on a trained model with decisive logits."""
+        cfg, params = trained_tiny_mla
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+                   for n in (5, 11, 3)]
+        for kv_fmt in (None, "fp8_e4m3"):
+            batch, _ = self._serve(params, cfg, kv_fmt, prompts)
+            for i, p in enumerate(prompts):
+                assert batch[i] == _greedy_legacy(params, cfg, p, 6), (kv_fmt, i)
 
-        cfg = get_smoke("whisper-tiny")
-        params = models.init_params(cfg, jax.random.PRNGKey(0))
-        with pytest.raises(ValueError, match="kv_fmt"):
-            Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3")
+
+class TestServerEncDec:
+    """Whisper-style enc-dec on the paged engine: write-once cross pages +
+    paged decoder self-attention, admission charging prompt + encoder
+    pages — the family that used to keep the legacy monolithic engine."""
+
+    def _reqs(self, cfg, rng, n=3):
+        prompts = [rng.integers(1, cfg.vocab_size, size=m).tolist()
+                   for m in (5, 9, 3)[:n]]
+        frames = [rng.normal(size=(cfg.encoder_seq, cfg.d_model))
+                  .astype(np.float32) for _ in prompts]
+        return prompts, frames
+
+    def _serve(self, params, cfg, kv_fmt, prompts, frames, max_new=6):
+        srv = Server(params, cfg, slots=len(prompts), max_seq=64,
+                     kv_fmt=kv_fmt, page_size=8, a_fmt=None)
+        for i, (p, f) in enumerate(zip(prompts, frames)):
+            srv.submit(Request(rid=i, prompt=list(p), max_new=max_new,
+                               frames=f))
+        done = srv.run_until_drained()
+        return {r.rid: r.out for r in done}, srv
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_paged_matches_legacy_greedy(self, trained_tiny_encdec, kv_fmt):
+        """Acceptance: enc-dec greedy through the paged engine (bf16 and
+        fp8 pages) is token-identical to the pre-paged legacy engine."""
+        cfg, params = trained_tiny_encdec
+        rng = np.random.default_rng(0)
+        prompts, frames = self._reqs(cfg, rng)
+        batch, srv = self._serve(params, cfg, kv_fmt, prompts, frames)
+        for i, (p, f) in enumerate(zip(prompts, frames)):
+            assert batch[i] == _greedy_legacy(params, cfg, p, 6, frames=f), i
+        if kv_fmt:  # FP8 cross+self pages still halve the KV bytes
+            ratio = srv.kv_bytes_per_token() / srv.kv_bf16_bytes_per_token()
+            assert ratio <= 0.55, ratio
+
+    def test_admission_charges_encoder_pages(self, trained_tiny_encdec):
+        """Admission must charge pages(prompt) + pages(encoder_seq): a pool
+        that fits the prompt but not the cross pages cannot admit."""
+        cfg, params = trained_tiny_encdec
+        rng = np.random.default_rng(1)
+        prompts, frames = self._reqs(cfg, rng, n=1)
+        cross_pp = kvc.pages_needed(cfg.encoder_seq, 8)
+        srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                     page_size=8, pool_pages=cross_pp, a_fmt=None)
+        with pytest.raises(ValueError, match="pages"):
+            srv.submit(Request(rid=0, prompt=prompts[0], max_new=4,
+                               frames=frames[0]))
+
+    def test_missing_frames_fails_fast(self, trained_tiny_encdec):
+        cfg, params = trained_tiny_encdec
+        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=8, a_fmt=None)
+        with pytest.raises(ValueError, match="frames"):
+            srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+
+    def test_cross_pages_survive_steal_resume(self, trained_tiny_encdec):
+        """Preemption spills cross pages with the rest of the payload:
+        a stolen-and-resumed enc-dec request is token-identical to an
+        uncontended solo run."""
+        cfg, params = trained_tiny_encdec
+        rng = np.random.default_rng(4)
+        prompts, frames = self._reqs(cfg, rng, n=2)
+        # prompts (5, 9) charge 2+1 and 3+1 pages + cross_pp each; both fit
+        # at admission, but growth to 15 and 19 tokens (4 + 5 pages) wants
+        # one page more than the pool holds -> exactly one steal + resume
+        cross_pp = kvc.pages_needed(cfg.encoder_seq, 4)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=8 + 2 * cross_pp, a_fmt=None)
+        reqs = [Request(rid=i, prompt=list(p), max_new=10, frames=f)
+                for i, (p, f) in enumerate(zip(prompts, frames))]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert srv.stats["preemptions"] >= 1 and srv.stats["resumes"] >= 1
+        for r in reqs:
+            solo = Server(params, cfg, slots=1, max_seq=32,
+                          kv_fmt="fp8_e4m3", page_size=4, a_fmt=None)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=10,
+                          frames=r.frames)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)

@@ -224,6 +224,225 @@ class TestStreamingPrefill:
             assert np.abs(lr - ls).max() / (np.abs(lr).max() + 1e-9) < tol
 
 
+class TestSpillBudget:
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_eviction_requeues_and_finishes_token_identical(self, trained_tiny,
+                                                            kv_fmt):
+        """ROADMAP (b): with a zero spill budget every preemption evicts —
+        the spilled bytes are dropped and the request re-queues for a full
+        context re-prefill — yet every request still finishes with the same
+        greedy tokens as an uncontended solo run (no host OOM path left)."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(1, cfg.vocab_size, size=5).tolist()
+                   for _ in range(2)]
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt=kv_fmt,
+                     page_size=4, pool_pages=6, a_fmt=None,
+                     spill_budget_bytes=0)
+        reqs = [Request(rid=i, prompt=list(p), max_new=10)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            srv.submit(r)
+        _drain_checked(srv)
+        assert srv.stats["preemptions"] >= 1
+        assert srv.stats["spill_evictions"] >= 1
+        assert srv._spill_bytes == 0 and not srv.preempted
+        assert any(r.evictions >= 1 for r in reqs)
+        for r in reqs:
+            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
+                          page_size=4, a_fmt=None)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+    def test_budget_keeps_newest_spills_resident(self, trained_tiny):
+        """A budget large enough for one spill keeps the newest resident
+        (oldest-first eviction) instead of dropping everything."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(3)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=6, a_fmt=None,
+                     spill_budget_bytes=1 << 30)
+        reqs = [Request(rid=i, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10) for i in range(2)]
+        for r in reqs:
+            srv.submit(r)
+        _drain_checked(srv)
+        assert srv.stats["preemptions"] >= 1
+        assert srv.stats["spill_evictions"] == 0  # generous budget: no evicts
+        assert srv.stats["resumes"] == srv.stats["preemptions"]
+
+
+class TestPrefillBucketing:
+    def test_trace_count_logarithmic(self, trained_tiny):
+        """ROADMAP (a): a high-entropy prompt-length workload must compile
+        O(log max_seq) prefill programs, not one per distinct length. The
+        engine records each distinct (padded_chunk, table_width) signature
+        it feeds the jitted step — with a fixed config that set IS the
+        trace-cache key set."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(0)
+        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None, prefill_chunk_pages=4)
+        lengths = list(range(3, 28))  # 25 distinct prompt lengths
+        rng.shuffle(lengths)
+        for i, n in enumerate(lengths):
+            srv.submit(Request(rid=i, prompt=rng.integers(1, 64, n).tolist(),
+                               max_new=2))
+        done = srv.run_until_drained()
+        assert len(done) == len(lengths)
+        assert srv._bucket_prefill
+        # pow2 chunk lengths x pow2 table widths: far below the 25 distinct
+        # (chunk_len, width) pairs the unbucketed engine would compile
+        assert len(srv.prefill_traces) <= 8, sorted(srv.prefill_traces)
+        for padded, w in srv.prefill_traces:
+            assert padded & (padded - 1) == 0, (padded, w)
+            assert w & (w - 1) == 0, (padded, w)
+
+    def test_bucketed_prefill_token_identical(self, trained_tiny):
+        """Pad+mask must not change numerics: bucketed streaming prefill
+        reproduces the legacy contiguous-cache greedy output exactly on
+        bf16 pages for lengths exercising every pad path."""
+        from test_kv_cache import _greedy_legacy
+
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(9)
+        for n in (1, 3, 8, 13, 17, 30):
+            prompt = rng.integers(1, cfg.vocab_size, size=n).tolist()
+            srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt=None,
+                         page_size=4, a_fmt=None, prefill_chunk_pages=2)
+            r = Request(rid=0, prompt=list(prompt), max_new=5)
+            srv.submit(r)
+            srv.run_until_drained()
+            assert r.out == _greedy_legacy(params, cfg, prompt, 5), n
+
+
+class TestStateSlabs:
+    def test_slab_fuzz_steal_resume_bit_identity(self):
+        """Seeded fuzz on a slab-starved xLSTM pool (3 slots, 2 slabs):
+        priority arrivals force slab steals; every spill/resume restores
+        the recurrent state bit-exactly, so each request's output equals
+        its uncontended solo run — even at random init, where any
+        numerical drift would flip tokens."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(13)
+        srv = Server(params, cfg, slots=3, max_seq=32, a_fmt=None,
+                     pool_slabs=2, prefill_chunk_pages=1, page_size=4,
+                     steal_cooldown=1)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab_size,
+                                            rng.choice([3, 5, 9])).tolist(),
+                        max_new=int(rng.choice([2, 5, 8])),
+                        priority=int(i % 3))
+                for i in range(9)]
+        pending = list(reqs)
+        for _ in range(2):
+            srv.submit(pending.pop(0))
+        for step in range(500):
+            went = srv.step()
+            # slab accounting invariants: owned + free partition the pool
+            owned = [s for s in srv.slot_slab if s >= 0]
+            assert len(owned) == len(set(owned))
+            assert sorted(owned + srv.free_slabs) == list(range(srv._n_slabs))
+            if pending and step % 2 == 0:
+                srv.submit(pending.pop(0))
+            if (not went and not pending and not srv.queue
+                    and not srv.preempted):
+                break
+        assert len(srv.finished) == len(reqs)
+        assert srv.stats["preemptions"] >= 1, "fuzz should exercise steals"
+        assert sorted(srv.free_slabs) == list(range(srv._n_slabs))
+        for r in reqs:
+            solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
+                          prefill_chunk_pages=1, page_size=4)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+    def test_priority_slab_steal_under_zero_budget_loses_nothing(self):
+        """Regression: a slab steal fires *mid-admission* (the arriving
+        request outbids the runner), and with a zero spill budget the
+        victim is immediately evicted into the queue. Budget enforcement
+        must not run inside the preempt (it would mutate the queue under
+        _admit_one's feet and pop the wrong request) — both requests must
+        finish, token-identical to solo runs."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
+                     pool_slabs=1, prefill_chunk_pages=1, page_size=4,
+                     spill_budget_bytes=0, steal_cooldown=0)
+        lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=8, priority=0)
+        hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=4, priority=1)
+        srv.submit(lo)
+        srv.step()  # lo running on the only slab
+        srv.submit(hi)  # outbids lo -> slab steal mid-admission + eviction
+        srv.run_until_drained()
+        assert lo.done and hi.done
+        assert srv.stats["preemptions"] >= 1
+        assert srv.stats["spill_evictions"] >= 1 and lo.evictions >= 1
+        for r in (lo, hi):
+            solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
+                          prefill_chunk_pages=1, page_size=4)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+    def test_reserve_scheduler_never_slab_steals(self):
+        """Regression: reserve-on-admit's contract is that admitted work is
+        never preempted — a slab-starved high-priority arrival must wait
+        for retirement, not steal (the stolen victim could never resume:
+        spill readmission is a token-budget mechanism)."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(5)
+        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
+                     pool_slabs=1, prefill_chunk_pages=1, page_size=4,
+                     scheduler="reserve", steal_cooldown=0)
+        lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=6, priority=0)
+        hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
+                     max_new=4, priority=1)
+        srv.submit(lo)
+        srv.step()
+        srv.submit(hi)  # must wait for lo's slab, not steal it
+        srv.run_until_drained()
+        assert lo.done and hi.done
+        assert srv.stats["preemptions"] == 0
+
+    def test_xlstm_stream_matches_full_prefill(self):
+        """Chunked streaming prefill carries the (c, n, m) + conv state
+        across chunks exactly: the final-chunk logits argmax matches the
+        one-shot legacy prefill (this is what the _mlstm_chunked carry fix
+        makes true for T > chunk)."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(2)
+        prompt = rng.integers(1, cfg.vocab_size, size=13).tolist()
+        logits_ref, _ = models.prefill(
+            params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)}, 32)
+        srv = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
+                     prefill_chunk_pages=1, page_size=4)
+        r = Request(rid=0, prompt=list(prompt), max_new=1)
+        srv.submit(r)
+        srv.run_until_drained()
+        assert r.out[0] == int(jnp.argmax(logits_ref[0]))
+
+
 class TestSchedulerPolicy:
     def test_low_watermark_defers_fresh_admission(self):
         """With active work running, fresh admission must leave
