@@ -12,6 +12,12 @@ kernel in interpret mode (slow on CPU; bit-identical quantization).
 once cross-attention pages) and the minicpm3 MLA config (latent decode
 kernel) through the same paged FP8 engine, asserting each request's greedy
 tokens are identical to the legacy contiguous-cache decode path.
+
+``--shared-prefix N`` prepends an N-token shared system prompt to every
+request: after the first request freezes its full prompt pages, every
+later request maps them straight from the content-addressed prefix cache
+(refcount++, zero prefill compute) and streams only its own tail. Compare
+against ``--no-prefix-cache`` to see the cold-engine cost.
 """
 import argparse
 import os
@@ -140,6 +146,15 @@ def main():
                     help="page-pool capacity (0 = fully backed slots); set "
                          "it tight to watch the token-budget scheduler "
                          "preempt by page steal")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared system prompt of this many "
+                         "tokens to every request — full scale-frozen "
+                         "pages of it are served from the content-"
+                         "addressed prefix cache (refcounted, zero "
+                         "prefill compute) after the first request")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the shared-prefix page cache (cold "
+                         "baseline for --shared-prefix)")
     ap.add_argument("--families", action="store_true",
                     help="also serve the whisper-tiny enc-dec and minicpm3 "
                          "MLA smoke configs through the paged FP8 engine "
@@ -168,17 +183,23 @@ def main():
     # 'pallas' routes every PackedLinear matmul through the fused single-pass
     # W4A8 kernel (compiled on TPU, interpreter elsewhere)
     kv_fmt = None if args.kv_fmt == "bf16" else args.kv_fmt
+    page_size = 16 if args.shared_prefix else 32
     server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
-                    kernel_backend=args.backend, kv_fmt=kv_fmt, page_size=32,
-                    scheduler=args.scheduler,
-                    pool_pages=args.pool_pages or None)
+                    kernel_backend=args.backend, kv_fmt=kv_fmt,
+                    page_size=page_size, scheduler=args.scheduler,
+                    pool_pages=args.pool_pages or None,
+                    prefix_cache=not args.no_prefix_cache)
     print(f"kv cache: paged {args.kv_fmt}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
           f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
           f"scheduler={args.scheduler}")
+    shared = (rng.integers(1, BENCH_CFG.vocab_size,
+                           size=args.shared_prefix).tolist()
+              if args.shared_prefix else [])
     reqs = []
     for rid in range(args.requests):
-        prompt = rng.integers(1, BENCH_CFG.vocab_size, size=rng.integers(3, 10)).tolist()
+        prompt = shared + rng.integers(1, BENCH_CFG.vocab_size,
+                                       size=rng.integers(3, 10)).tolist()
         max_new = args.max_new
         if args.max_new_tail and rid % 3 == 0:
             max_new = args.max_new_tail
@@ -200,9 +221,15 @@ def main():
     print(f"slot utilization {server.utilization():.3f}, "
           f"{server.stats['preemptions']} preemptions / "
           f"{server.stats['resumes']} resumes "
-          f"({server.stats['pages_stolen']} pages stolen)")
+          f"({server.stats['pages_stolen']} pages stolen), "
+          f"{server.stats['truncated']} truncated at max_seq")
+    print(f"prefix cache: {server.stats['prefix_hit_tokens']} prompt tokens "
+          f"served from shared pages ({server.prefix_hit_rate():.1%} hit "
+          f"rate, {server.stats['prefix_hit_pages']} page hits, "
+          f"{server.stats['prefix_reclaims']} reclaims)")
     for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.prompt} -> {r.out}")
+        tag = " [truncated]" if r.truncated else ""
+        print(f"  req {r.rid}: {r.prompt} -> {r.out}{tag}")
     ops.set_backend("ref")
 
 

@@ -48,7 +48,8 @@ hack in the serving engine; models treat it as an opaque pytree.
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional
+from collections import OrderedDict
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +61,8 @@ from repro.kernels.common import decode_fp8
 
 __all__ = [
     "PagedState",
+    "PrefixCache",
+    "page_key",
     "init_gqa_pool",
     "init_mla_pool",
     "init_cross_pool",
@@ -437,6 +440,163 @@ def gather_history(pool_layer: Dict, state: PagedState, chunk_len: int):
     return ({name: gather_pages(pool_layer, name, state)
              for name in pool_keys(pool_layer)},
             state.page_table.shape[1] * page)
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed shared-prefix cache (host-side index over frozen pages)
+# ---------------------------------------------------------------------------
+_PREFIX_ROOT = -1  # the parent node id of every depth-0 page
+
+
+def page_key(parent: int, tokens: Sequence[int]) -> Tuple:
+    """Content address of one *full* page: the page's token ids chained on
+    the parent page's *node id* (an integer assigned at registration and
+    never reissued), so the key identifies the whole prefix up to and
+    including this page — two identical token windows at different depths,
+    or under different histories, never collide. Keys are exact token
+    tuples, not hashes, so there is no collision risk; the integer parent
+    keeps each dict lookup O(page_size) instead of re-hashing the whole
+    ancestor chain (a nested-tuple parent would make a d-page walk
+    O(d^2 * page_size))."""
+    return (parent, tuple(int(t) for t in tokens))
+
+
+class PrefixCache:
+    """Host-side radix index over *full, scale-frozen* KV pages.
+
+    ZeroQuant-FP's scaling constraints make a full FP8 page an immutable,
+    self-contained block: once the prefill stream (or the last decode
+    append that filled it) has passed a page, its per-(page, head) M2
+    scales are frozen at amax and the codes are never requantized again.
+    That makes the page content a pure function of its token-id prefix, so
+    full pages are content-addressable: requests sharing a prompt prefix
+    (system prompts, few-shot headers) can map the same physical pages
+    instead of re-prefilling and re-quantizing identical K/V.
+
+    The index maps ``page_key(parent, tokens)`` -> page id, one entry per
+    registered page (and one key per page: a page holds exactly one
+    content). Ownership/refcounts live in the serving engine; the cache
+    additionally tracks the **reusable LRU** — registered pages whose
+    refcount dropped to zero. Those stay bit-reusable (a later request with
+    the same prefix re-acquires them for free) until the allocator
+    *reclaims* them, oldest-first, which drops the index entry and hands
+    the physical page back as a blank. Reclaiming a mid-chain page strands
+    its descendants (the walk can no longer reach them) — they simply age
+    out of the LRU in turn.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        # key -> (pid, node id). The node id stands in for the full chain
+        # as the parent component of children's keys; it is monotonically
+        # assigned and never reissued, so a reclaimed page's stranded
+        # descendants can never be re-attached under recycled-pid content
+        self._by_key: Dict[Tuple, Tuple[int, int]] = {}
+        self._by_pid: Dict[int, Tuple] = {}
+        # refcount-0 registered pages, oldest-parked first
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._next_node = 0
+        self.reclaims = 0
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    @property
+    def n_reusable(self) -> int:
+        """Registered pages at refcount 0 — allocatable without stealing."""
+        return len(self._lru)
+
+    def reusable_ids(self) -> List[int]:
+        """The parked refcount-0 page ids, oldest first (LRU order)."""
+        return list(self._lru)
+
+    def registered(self, pid: int) -> bool:
+        return int(pid) in self._by_pid
+
+    def walk(self, tokens: Sequence[int], max_pages: Optional[int] = None
+             ) -> List[int]:
+        """Longest chain of consecutive full-page hits for this token
+        prefix, from the root: returns the page ids holding
+        ``tokens[:len(hits) * page_size]``. ``max_pages`` caps the walk
+        (the engine always leaves at least the last context token to the
+        prefill stream, so admission caps at ``(len - 1) // page_size``)."""
+        page = self.page_size
+        limit = len(tokens) // page
+        if max_pages is not None:
+            limit = min(limit, max_pages)
+        pids: List[int] = []
+        parent = _PREFIX_ROOT
+        for i in range(limit):
+            key = page_key(parent, tokens[i * page: (i + 1) * page])
+            hit = self._by_key.get(key)
+            if hit is None:
+                break
+            pids.append(hit[0])
+            parent = hit[1]
+        return pids
+
+    def insert(self, tokens: Sequence[int], pids: Sequence[int]) -> List[int]:
+        """Register the full pages covering ``tokens[:len(pids) * page]``
+        (``pids[i]`` holds page ``i``'s frozen content). Returns the
+        *canonical* pid per page: where the chain key already exists (an
+        identical prefix was registered first), the existing page wins and
+        the caller is expected to adopt it — releasing its duplicate —
+        which keeps every slot's shared pages one contiguous leading run."""
+        page = self.page_size
+        out: List[int] = []
+        parent = _PREFIX_ROOT
+        for i, pid in enumerate(pids):
+            pid = int(pid)
+            key = page_key(parent, tokens[i * page: (i + 1) * page])
+            cur = self._by_key.get(key)
+            if cur is None:
+                assert pid not in self._by_pid, \
+                    f"page {pid} already registered under another prefix"
+                cur = (pid, self._next_node)
+                self._next_node += 1
+                self._by_key[key] = cur
+                self._by_pid[pid] = key
+            out.append(cur[0])
+            parent = cur[1]
+        return out
+
+    def park(self, pid: int):
+        """A registered page's refcount hit zero: keep it bit-reusable in
+        the LRU instead of freeing it (reclaim drains oldest-first)."""
+        pid = int(pid)
+        assert pid in self._by_pid, f"parking unregistered page {pid}"
+        self._lru[pid] = None
+        self._lru.move_to_end(pid)
+
+    def unpark(self, pid: int):
+        """A parked page was re-acquired (refcount 0 -> 1 via a hit)."""
+        self._lru.pop(int(pid), None)
+
+    def reclaim(self) -> Optional[int]:
+        """Hand the least-recently-used refcount-0 page back to the
+        allocator as a blank: drop its index entry (the content is gone for
+        sharing purposes) and return the pid. None when nothing is
+        parked."""
+        if not self._lru:
+            return None
+        pid, _ = self._lru.popitem(last=False)
+        key = self._by_pid.pop(pid)
+        del self._by_key[key]
+        self.reclaims += 1
+        return pid
+
+    def assert_unfrozen(self, page_ids: Iterable[int]):
+        """Frozen-page invariant: a registered page is shared-frozen —
+        content-addressed and possibly mapped by several slots — so no
+        write path (prefill chunk, decode append, spill restore) may ever
+        target it. The serving engine checks every write set against this
+        before issuing the write."""
+        for pid in page_ids:
+            if int(pid) in self._by_pid:
+                raise AssertionError(
+                    f"write targets shared-frozen page {int(pid)}: frozen "
+                    "pages are immutable (copy-on-write means the boundary "
+                    "page must be private)")
 
 
 # ---------------------------------------------------------------------------

@@ -39,9 +39,11 @@ Scheduling (``scheduler`` knob):
     pool, so it resumes token-identically — bit-identical contents are
     restored into whatever pages are free — once capacity returns.
     Watermarks and a steal cooldown give anti-thrash hysteresis;
-    readmission is longest-waiting-first, with preempted requests strictly
-    ahead of fresh ones (no overtaking — fresh work cannot starve a
-    spilled request). Host spill residency is bounded by
+    readmission is one global longest-waiting-first wait line over spilled
+    *and* fresh requests, keyed by (step entered the line, arrival seq) —
+    the head of the line is never overtaken while it does not fit, and a
+    budget-evicted spill keeps the place it already earned. Host spill
+    residency is bounded by
     ``spill_budget_bytes``: when exceeded, the oldest spill is *evicted* —
     its request re-queues at the head of the line and re-prefills its full
     context instead of restoring bytes (host memory can no longer OOM on
@@ -63,9 +65,27 @@ with per-(page, head) M2 scales (~0.52x the bytes of bf16 -> ~2x the slot
 pool per HBM byte), ``None`` keeps bf16 pages as the fallback path. Both
 run the same paged decode attention with per-slot *true* lengths — rows
 carry their own positions and length masks end to end.
+
+Page ownership is **refcounted**, and full scale-frozen prompt pages are
+**content-addressable** (``prefix_cache=True``, pure page families only):
+once the prefill stream passes a page its per-(page, head) M2 scales are
+frozen at amax and the codes never requantize again, so the page content
+is a pure function of its token-id prefix. A host-side radix index
+(runtime.kv_cache.PrefixCache) registers every full prompt page after its
+prefill; admission walks a request's prompt through the index and maps
+every hit straight into the slot's page table (refcount++, zero prefill
+compute), streaming only the uncached tail through the prefill. The
+boundary page is always private — only *full* pages are ever shared — so
+the decode append's in-place requantize can never touch a shared page:
+copy-on-write falls out structurally. Pages whose refcount drops to zero
+park in an LRU reusable set that the allocator reclaims *before* any live
+request is stolen from; preemption spills only privately-owned payload and
+re-resolves the shared prefix through the index on resume (falling back to
+a tail re-prefill when the cached pages were reclaimed meanwhile).
 """
 from __future__ import annotations
 
+import bisect
 import contextlib
 import dataclasses
 import functools
@@ -132,29 +152,39 @@ class Request:
     rid: int
     prompt: list
     max_new: int = 16
-    priority: int = 0  # higher = steal from it last; ties -> newest admitted
+    priority: int = 0  # higher = steal from it last; ties -> slack, then age
+    deadline_step: Optional[int] = None  # SLO: engine step to finish by;
+    # victim selection steals the most slack first within a priority class
+    # (slack = deadline - step - tokens remaining; None = infinite slack)
     frames: Optional[np.ndarray] = None  # enc-dec: (encoder_seq, d) embeddings
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # retired at the max_seq bound with < max_new out
     preemptions: int = 0  # times this request's pages were stolen
     evictions: int = 0  # times its host spill was dropped (re-prefilled)
     resume_ctx: Optional[list] = None  # evicted: full context to re-prefill
+    since: int = 0  # server-managed: step this request entered the wait line
+    seq: int = 0  # server-managed: global arrival sequence (tie-break)
 
 
 @dataclasses.dataclass
 class _Spill:
-    """A preempted request's resumable state: the exact page / slab payload
-    (codes + scales + recurrent state per pool leaf, all layers) at
-    preemption time. Restoring these bytes into any free pages/slab
-    reproduces the pool state bit-exactly, so the resumed request generates
-    token-identical output."""
+    """A preempted request's resumable state: the exact *privately-owned*
+    page / slab payload (codes + scales + recurrent state per pool leaf,
+    all layers) at preemption time. Shared-frozen prefix pages are not
+    spilled — they stay resident in the content index (parked at refcount
+    0 if nobody else maps them) and are re-resolved by token id on resume.
+    Restoring the private bytes into any free pages/slab behind the
+    re-acquired prefix reproduces the pool state bit-exactly, so the
+    resumed request generates token-identical output. The wait-line key
+    (``req.since``/``req.seq``) lives on the request and survives both
+    resume and budget eviction — one global longest-waiting-first line."""
 
     req: Request
     ctx_len: int  # tokens of KV spilled (prompt + generated-so-far)
+    shared_pages: int  # leading content-shared pages (not in the payload)
     payload: List[Dict[str, np.ndarray]]  # per engine unit: leaf -> array
     nbytes: int  # host bytes this spill holds (spill_budget accounting)
-    since: int  # engine step when preempted (longest-waiting-first key)
-    seq: int  # original admission sequence — age/priority is kept on resume
 
 
 class Server:
@@ -171,7 +201,8 @@ class Server:
                  resume_watermark: int = 1,
                  steal_cooldown: int = 2,
                  prefill_chunk_pages: int = 4,
-                 spill_budget_bytes: Optional[int] = None):
+                 spill_budget_bytes: Optional[int] = None,
+                 prefix_cache: bool = True):
         """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
         prefill/decode through the fused single-pass W4A8 kernel, and paged
         decode attention (GQA and MLA-latent) through the flash-decoding
@@ -203,7 +234,15 @@ class Server:
             for a full re-prefill (None = unbounded).
         Both watermarks are bypassed when nothing is running — the pool is
         then fully available, so progress is always made when physically
-        possible."""
+        possible.
+
+        ``prefix_cache``: content-addressed sharing of full, scale-frozen
+        prompt pages across requests (refcounted pages + host-side radix
+        index; see the module docstring). Active only for pure page
+        families: enc-dec decoder K/V depends on the encoder frames, not
+        just the token prefix, and recurrent families cannot skip a
+        prefill chunk (the slab carry has no content address) — both fall
+        back to exclusive prefills automatically."""
         if scheduler not in ("token_budget", "reserve"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.kernel_backend = kernel_backend
@@ -227,10 +266,12 @@ class Server:
         self.stats = {
             "steps": 0, "slot_steps": 0, "decoded_tokens": 0,
             "prefill_tokens": 0, "preemptions": 0, "resumes": 0,
-            "pages_stolen": 0, "spill_evictions": 0,
+            "pages_stolen": 0, "spill_evictions": 0, "truncated": 0,
+            "prefix_hit_pages": 0, "prefix_hit_tokens": 0,
+            "prefix_reclaims": 0, "resume_fallbacks": 0,
         }
         self._step_no = 0
-        self._admit_seq = 0
+        self._submit_seq = 0
         self._spill_bytes = 0
         # distinct (padded_chunk_len, table_width) prefill signatures fed to
         # the jitted step — with a fixed cfg this IS the prefill trace
@@ -332,7 +373,20 @@ class Server:
         self._bucket_prefill = not self._has_slabs
 
         self.free_pages: List[int] = list(range(self._n_pages))
+        # refcounted ownership: page_refs[pid] = number of slots mapping the
+        # page right now. Private pages have refcount 1; content-shared
+        # prefix pages can be mapped by many slots at once; refcount-0
+        # registered pages park in the prefix cache's reusable LRU.
+        self.page_refs = np.zeros(self._n_pages, np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        # leading run of content-shared (frozen, registered) pages per slot;
+        # everything past it in slot_pages is private (refcount 1, writable
+        # at the boundary, spillable)
+        self.slot_shared: List[int] = [0] * slots
+        self._prefix: Optional[kvc.PrefixCache] = (
+            kvc.PrefixCache(page_size)
+            if (prefix_cache and self._has_pages and not self._has_slabs
+                and not self._encdec) else None)
         self.page_table = np.full(
             (slots, max(1, self.pages_per_slot if self._has_pages else 1)),
             self._null_page, np.int32)
@@ -374,15 +428,73 @@ class Server:
             min(len(req.prompt) + req.max_new, self.max_seq),
             self.page_size) + self._cross_pp
 
+    def _free_capacity(self) -> int:
+        """Pages allocatable right now: the free list plus the prefix
+        cache's refcount-0 reusable LRU — reclaimed (blanked) before any
+        live request is ever stolen from."""
+        n = len(self.free_pages)
+        if self._prefix is not None:
+            n += self._prefix.n_reusable
+        return n
+
+    def _take_page(self) -> int:
+        """One blank page for a new private allocation: the free list
+        first, then reclaim the LRU refcount-0 cached page (dropping its
+        content from the prefix index)."""
+        if self.free_pages:
+            return self.free_pages.pop(0)
+        pid = self._prefix.reclaim()
+        assert pid is not None, "allocator called with zero free capacity"
+        self.stats["prefix_reclaims"] += 1
+        return pid
+
+    def _release_page(self, pid: int):
+        """Drop one mapping of ``pid``. At refcount 0 a registered page
+        parks in the prefix cache's reusable LRU (still bit-reusable by a
+        future identical prefix); an unregistered page returns to the free
+        list."""
+        self.page_refs[pid] -= 1
+        assert self.page_refs[pid] >= 0, f"double-free of page {pid}"
+        if self.page_refs[pid] > 0:
+            return
+        if self._prefix is not None and self._prefix.registered(pid):
+            self._prefix.park(pid)
+        else:
+            self.free_pages.append(pid)
+
+    def _parked_among(self, pids: List[int]) -> int:
+        """How many of these prefix hits sit in the reusable LRU (refcount
+        0). They count as allocatable capacity until the admission maps
+        them, at which point they are spoken for — admission feasibility
+        must charge them against the free pool."""
+        return sum(1 for pid in pids if self.page_refs[pid] == 0)
+
+    def _map_shared(self, slot: int, pids: List[int]):
+        """Map content-shared prefix pages into an empty slot (refcount++;
+        unpark any that sat in the reusable LRU). Zero prefill compute —
+        the pages already hold the frozen K/V for these tokens."""
+        assert not self.slot_pages[slot]
+        for pid in pids:
+            if self.page_refs[pid] == 0:
+                self._prefix.unpark(pid)
+            self.page_refs[pid] += 1
+        self.slot_pages[slot] = list(pids)
+        self.slot_shared[slot] = len(pids)
+        self.page_table[slot, :len(pids)] = pids
+
     def _alloc(self, slot: int, npg: int) -> List[int]:
-        ids = [self.free_pages.pop(0) for _ in range(npg)]
+        ids = [self._take_page() for _ in range(npg)]
+        for pid in ids:
+            self.page_refs[pid] += 1
         self.slot_pages[slot].extend(ids)
         owned = self.slot_pages[slot]
         self.page_table[slot, :len(owned)] = owned
         return ids
 
     def _alloc_cross(self, slot: int) -> List[int]:
-        ids = [self.free_pages.pop(0) for _ in range(self._cross_pp)]
+        ids = [self._take_page() for _ in range(self._cross_pp)]
+        for pid in ids:
+            self.page_refs[pid] += 1
         self.slot_cross[slot] = ids
         self.cross_table[slot, :len(ids)] = ids
         return ids
@@ -426,7 +538,17 @@ class Server:
                 f"request {req.rid}: needs {self._worst_case_pages(req)} pages "
                 f"but the pool has {self._n_pages}; raise pool_pages or "
                 "shrink prompt/max_new")
-        self.queue.append(req)
+        req.since = self._step_no
+        req.seq = self._submit_seq
+        self._submit_seq += 1
+        self.queue.append(req)  # (since, seq) is monotonic here: stays sorted
+
+    def _enqueue(self, req: Request):
+        """Re-insert an evicted request into the queue at its wait-line
+        position: it keeps the (since, seq) it already earned, so eviction
+        moves a spill between containers without losing its place."""
+        keys = [(r.since, r.seq) for r in self.queue]
+        self.queue.insert(bisect.bisect(keys, (req.since, req.seq)), req)
 
     def _admit(self):
         for slot in range(self.slots):
@@ -437,8 +559,24 @@ class Server:
             if not self._admit_one(slot):
                 break  # head of line does not fit: wait (no overtaking)
 
+    def _slack(self, req: Request) -> float:
+        """Deadline slack in engine steps: how many steps this request can
+        lose before it misses its SLO (deadline − now − tokens it still has
+        to decode). No deadline = infinite slack (nothing to miss) — and so
+        is a deadline that is already unmeetable (slack <= 0): shielding a
+        request whose SLO is lost either way would only make a still-
+        meetable peer miss too, so a dead deadline stops protecting."""
+        if req.deadline_step is None:
+            return math.inf
+        slack = (req.deadline_step - self._step_no
+                 - (req.max_new - len(req.out)))
+        return slack if slack > 0 else math.inf
+
     def _pick_victim(self) -> Optional[int]:
-        """Lowest-priority active slot (ties: most recently admitted).
+        """Steal victim: lowest priority first, then — ROADMAP scheduler
+        item (c) — the most deadline slack within that priority class (a
+        request about to miss its SLO is shielded; one with no deadline, or
+        with steps to spare, yields first), then the most recently arrived.
         Requests inside the steal cooldown are protected unless no other
         victim exists."""
         cands = [s for s, r in enumerate(self.active) if r is not None]
@@ -448,7 +586,9 @@ class Server:
                 if self._step_no - self._slot_since[s] >= self.steal_cooldown]
         pick_from = warm or cands
         return min(pick_from,
-                   key=lambda s: (self.active[s].priority, -self._slot_seq[s]))
+                   key=lambda s: (self.active[s].priority,
+                                  -self._slack(self.active[s]),
+                                  -self._slot_seq[s]))
 
     def _slab_available(self, want_priority: int) -> bool:
         """True if a slab is free, or (token-budget scheduler only) one can
@@ -468,43 +608,82 @@ class Server:
         return False
 
     def _admit_one(self, slot: int) -> bool:
-        """Admit the next candidate into ``slot``. Preempted requests come
-        strictly first (longest-waiting-first) so fresh arrivals can never
-        starve a spilled request whose readmission they would outbid."""
+        """Admit the longest-waiting candidate into ``slot``. Spilled and
+        fresh requests share ONE ordered wait line keyed on (since, seq):
+        a spill evicted by the budget keeps the place it already earned —
+        it does not fall behind every younger spill just because it moved
+        from ``preempted`` to ``queue`` — and the head of the line is never
+        overtaken when it does not fit."""
         any_active = any(r is not None for r in self.active)
-        free = len(self.free_pages)
+        free = self._free_capacity()
+        spill = None
         if self.scheduler == "token_budget" and self.preempted:
-            spill = min(self.preempted, key=lambda sp: sp.since)
+            spill = min(self.preempted,
+                        key=lambda sp: (sp.req.since, sp.req.seq))
+        fresh = self.queue[0] if self.queue else None
+        if spill is not None and fresh is not None and \
+                (fresh.since, fresh.seq) < (spill.req.since, spill.req.seq):
+            spill = None  # the fresh head has waited longer
+        if spill is not None:
+            req = spill.req
+            shared_pids: List[int] = []
+            if spill.shared_pages:
+                ctx = list(req.prompt) + list(req.out[:-1])
+                shared_pids = self._prefix.walk(ctx,
+                                                max_pages=spill.shared_pages)
+                if len(shared_pids) < spill.shared_pages:
+                    # part of the shared prefix was reclaimed while this
+                    # request sat spilled: the private payload no longer
+                    # abuts a resolvable prefix — drop the bytes and fall
+                    # back to a tail re-prefill through the normal
+                    # admission walk (whatever hits remain still count)
+                    self.stats["resume_fallbacks"] += 1
+                    self._evict_spill(spill)
+                    return self._admit_one(slot)
             need = 0
             if self._has_pages:
+                # parked hits count in _free_capacity() but stop being
+                # allocatable the moment this admission maps them — charge
+                # them against the free pool or _alloc could run dry
+                free -= self._parked_among(shared_pids)
                 need = min(kvc.pages_needed(spill.ctx_len, self.page_size)
-                           + self.headroom_pages,
-                           self._worst_case_pages(spill.req) - self._cross_pp)
+                           - spill.shared_pages + self.headroom_pages,
+                           self._worst_case_pages(req) - self._cross_pp
+                           - spill.shared_pages)
                 need += self._cross_pp
                 margin = self.resume_watermark if any_active else 0
                 if free - need < margin:
                     return False
-            if not self._slab_available(spill.req.priority):
+            if not self._slab_available(req.priority):
                 return False
             self.preempted.remove(spill)
             self._spill_bytes -= spill.nbytes
-            self._resume(slot, spill, need - self._cross_pp)
+            self._resume(slot, spill, shared_pids, need - self._cross_pp)
             return True
-        if not self.queue:
+        if fresh is None:
             return False
-        req = self.queue[0]
-        ctx_len = len(req.resume_ctx if req.resume_ctx is not None
-                      else req.prompt)
+        req = fresh
+        ctx = req.resume_ctx if req.resume_ctx is not None else req.prompt
+        ctx_len = len(ctx)
+        hits: List[int] = []
+        if self._prefix is not None:
+            # the last context token always streams through the prefill
+            # (its logits seed decode), so cap the walk one token short —
+            # this also keeps the boundary page private by construction
+            hits = self._prefix.walk(ctx,
+                                     max_pages=(ctx_len - 1) // self.page_size)
         need = 0
         if self._has_pages:
+            free -= self._parked_among(hits)  # mapping a parked hit uses it
             if self.scheduler == "reserve":
-                need = self._worst_case_pages(req)
+                need = self._worst_case_pages(req) - len(hits)
                 if free < need:
                     return False
             else:
                 need = min(kvc.pages_needed(ctx_len, self.page_size)
-                           + self.headroom_pages,
-                           self._worst_case_pages(req) - self._cross_pp)
+                           - len(hits) + self.headroom_pages,
+                           self._worst_case_pages(req) - self._cross_pp
+                           - len(hits))
                 need += self._cross_pp
                 margin = self.low_watermark if any_active else 0
                 if free - need < margin:
@@ -513,10 +692,14 @@ class Server:
             return False
         self.queue.pop(0)
         self.active[slot] = req
-        self._slot_seq[slot] = self._admit_seq
+        self._slot_seq[slot] = req.seq
         self._slot_since[slot] = self._step_no
-        self._admit_seq += 1
         if self._has_pages:
+            if hits:
+                self._map_shared(slot, hits)
+                self.lengths[slot] = len(hits) * self.page_size
+                self.stats["prefix_hit_pages"] += len(hits)
+                self.stats["prefix_hit_tokens"] += len(hits) * self.page_size
             self._alloc(slot, need - self._cross_pp)
             if self._encdec:
                 self._alloc_cross(slot)
@@ -544,12 +727,16 @@ class Server:
         """Prefill a (re)admitted request: stream its context through the
         model in page-aligned chunks, each chunk's K/V written straight
         into this slot's pages inside the jitted forward (no contiguous
-        max_seq scratch cache). Chunk lengths and page-table widths are
-        bucketed to powers of two (pad + mask) so trace count is
-        O(log max_seq); recurrent families stream exact chunks (pad tokens
-        cannot be masked out of a recurrence). Enc-dec requests first run
-        the encoder once, writing every decoder layer's cross K/V into the
-        slot's write-once cross pages."""
+        max_seq scratch cache). When admission mapped content-shared prefix
+        pages, ``lengths[slot]`` already covers them and only the uncached
+        tail streams here. Chunk lengths and page-table widths are bucketed
+        to powers of two (pad + mask) so trace count is O(log max_seq);
+        recurrent families stream exact chunks (pad tokens cannot be masked
+        out of a recurrence). Enc-dec requests first run the encoder once,
+        writing every decoder layer's cross K/V into the slot's write-once
+        cross pages. Afterwards every full prompt page is registered in the
+        prefix index (scale-frozen from here on: only the private boundary
+        page is ever requantized again)."""
         ctx = req.resume_ctx if req.resume_ctx is not None else list(req.prompt)
         fresh = req.resume_ctx is None
         req.resume_ctx = None
@@ -566,8 +753,14 @@ class Server:
 
         chunk = self.prefill_chunk_pages * page
         own = self.slot_pages[slot]
+        start = int(self.lengths[slot])  # > 0: shared prefix already mapped
+        if self._prefix is not None:
+            # the stream writes pages [start/page, ceil(n/page)) — none of
+            # them may be shared-frozen (boundary pages stay private)
+            self._prefix.assert_unfrozen(
+                own[start // page: kvc.pages_needed(n, page)])
         logits = None
-        pos = 0
+        pos = start
         while pos < n:
             take = min(chunk, n - pos)
             if self._bucket_prefill:
@@ -579,7 +772,12 @@ class Server:
                      else 1)
             toks = ctx[pos: pos + take] + [0] * (padded - take)
             table = np.full((1, w), self._null_page, np.int32)
-            m = min(w, len(own))
+            # map only pages holding real data up to this chunk's true end:
+            # a bucketed chunk's zeroed pad writes overhang the last data
+            # page, and append_prefill_chunk's contract is that those
+            # positions must point at the null page — not at allocated
+            # headroom (harmless while private, corruption once shared)
+            m = min(w, len(own), kvc.pages_needed(pos + take, page))
             table[0, :m] = own[:m]
             # chunk_len rides along for every prefill chunk (not just
             # bucketed ones): models use it both to mask pad positions and
@@ -596,25 +794,60 @@ class Server:
             self.prefill_traces.add((padded, w))
             pos += take
         self.lengths[slot] = n
-        self.stats["prefill_tokens"] += n
+        self.stats["prefill_tokens"] += n - start
+        if self._prefix is not None:
+            self._register_prefix(slot, req)
         if fresh:
             req.out.append(int(jnp.argmax(logits[0])))
 
+    def _register_prefix(self, slot: int, req: Request):
+        """Promote this slot's full prompt pages to shared-frozen: register
+        them in the content index so later requests with the same prefix
+        map them for free. Only the *prompt* region is registered — its
+        pages were written by the (deterministic) prefill stream in one
+        shot, so their frozen content is bit-reusable by any owner;
+        decode-grown pages went through per-step requantization and are
+        not. If another slot registered the same chain first (e.g. the
+        walk was capped short of an exactly-page-aligned prompt), adopt the
+        canonical page and release our duplicate — dedup keeps the shared
+        pages one contiguous leading run."""
+        page = self.page_size
+        n_full = len(req.prompt) // page
+        shared = self.slot_shared[slot]
+        if n_full <= shared:
+            return  # nothing new beyond the already-mapped prefix
+        own = self.slot_pages[slot]
+        canon = self._prefix.insert(req.prompt[:n_full * page], own[:n_full])
+        for i in range(shared, n_full):
+            if canon[i] != own[i]:  # duplicate content: adopt the canonical
+                dup = own[i]
+                if self.page_refs[canon[i]] == 0:
+                    self._prefix.unpark(canon[i])
+                self.page_refs[canon[i]] += 1
+                own[i] = canon[i]
+                self.page_table[slot, i] = canon[i]
+                self._release_page(dup)  # private, refcount 1 -> free list
+        self.slot_shared[slot] = n_full
+
     # -- preemption by page steal ----------------------------------------------
     def _preempt(self, slot: int):
-        """Steal this slot's pages (and slab): spill its payload (codes +
-        scales + recurrent state, bit-exact) to host memory, return the
-        pages to the pool, and park the request for longest-waiting-first
-        readmission."""
+        """Steal this slot's pages (and slab): spill its *private* payload
+        (codes + scales + recurrent state, bit-exact) to host memory and
+        drop every page mapping. Content-shared prefix pages are not
+        spilled — their frozen bytes stay resident in the prefix index
+        (parked at refcount 0 if no other slot maps them) and are
+        re-resolved by token id on resume."""
         req = self.active[slot]
         ctx_len = int(self.lengths[slot])
+        shared = self.slot_shared[slot]
         npg = kvc.pages_needed(ctx_len, self.page_size)
+        priv = self.slot_pages[slot][shared:npg]
         payload = []
         nbytes = 0
         for path, kind in self._units:
             pool = self._unit(path)
             if kind == "kv":
-                ids = jnp.asarray(self.slot_pages[slot][:npg], jnp.int32)
+                ids = jnp.asarray(priv, jnp.int32)
             elif kind == "cross":
                 ids = jnp.asarray(self.slot_cross[slot], jnp.int32)
             else:  # slab
@@ -623,19 +856,22 @@ class Server:
                     for name, leaf in pool.items()}
             nbytes += sum(a.nbytes for a in part.values())
             payload.append(part)
+        req.since = self._step_no  # re-enters the wait line now
         self.preempted.append(_Spill(req=req, ctx_len=ctx_len,
-                                     payload=payload, nbytes=nbytes,
-                                     since=self._step_no,
-                                     seq=self._slot_seq[slot]))
+                                     shared_pages=shared, payload=payload,
+                                     nbytes=nbytes))
         self._spill_bytes += nbytes
         req.preemptions += 1
         self.stats["preemptions"] += 1
-        self.stats["pages_stolen"] += (len(self.slot_pages[slot])
+        self.stats["pages_stolen"] += (len(self.slot_pages[slot]) - shared
                                        + len(self.slot_cross[slot]))
-        self.free_pages.extend(self.slot_pages[slot])
-        self.free_pages.extend(self.slot_cross[slot])
+        for pid in self.slot_pages[slot]:
+            self._release_page(pid)
+        for pid in self.slot_cross[slot]:
+            self._release_page(pid)
         self.slot_pages[slot] = []
         self.slot_cross[slot] = []
+        self.slot_shared[slot] = 0
         self.page_table[slot] = self._null_page
         self.cross_table[slot] = self._null_page
         self.enc_lengths[slot] = 0
@@ -646,12 +882,30 @@ class Server:
         self.lengths[slot] = 0
         self.active[slot] = None
 
+    def _evict_spill(self, sp: _Spill):
+        """Drop a spill's host bytes and re-queue its request for a full
+        context re-prefill. The request keeps its wait-line key
+        (``since``/``seq`` earned at preemption), so eviction moves it
+        between containers without losing its place — readmission order
+        stays one global longest-waiting-first line, and a budget eviction
+        can no longer push the *oldest* waiter behind every younger spill."""
+        self.preempted.remove(sp)
+        self._spill_bytes -= sp.nbytes
+        req = sp.req
+        # KV context at preemption = prompt + out[:-1] (the newest token
+        # was produced but not yet fed back); re-prefilling exactly that
+        # context lets decode continue by feeding out[-1] as usual
+        req.resume_ctx = list(req.prompt) + list(req.out[:-1])
+        req.evictions += 1
+        self.stats["spill_evictions"] += 1
+        self._enqueue(req)
+
     def _enforce_spill_budget(self):
         """ROADMAP (b): host spills are bounded. When resident spill bytes
         exceed ``spill_budget_bytes``, evict oldest-first: drop the spill's
-        bytes and re-queue its request at the head of the line with its
-        full context (prompt + tokens generated so far) marked for
-        re-prefill — the request still finishes, token-identically, it
+        bytes and re-queue its request — at its existing wait-line position
+        — with its full context (prompt + tokens generated so far) marked
+        for re-prefill; the request still finishes, token-identically, it
         just pays a prompt re-prefill instead of a byte restore.
 
         Runs at the top of every engine step, never from inside
@@ -664,43 +918,39 @@ class Server:
         in the same step they are dropped."""
         if self.spill_budget_bytes is None:
             return
-        evicted = []
         while (self._spill_bytes > self.spill_budget_bytes
                and self.preempted):
-            sp = min(self.preempted, key=lambda s: s.since)
-            self.preempted.remove(sp)
-            self._spill_bytes -= sp.nbytes
-            req = sp.req
-            # KV context at preemption = prompt + out[:-1] (the newest token
-            # was produced but not yet fed back); re-prefilling exactly that
-            # context lets decode continue by feeding out[-1] as usual
-            req.resume_ctx = list(req.prompt) + list(req.out[:-1])
-            req.evictions += 1
-            self.stats["spill_evictions"] += 1
-            evicted.append(sp)
-        self.queue[:0] = [sp.req for sp in sorted(evicted,
-                                                  key=lambda s: s.since)]
+            self._evict_spill(min(self.preempted,
+                                  key=lambda s: (s.req.since, s.req.seq)))
 
-    def _resume(self, slot: int, spill: _Spill, need_kv: int):
-        """Restore a spilled request into fresh pages/slab (token-identical:
-        the payload is bit-exact, and page/slab ids are logical — the model
-        only sees the tables)."""
+    def _resume(self, slot: int, spill: _Spill, shared_pids: List[int],
+                need_kv: int):
+        """Restore a spilled request: map its re-resolved content-shared
+        prefix pages (zero bytes moved — the frozen content never left the
+        pool), then restore the private payload bit-exactly into fresh
+        pages/slab behind them (token-identical: page/slab ids are logical,
+        the model only sees the tables)."""
         self.active[slot] = spill.req
-        self._slot_seq[slot] = spill.seq  # keeps its original age/priority
+        self._slot_seq[slot] = spill.req.seq  # keeps its original age
         self._slot_since[slot] = self._step_no
         new_kv: List[int] = []
         new_cross: List[int] = []
         if self._has_pages:
+            if shared_pids:
+                self._map_shared(slot, shared_pids)
             new_kv = self._alloc(slot, need_kv)
+            if self._prefix is not None:
+                self._prefix.assert_unfrozen(new_kv)  # restore targets
             if self._encdec:
                 new_cross = self._alloc_cross(slot)
                 self.enc_lengths[slot] = self.cfg.encoder_seq
         if self._has_slabs:
             self._alloc_slab(slot, reset=False)  # restored from spill below
-        npg = kvc.pages_needed(spill.ctx_len, self.page_size)
+        npg_priv = (kvc.pages_needed(spill.ctx_len, self.page_size)
+                    - spill.shared_pages)
         for (path, kind), part in zip(self._units, spill.payload):
             if kind == "kv":
-                ids = jnp.asarray(new_kv[:npg], jnp.int32)
+                ids = jnp.asarray(new_kv[:npg_priv], jnp.int32)
             elif kind == "cross":
                 ids = jnp.asarray(new_cross, jnp.int32)
             else:  # slab
@@ -726,8 +976,9 @@ class Server:
     def _grow(self):
         """On-demand page allocation: before the decode step, every active
         row whose next token crosses into an unallocated page gets one from
-        the pool — stealing from the lowest-priority request on exhaustion.
-        Rows are served in priority order (then admission order), so a
+        the pool — reclaiming refcount-0 cached pages first, and stealing
+        from the lowest-priority request only when even the reusable set is
+        dry. Rows are served in priority order (then arrival order), so a
         steal always benefits the higher-priority work."""
         if not self._has_pages:
             return
@@ -739,7 +990,7 @@ class Server:
                 need_idx = int(self.lengths[slot]) // self.page_size
                 if need_idx < len(self.slot_pages[slot]):
                     break
-                if self.free_pages:
+                if self._free_capacity():
                     self._alloc(slot, 1)
                 elif not self._steal_for(slot):
                     break  # pragma: no cover — needer itself is a candidate
@@ -752,11 +1003,17 @@ class Server:
         # freed pages are NOT zeroed (that would rewrite the whole pool per
         # retirement): recycled pages are overwritten by the prefill stream,
         # and decode appends mask positions past the new owner's length
-        # before recomputing page scales, so stale codes can never leak
-        self.free_pages.extend(self.slot_pages[slot])
-        self.free_pages.extend(self.slot_cross[slot])
+        # before recomputing page scales, so stale codes can never leak.
+        # Registered prompt pages whose refcount drops to 0 here park in
+        # the prefix cache's reusable LRU instead of the free list — the
+        # request's system-prompt K/V outlives it for the next hit
+        for pid in self.slot_pages[slot]:
+            self._release_page(pid)
+        for pid in self.slot_cross[slot]:
+            self._release_page(pid)
         self.slot_pages[slot] = []
         self.slot_cross[slot] = []
+        self.slot_shared[slot] = 0
         self.page_table[slot] = self._null_page
         self.cross_table[slot] = self._null_page
         self.enc_lengths[slot] = 0
@@ -782,6 +1039,13 @@ class Server:
         self._step_no += 1
         self.stats["steps"] += 1
         self.stats["slot_steps"] += sum(r is not None for r in self.active)
+        if self._prefix is not None:
+            # copy-on-write invariant: the page each row's append will
+            # requantize (its boundary page) must be private — a shared
+            # frozen page in that position would corrupt every other owner
+            self._prefix.assert_unfrozen(
+                self.slot_pages[s][int(self.lengths[s]) // self.page_size]
+                for s, r in enumerate(self.active) if r is not None)
         tok = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:
@@ -798,6 +1062,12 @@ class Server:
             self.lengths[s] += 1
             self.stats["decoded_tokens"] += 1
             if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
+                if len(req.out) < req.max_new:
+                    # hit the max_seq - 1 context bound: the request ends
+                    # short of its token budget — flag it instead of
+                    # retiring silently as if it were satisfied
+                    req.truncated = True
+                    self.stats["truncated"] += 1
                 self._retire(s, req)
         return True
 
@@ -818,8 +1088,9 @@ class Server:
             raise RuntimeError(
                 f"serving starved: {len(self.queue)} queued + "
                 f"{len(self.preempted)} preempted request(s) cannot be "
-                f"(re)admitted with {len(self.free_pages)}/{self._n_pages} "
-                f"pool pages and {len(self.free_slabs)}/{self._n_slabs} "
+                f"(re)admitted with {self._free_capacity()}/{self._n_pages} "
+                f"allocatable pool pages (incl. reusable cached) and "
+                f"{len(self.free_slabs)}/{self._n_slabs} "
                 "slabs free and no active work to retire — the pool is "
                 "too small for the waiting context (or pages leaked)")
         else:
@@ -838,6 +1109,19 @@ class Server:
         if not self.stats["steps"]:
             return 0.0
         return self.stats["slot_steps"] / (self.stats["steps"] * self.slots)
+
+    @property
+    def reusable_pages(self) -> List[int]:
+        """Refcount-0 registered pages parked in the prefix cache's LRU:
+        allocatable like free pages, still bit-reusable by a matching
+        prefix until reclaimed."""
+        return self._prefix.reusable_ids() if self._prefix is not None else []
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefilled-or-hit context tokens served straight
+        from the prefix cache (zero prefill compute)."""
+        total = self.stats["prefix_hit_tokens"] + self.stats["prefill_tokens"]
+        return self.stats["prefix_hit_tokens"] / total if total else 0.0
 
     def kv_bytes_per_token(self) -> float:
         """Pool bytes per token slot across the whole layer stack (page

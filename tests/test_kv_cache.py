@@ -199,6 +199,64 @@ class TestPagedDecodeAttn:
             assert err / (np.abs(exact).max() + 1e-9) < 0.01, err
 
 
+class TestPrefixCacheIndex:
+    """The host-side content-addressed index over frozen pages: chained
+    page keys, longest-prefix walk, dedup on insert, park/unpark/reclaim
+    LRU semantics, and the frozen-page write guard."""
+
+    def test_walk_insert_roundtrip(self):
+        c = kvc.PrefixCache(4)
+        toks = list(range(12))
+        assert c.walk(toks) == []
+        assert c.insert(toks[:8], [10, 11]) == [10, 11]
+        assert c.walk(toks) == [10, 11]  # third page never registered
+        assert c.walk(toks, max_pages=1) == [10]
+        assert c.walk(toks[:6]) == [10]  # partial second page: no hit
+        assert c.walk([9, 9, 9, 9]) == []  # different content
+
+    def test_chained_keys_do_not_collide_across_depths(self):
+        """The same token window under a different history is a different
+        page: keys chain on the parent, so depth-1 [4..7] != root [4..7]."""
+        c = kvc.PrefixCache(4)
+        toks = list(range(8))
+        c.insert(toks, [0, 1])
+        c.insert(toks[4:8], [2])  # same window at the *root*
+        assert c.walk(toks) == [0, 1]
+        assert c.walk(toks[4:8]) == [2]
+
+    def test_insert_dedups_to_canonical(self):
+        """A second registration of the same chain returns the existing
+        pages — the duplicate pid is never registered (the caller adopts
+        the canonical page and frees its copy)."""
+        c = kvc.PrefixCache(4)
+        toks = list(range(8))
+        assert c.insert(toks, [0, 1]) == [0, 1]
+        assert c.insert(toks, [5, 6]) == [0, 1]
+        assert not c.registered(5) and not c.registered(6)
+
+    def test_park_unpark_reclaim_lru(self):
+        c = kvc.PrefixCache(4)
+        toks = list(range(12))
+        c.insert(toks, [0, 1, 2])
+        for pid in (0, 1, 2):
+            c.park(pid)
+        assert c.n_reusable == 3
+        c.unpark(1)  # re-acquired: no longer reclaimable
+        assert c.reclaim() == 0  # oldest parked first
+        assert c.reclaims == 1
+        # the chain is broken at depth 1: deeper entries are unreachable
+        assert c.walk(toks) == []
+        assert c.registered(1) and c.registered(2)
+        assert c.reclaim() == 2 and c.reclaim() is None
+
+    def test_assert_unfrozen_guards_registered_pages(self):
+        c = kvc.PrefixCache(4)
+        c.insert(list(range(4)), [3])
+        c.assert_unfrozen([0, 1, 2])  # private pages pass
+        with pytest.raises(AssertionError, match="frozen"):
+            c.assert_unfrozen([3])
+
+
 def _mla_smoke_cfg():
     from repro.configs import get_smoke
 
@@ -365,8 +423,12 @@ class TestServerPaged:
         assert sorted(r.rid for r in done) == [0, 1, 2]
         assert all(r.done and len(r.out) == 4 for r in done)
         assert srv.queue == [] and not any(srv.active)
-        # pages recycled: 3 requests served through a 2-slot pool
-        assert len(srv.free_pages) == len(srv.page_table.flatten())
+        # pages recycled: 3 requests served through a 2-slot pool (full
+        # prompt pages stay parked in the prefix cache's reusable LRU —
+        # still allocatable, so the pool is whole)
+        assert (len(srv.free_pages) + len(srv.reusable_pages)
+                == len(srv.page_table.flatten()))
+        assert (srv.page_refs == 0).all()
 
     def test_page_recycling_under_pressure(self, trained_tiny):
         """More requests than the pool can hold at once: admission waits for
@@ -469,6 +531,9 @@ class TestServerEncDec:
         cfg, params = trained_tiny_encdec
         srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
                      page_size=8, a_fmt=None)
+        # decoder K/V depends on the encoder frames, not just the token
+        # prefix: content-addressing by token ids alone would be wrong
+        assert srv._prefix is None
         with pytest.raises(ValueError, match="frames"):
             srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
 

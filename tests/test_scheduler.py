@@ -23,15 +23,41 @@ from repro.runtime.serve import Request, Server
 
 
 def _assert_pool_invariants(srv):
-    """No leaked or double-owned pages: the slots' pages and the free list
-    partition the pool exactly, and the page table mirrors ownership."""
-    owned = [pid for ids in srv.slot_pages for pid in ids]
-    assert len(owned) == len(set(owned)), f"double-owned pages: {owned}"
-    assert not (set(owned) & set(srv.free_pages)), "page both owned and free"
-    assert sorted(owned + srv.free_pages) == list(range(srv._n_pages)), \
-        "pages leaked from the pool"
+    """Refcounted pool accounting: every page is exactly one of *mapped*
+    (refcount == number of slot mappings, shared pages may have several),
+    *parked* (refcount 0, registered in the prefix index, reusable-LRU) or
+    *free* (refcount 0, unregistered); the three sets partition the pool
+    (no leaks, no double-frees), the page table mirrors ownership, and a
+    slot's pages split into a leading shared-frozen run followed by
+    exclusively-owned private pages."""
+    from collections import Counter
+
+    mapped = Counter()
+    for ids in srv.slot_pages:
+        mapped.update(ids)
+    for ids in srv.slot_cross:
+        mapped.update(ids)
+    for pid in range(srv._n_pages):
+        assert srv.page_refs[pid] == mapped.get(pid, 0), \
+            (f"page {pid}: refcount {srv.page_refs[pid]} != "
+             f"{mapped.get(pid, 0)} table mappings")
+    free, parked = srv.free_pages, srv.reusable_pages
+    assert len(free) == len(set(free)), f"double-freed pages: {free}"
+    assert not (set(free) & set(mapped)), "page both mapped and free"
+    assert not (set(parked) & set(mapped)), "page both mapped and parked"
+    assert not (set(free) & set(parked)), "page both free and parked"
+    assert sorted(set(mapped) | set(free) | set(parked)) == \
+        list(range(srv._n_pages)), "pages leaked from the pool"
     for slot, ids in enumerate(srv.slot_pages):
         np.testing.assert_array_equal(srv.page_table[slot, :len(ids)], ids)
+        for i, pid in enumerate(ids):
+            if i < srv.slot_shared[slot]:
+                assert srv._prefix.registered(pid), \
+                    f"slot {slot} shared page {pid} not in the index"
+            else:
+                assert srv.page_refs[pid] == 1, \
+                    f"slot {slot} private page {pid} shared (copy-on-write!)"
+                assert srv._prefix is None or not srv._prefix.registered(pid)
 
 
 def _drain_checked(srv, max_steps=500):
@@ -125,9 +151,13 @@ class TestFuzzAccounting:
                 break
         assert len(srv.finished) == len(reqs)
         assert all(len(r.out) == r.max_new for r in reqs)
-        assert sorted(srv.free_pages) == list(range(srv._n_pages))
+        assert not any(r.truncated for r in reqs)
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+        assert (srv.page_refs == 0).all()
         assert srv.stats["preemptions"] >= 1, "fuzz should exercise steals"
-        assert srv.stats["preemptions"] == srv.stats["resumes"]
+        assert srv.stats["preemptions"] == (srv.stats["resumes"]
+                                            + srv.stats["resume_fallbacks"])
 
 
 class TestStreamingPrefill:
@@ -333,6 +363,8 @@ class TestStateSlabs:
         srv = Server(params, cfg, slots=3, max_seq=32, a_fmt=None,
                      pool_slabs=2, prefill_chunk_pages=1, page_size=4,
                      steal_cooldown=1)
+        # recurrent state cannot skip prefill chunks: no prefix cache
+        assert srv._prefix is None
         reqs = [Request(rid=i,
                         prompt=rng.integers(1, cfg.vocab_size,
                                             rng.choice([3, 5, 9])).tolist(),
@@ -441,6 +473,384 @@ class TestStateSlabs:
         srv.submit(r)
         srv.run_until_drained()
         assert r.out[0] == int(jnp.argmax(logits_ref[0]))
+
+
+class TestPrefixCacheServing:
+    """Refcounted pages + the content-addressed shared-prefix cache: the
+    acceptance scenario (shared system prompt -> zero prefill compute for
+    the shared pages, token-identical output), refcount/parking lifecycle,
+    and the resume fallback when cached pages were reclaimed."""
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_shared_prefix_token_identical_and_saves_prefill(
+            self, trained_tiny, kv_fmt):
+        """Acceptance: 8 requests sharing a 64-token system prompt produce
+        greedy outputs token-identical to the cold-cache engine, while
+        ``stats['prefill_tokens']`` drops by exactly the shared pages'
+        token count (every request after the first maps all 8 pages)."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(21)
+        page = 8
+        shared = rng.integers(1, cfg.vocab_size, size=64).tolist()
+        prompts = [shared + rng.integers(1, cfg.vocab_size,
+                                         size=int(t)).tolist()
+                   for t in rng.integers(3, 7, size=8)]
+        total = sum(len(p) for p in prompts)
+        outs = {}
+        for warm in (False, True):
+            srv = Server(params, cfg, slots=4, max_seq=96, kv_fmt=kv_fmt,
+                         page_size=page, a_fmt=None, prefix_cache=warm)
+            reqs = [Request(rid=i, prompt=list(p), max_new=6)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                srv.submit(r)
+            done = _drain_checked(srv)
+            assert len(done) == len(reqs)
+            outs[warm] = {r.rid: r.out for r in reqs}
+            if warm:
+                saved = 7 * 64  # everyone but the first hits all 8 pages
+                assert srv.stats["prefix_hit_tokens"] == saved
+                assert srv.stats["prefix_hit_pages"] == 7 * 8
+                assert srv.stats["prefill_tokens"] == total - saved
+                assert srv.prefix_hit_rate() > 0.7
+            else:
+                assert srv.stats["prefix_hit_tokens"] == 0
+                assert srv.stats["prefill_tokens"] == total
+        assert outs[False] == outs[True]
+
+    def test_refcounts_and_parking_lifecycle(self, trained_tiny):
+        """Two concurrent requests map the same physical prefix pages
+        (refcount 2); retirement parks them at refcount 0 in the reusable
+        LRU instead of the free list; a third request re-acquires them."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(3)
+        page = 8
+        shared = rng.integers(1, cfg.vocab_size, size=2 * page).tolist()
+        tail = rng.integers(1, cfg.vocab_size, size=3).tolist()
+        mk = lambda rid: Request(rid=rid, prompt=shared + tail, max_new=3)
+        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                     page_size=page, a_fmt=None)
+        a, b = mk(0), mk(1)
+        srv.submit(a)
+        srv.submit(b)
+        srv.step()  # admits both: a prefills + registers, b maps the hits
+        assert srv.slot_shared == [2, 2]
+        assert srv.slot_pages[0][:2] == srv.slot_pages[1][:2]
+        assert (srv.page_refs[srv.slot_pages[0][:2]] == 2).all()
+        _assert_pool_invariants(srv)
+        _drain_checked(srv)
+        # retired: the prefix pages parked, not freed — still reusable
+        assert len(srv.reusable_pages) == 2
+        assert (srv.page_refs == 0).all()
+        c = mk(2)
+        srv.submit(c)
+        _drain_checked(srv)
+        assert srv.stats["prefix_hit_tokens"] == 2 * (2 * page)
+        assert a.out == b.out == c.out
+
+    def test_preempt_keeps_prefix_resident_and_resumes(self, trained_tiny):
+        """Preemption spills only the private tail: the shared prefix
+        pages stay in the index (parked if nobody else maps them) and are
+        re-resolved on resume — the spill's host bytes exclude them."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
+        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None)
+        r = Request(rid=0, prompt=list(prompt), max_new=8)
+        srv.submit(r)
+        srv.step()
+        assert srv.slot_shared[0] == 2  # 8 of 9 prompt tokens registered
+        srv._preempt(0)
+        sp = srv.preempted[0]
+        assert sp.shared_pages == 2
+        assert len(srv.reusable_pages) == 2  # prefix parked, not spilled
+        _assert_pool_invariants(srv)
+        srv.run_until_drained()
+        assert srv.stats["resumes"] == 1 and r.done
+        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                      page_size=4, a_fmt=None)
+        ref = Request(rid=99, prompt=list(prompt), max_new=8)
+        solo.submit(ref)
+        solo.run_until_drained()
+        assert r.out == ref.out
+
+    def test_resume_falls_back_to_reprefill_after_reclaim(self, trained_tiny):
+        """If a spill's shared prefix pages were reclaimed while it sat on
+        host, resume cannot restore behind them: the engine falls back to
+        an eviction-style tail re-prefill and still finishes
+        token-identically."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(7)
+        prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
+        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None)
+        r = Request(rid=0, prompt=list(prompt), max_new=8)
+        srv.submit(r)
+        srv.step()
+        srv._preempt(0)
+        # simulate pool pressure reclaiming the parked prefix while spilled
+        while srv._prefix.n_reusable:
+            srv.free_pages.append(srv._prefix.reclaim())
+        _assert_pool_invariants(srv)
+        srv.run_until_drained()
+        assert srv.stats["resume_fallbacks"] == 1
+        assert srv.stats["spill_evictions"] == 1 and r.evictions == 1
+        assert r.done and len(r.out) == 8
+        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                      page_size=4, a_fmt=None)
+        ref = Request(rid=99, prompt=list(prompt), max_new=8)
+        solo.submit(ref)
+        solo.run_until_drained()
+        assert r.out == ref.out
+
+    def test_admission_charges_parked_hits_against_free_pool(self,
+                                                             trained_tiny):
+        """Regression: a prefix hit sitting parked in the reusable LRU
+        counts in ``_free_capacity()`` but is consumed by the very
+        admission that maps it — the feasibility check must charge parked
+        hits against the free pool, or ``_alloc`` runs the allocator dry
+        mid-admission (assert crash) instead of deferring the request."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(19)
+        page = 4
+        prompt_a = rng.integers(1, cfg.vocab_size, size=13).tolist()
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=page, pool_pages=8, a_fmt=None)
+        a = Request(rid=0, prompt=list(prompt_a), max_new=2)
+        srv.submit(a)
+        _drain_checked(srv)
+        assert len(srv.reusable_pages) == 3  # A's full prompt pages parked
+        # D fills the entire free list with private pages and keeps running
+        d = Request(rid=1, prompt=rng.integers(1, 64, 13).tolist(),
+                    max_new=18)
+        srv.submit(d)
+        srv.step()
+        assert len(srv.free_pages) == 0 and len(srv.reusable_pages) == 3
+        # E hits all 3 parked pages, but its private tail pages cannot be
+        # allocated with free = 0: it must wait for D, not crash
+        e = Request(rid=2, prompt=list(prompt_a), max_new=8)
+        srv.submit(e)
+        done = _drain_checked(srv)
+        assert e in done and len(e.out) == 8 and d in done
+        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                      page_size=page, a_fmt=None)
+        ref = Request(rid=99, prompt=list(prompt_a), max_new=8)
+        solo.submit(ref)
+        solo.run_until_drained()
+        assert e.out == ref.out
+
+    def test_mla_shared_prefix_token_identical(self, trained_tiny_mla):
+        """The prefix cache is payload-agnostic: MLA latent pages (ckv +
+        krope leaves under one page id) share across requests exactly like
+        GQA K/V pages."""
+        cfg, params = trained_tiny_mla
+        rng = np.random.default_rng(8)
+        page = 8
+        shared = rng.integers(1, cfg.vocab_size, size=2 * page).tolist()
+        prompts = [shared + rng.integers(1, cfg.vocab_size,
+                                         size=t).tolist()
+                   for t in (3, 5, 4)]
+        outs = {}
+        for warm in (False, True):
+            srv = Server(params, cfg, slots=3, max_seq=64, kv_fmt="fp8_e4m3",
+                         page_size=page, a_fmt=None, prefill_chunk_pages=1,
+                         prefix_cache=warm)
+            reqs = [Request(rid=i, prompt=list(p), max_new=5)
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                srv.submit(r)
+            done = _drain_checked(srv)
+            assert len(done) == len(reqs)
+            outs[warm] = {r.rid: r.out for r in reqs}
+            if warm:
+                assert srv.stats["prefix_hit_tokens"] == 2 * (2 * page)
+        assert outs[False] == outs[True]
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_shared_prefix_fuzz_refcounted(self, trained_tiny, kv_fmt):
+        """Satellite fuzz: staggered shared-prefix arrivals on a tight,
+        steal-happy pool — every step preserves the refcount invariants
+        (no leaked pages, no double-free, refcounts == table occupancy),
+        every request finishes, and each output is token-identical to a
+        cold-cache solo run."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(17)
+        page = 4
+        shared = rng.integers(1, cfg.vocab_size, size=2 * page).tolist()
+        srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt=kv_fmt,
+                     page_size=page, pool_pages=8, a_fmt=None,
+                     prefill_chunk_pages=1, headroom_pages=1,
+                     steal_cooldown=1)
+        reqs = [Request(rid=i,
+                        prompt=shared + rng.integers(
+                            1, cfg.vocab_size, int(rng.choice([1, 3, 6]))
+                        ).tolist(),
+                        max_new=int(rng.choice([5, 9, 12])),
+                        priority=int(rng.choice([0, 1])))
+                for i in range(10)]
+        pending = list(reqs)
+        for _ in range(3):
+            srv.submit(pending.pop(0))
+        for step in range(600):
+            went = srv.step()
+            _assert_pool_invariants(srv)
+            if pending and step % 3 == 0:
+                srv.submit(pending.pop(0))
+            if (not went and not pending and not srv.queue
+                    and not srv.preempted):
+                break
+        assert len(srv.finished) == len(reqs)
+        assert srv.stats["preemptions"] >= 1, "fuzz should exercise steals"
+        assert srv.stats["prefix_hit_tokens"] > 0, "fuzz should share pages"
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+        assert (srv.page_refs == 0).all()
+        for r in reqs:
+            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
+                          page_size=page, a_fmt=None, prefill_chunk_pages=1,
+                          prefix_cache=False)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+
+class TestWaitLineFairness:
+    def test_evicted_spill_keeps_global_wait_order(self, trained_tiny):
+        """Regression (satellite 1): budget eviction must not push the
+        *oldest* waiter behind every younger spill. A is preempted before
+        B; the budget evicts A (oldest-first) into the queue; readmission
+        must still pick A first — one global (since, seq) wait line, not
+        'preempted strictly before fresh'."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=12, a_fmt=None)
+        a = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=10)
+        b = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(), max_new=10)
+        srv.submit(a)
+        srv.submit(b)
+        srv.step()  # both active
+        srv._preempt(srv.active.index(a))  # A spilled first (older key)
+        srv._step_no += 1  # a step passes without readmitting A ...
+        srv._preempt(srv.active.index(b))  # ... then B is spilled too
+        assert a.since < b.since
+        # budget fits exactly one spill: the oldest (A) is evicted
+        srv.spill_budget_bytes = max(sp.nbytes for sp in srv.preempted)
+        srv._enforce_spill_budget()
+        assert a.evictions == 1 and a in srv.queue
+        assert [sp.req for sp in srv.preempted] == [b]
+        # readmission picks A (evicted but oldest), not the younger spill
+        assert srv._admit_one(0)
+        assert srv.active[0] is a
+        srv.run_until_drained()
+        for r in (a, b):
+            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                          page_size=4, a_fmt=None)
+            ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
+            solo.submit(ref)
+            solo.run_until_drained()
+            assert r.out == ref.out, (r.rid, r.out, ref.out)
+
+
+class TestDeadlineVictim:
+    def test_deadline_shields_tight_slo(self, trained_tiny):
+        """ROADMAP (c): within a priority class the victim is the request
+        with the *most* deadline slack. The older no-deadline request —
+        which the old newest-first tie-break would have protected — yields
+        to the newer request racing a tight deadline."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(13)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, pool_pages=6, a_fmt=None, steal_cooldown=0)
+        loose = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10)  # no deadline: infinite slack
+        tight = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10, deadline_step=14)
+        srv.submit(loose)
+        srv.submit(tight)
+        _drain_checked(srv)
+        assert srv.stats["preemptions"] >= 1
+        assert tight.preemptions == 0, "tight-SLO request must be shielded"
+        assert loose.preemptions >= 1
+
+    def test_pick_victim_orders_by_slack_then_age(self, trained_tiny):
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(2)
+        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None, steal_cooldown=0)
+        r0 = Request(rid=0, prompt=rng.integers(1, 64, 3).tolist(),
+                     max_new=8, deadline_step=100)  # plenty of slack
+        r1 = Request(rid=1, prompt=rng.integers(1, 64, 3).tolist(),
+                     max_new=8, deadline_step=10)  # about to miss
+        srv.submit(r0)
+        srv.submit(r1)
+        srv.step()
+        victim = srv._pick_victim()
+        assert srv.active[victim] is r0
+        # priority stays the primary key: a lower-priority tight request
+        # still yields before a higher-priority slack-rich one
+        r0.priority, r1.priority = 1, 0
+        assert srv.active[srv._pick_victim()] is r1
+        # a deadline already missed stops shielding: the dead-SLO request
+        # yields before a peer whose deadline is still meetable
+        r0.priority = 0
+        r0.deadline_step, r1.deadline_step = 100, 1  # r1's SLO is lost
+        assert srv._slack(r1) == float("inf")
+        assert srv.active[srv._pick_victim()] is r1
+
+
+class TestTruncation:
+    def test_max_seq_boundary_sets_truncated(self, trained_tiny):
+        """Satellite: a request cut off at the max_seq - 1 context bound
+        retires with fewer than max_new tokens and must say so."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(4)
+        srv = Server(params, cfg, slots=1, max_seq=16, kv_fmt=None,
+                     page_size=4, a_fmt=None)
+        r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=50)
+        srv.submit(r)
+        srv.run_until_drained()
+        assert r.done and r.truncated
+        assert len(r.out) == (16 - 1) - 5 + 1  # context bound, not budget
+        assert srv.stats["truncated"] == 1
+        ok = Request(rid=1, prompt=rng.integers(1, 64, 3).tolist(), max_new=4)
+        srv.submit(ok)
+        srv.run_until_drained()
+        assert ok.done and not ok.truncated and len(ok.out) == 4
+        assert srv.stats["truncated"] == 1
+
+
+class TestPrefillTableContract:
+    def test_overhang_pages_nulled(self, trained_tiny):
+        """Satellite: a bucketed chunk's zeroed pad writes overhang the
+        last data page; ``append_prefill_chunk``'s contract is that those
+        table positions point at the *null page* — never at allocated
+        headroom (a correctness hazard once pages are shared read-only)."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(6)
+        srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                     page_size=4, a_fmt=None, prefill_chunk_pages=4)
+        tables = []
+        orig = srv._decode
+
+        def spy(params, pools, toks, state):
+            tables.append(np.asarray(state.page_table))
+            return orig(params, pools, toks, state)
+
+        srv._decode = spy
+        r = Request(rid=0, prompt=rng.integers(1, 64, 9).tolist(), max_new=2)
+        srv.submit(r)
+        srv.run_until_drained()
+        # chunk: take=9 padded to 16 -> table width 4, but only 3 pages
+        # hold data; the pad-overhang fourth slot must be the null page
+        # (the old table mapped the allocated headroom page there)
+        pre = tables[0]
+        assert pre.shape[1] == 4
+        assert pre[0, 3] == srv._null_page
+        assert (pre[0, :3] != srv._null_page).all()
+        assert len(srv.slot_pages[0]) == 0 and r.done  # sanity: retired
 
 
 class TestSchedulerPolicy:
