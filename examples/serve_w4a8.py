@@ -18,11 +18,20 @@ request: after the first request freezes its full prompt pages, every
 later request maps them straight from the content-addressed prefix cache
 (refcount++, zero prefill compute) and streams only its own tail. Compare
 against ``--no-prefix-cache`` to see the cold-engine cost.
+
+``--inject-faults SEED`` serves the same workload through a seeded
+deterministic fault schedule (a NaN-poisoned decode row, a bit-flipped
+host spill, a transient allocator stall): exactly the poisoned requests
+end ``status='failed'``, the tampered spill is caught by its CRC and
+re-prefilled, and everything else finishes untouched. ``--audit-every N``
+runs the pool-ownership auditor every N decode steps; the drain always
+ends with an audit, so a broken pool invariant fails loudly.
 """
 import argparse
 import os
 import sys
 import time
+from collections import Counter
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
@@ -32,7 +41,7 @@ from repro import models
 from repro.core.policy import QuantPolicy
 from repro.core.ptq import quantize_tree
 from repro.kernels import ops
-from repro.runtime.serve import Request, Server
+from repro.runtime.serve import FaultPlan, Request, Server
 
 from benchmarks.common import BENCH_CFG, trained_params
 
@@ -159,6 +168,15 @@ def main():
                     help="also serve the whisper-tiny enc-dec and minicpm3 "
                          "MLA smoke configs through the paged FP8 engine "
                          "(asserts token identity vs the legacy decode)")
+    ap.add_argument("--inject-faults", type=int, default=0, metavar="SEED",
+                    help="draw a seeded FaultPlan (NaN decode row, "
+                         "corrupted spill, transient allocator stall) and "
+                         "serve through it: exactly the poisoned requests "
+                         "fail, everyone else is unaffected (0 = off)")
+    ap.add_argument("--audit-every", type=int, default=0, metavar="N",
+                    help="run the pool-ownership auditor every N decode "
+                         "steps (raises PoolCorruptionError with a state "
+                         "dump on any broken invariant; 0 = off)")
     args = ap.parse_args()
 
     if args.families:
@@ -184,11 +202,27 @@ def main():
     # W4A8 kernel (compiled on TPU, interpreter elsewhere)
     kv_fmt = None if args.kv_fmt == "bf16" else args.kv_fmt
     page_size = 16 if args.shared_prefix else 32
+    plan = None
+    if args.inject_faults:
+        # draw faults inside the first half of the workload's decode-step
+        # span so they land while every slot is still busy
+        n_tail = (args.requests + 2) // 3 if args.max_new_tail else 0
+        total = (n_tail * args.max_new_tail
+                 + (args.requests - n_tail) * args.max_new)
+        span = max(4, total // max(1, args.slots) // 2)
+        plan = FaultPlan.seeded(args.inject_faults, slots=args.slots,
+                                max_step=span)
+        print(f"fault schedule (seed {args.inject_faults}): "
+              f"NaN rows at {plan.nan_logits}, corrupt spill ordinals "
+              f"{plan.corrupt_spills}, allocator blanked on ticks "
+              f"{plan.alloc_fail_ticks}")
     server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
                     kernel_backend=args.backend, kv_fmt=kv_fmt,
                     page_size=page_size, scheduler=args.scheduler,
                     pool_pages=args.pool_pages or None,
-                    prefix_cache=not args.no_prefix_cache)
+                    prefix_cache=not args.no_prefix_cache,
+                    strict=False, faults=plan,
+                    audit_every=args.audit_every)
     print(f"kv cache: paged {args.kv_fmt}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
           f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
@@ -209,15 +243,22 @@ def main():
 
     t0 = time.time()
     steps = 0
-    while server.step():
+    while True:
+        went = server.step()
         steps += 1
         if steps > 2000:
+            break
+        if not went:
+            if server.queue or server.preempted:
+                continue  # deferred admission (e.g. injected alloc stall)
             break
     dt = time.time() - t0
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
+    by_status = Counter(r.status for r in reqs)
+    status = ", ".join(f"{n} {s}" for s, n in sorted(by_status.items()))
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.1f}s "
-          f"({steps} engine steps, backend={args.backend})")
+          f"({steps} engine steps, backend={args.backend}; {status})")
     print(f"slot utilization {server.utilization():.3f}, "
           f"{server.stats['preemptions']} preemptions / "
           f"{server.stats['resumes']} resumes "
@@ -227,6 +268,22 @@ def main():
           f"served from shared pages ({server.prefix_hit_rate():.1%} hit "
           f"rate, {server.stats['prefix_hit_pages']} page hits, "
           f"{server.stats['prefix_reclaims']} reclaims)")
+    if plan is not None:
+        hit_rids = sorted(rid for (_, _, rid) in plan.nan_hits)
+        failed = sorted(r.rid for r in reqs if r.status == "failed")
+        print(f"fault injection landed: NaN rows hit requests {hit_rids}, "
+              f"spills tampered for rids "
+              f"{sorted(plan.corrupted_rids + plan.dropped_rids)} "
+              f"({server.stats['spill_integrity_failures']} caught by CRC), "
+              f"allocator blanked on ticks {plan.blocked_ticks}")
+        assert failed == hit_rids, (failed, hit_rids)
+        for r in reqs:
+            if r.status == "failed":
+                print(f"  req {r.rid} quarantined: {r.error}")
+    summary = server.audit()  # raises PoolCorruptionError if anything broke
+    print(f"pool audit clean at drain: {summary['pages_mapped']} mapped / "
+          f"{summary['pages_free']} free / {summary['pages_parked']} parked "
+          f"pages, {summary['slabs_free']} slabs free")
     for r in reqs[:3]:
         tag = " [truncated]" if r.truncated else ""
         print(f"  req {r.rid}: {r.prompt} -> {r.out}{tag}")

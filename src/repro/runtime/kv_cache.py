@@ -48,6 +48,7 @@ hack in the serving engine; models treat it as an opaque pytree.
 from __future__ import annotations
 
 import math
+import zlib
 from collections import OrderedDict
 from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -79,6 +80,7 @@ __all__ = [
     "scatter_slabs",
     "pool_bytes_per_token",
     "bf16_bytes_per_token",
+    "payload_checksum",
 ]
 
 _EPS = 1e-12
@@ -628,3 +630,19 @@ def bf16_bytes_per_token(pool: Dict) -> float:
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return max(1, math.ceil(n_tokens / page_size))
+
+
+def payload_checksum(payload: List[Dict[str, np.ndarray]]) -> int:
+    """CRC32 over a spill payload (the per-unit leaf dicts ``_preempt``
+    builds: codes + scales + recurrent state). Leaf names are folded into
+    the checksum in sorted order so the value is independent of dict
+    insertion order; computed at preemption on the pristine host bytes and
+    re-verified before a resume commits, so bit rot while spilled is
+    caught instead of silently restored into the pool."""
+    crc = 0
+    for part in payload:
+        for name in sorted(part):
+            arr = np.ascontiguousarray(part[name])
+            crc = zlib.crc32(name.encode(), crc)
+            crc = zlib.crc32(arr.tobytes(), crc)
+    return crc

@@ -99,18 +99,32 @@ import numpy as np
 from repro import models
 from repro.models.transformer import segments_for
 from repro.runtime import kv_cache as kvc
+from repro.runtime.faults import (FaultPlan, PoolCorruptionError,
+                                  ServingError)
 
-__all__ = ["Request", "Server"]
+__all__ = ["Request", "Server", "FaultPlan", "PoolCorruptionError",
+           "ServingError"]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
-def _decode_step_jit(params, caches, tokens, cache_index, cfg, a_fmt):
+def _decode_step_jit(params, caches, tokens, cache_index, poison, cfg, a_fmt):
     """Module-level jitted engine step: ``cfg`` is a frozen (hashable)
     ArchConfig, so the compiled program cache is shared across Server
     instances — a restarted or side-by-side server reuses every
-    prefill-chunk and decode executable instead of recompiling."""
-    return models.decode_step(params, cfg, tokens, caches, cache_index,
-                              a_fmt=a_fmt)
+    prefill-chunk and decode executable instead of recompiling.
+
+    Returns ``(logits, row_ok, caches)``: ``row_ok`` is the per-row
+    isfinite sentinel — True iff every logit in the row is finite — and
+    is the engine's detection path for FP8's operational sharp edge (a
+    NaN code point or overflow saturating through the cache poisons the
+    row's logits). ``poison`` is a per-row bool *input* (no retrace):
+    fault injection sets it to force NaN upstream of the sentinel, so
+    chaos tests exercise the same detection path production does."""
+    logits, caches = models.decode_step(params, cfg, tokens, caches,
+                                        cache_index, a_fmt=a_fmt)
+    logits = jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
+    row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
+    return logits, row_ok, caches
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
@@ -159,6 +173,8 @@ class Request:
     frames: Optional[np.ndarray] = None  # enc-dec: (encoder_seq, d) embeddings
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "ok"  # terminal status: "ok" | "truncated" | "failed"
+    error: Optional[str] = None  # diagnostic when status == "failed"
     truncated: bool = False  # retired at the max_seq bound with < max_new out
     preemptions: int = 0  # times this request's pages were stolen
     evictions: int = 0  # times its host spill was dropped (re-prefilled)
@@ -185,6 +201,9 @@ class _Spill:
     shared_pages: int  # leading content-shared pages (not in the payload)
     payload: List[Dict[str, np.ndarray]]  # per engine unit: leaf -> array
     nbytes: int  # host bytes this spill holds (spill_budget accounting)
+    crc: int = 0  # CRC32 of the pristine payload (kvc.payload_checksum),
+    # re-verified before a resume commits: bit rot while spilled falls
+    # back to a tail re-prefill instead of restoring garbage into the pool
 
 
 class Server:
@@ -202,7 +221,10 @@ class Server:
                  steal_cooldown: int = 2,
                  prefill_chunk_pages: int = 4,
                  spill_budget_bytes: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 strict: bool = True,
+                 audit_every: int = 0,
+                 faults: Optional[FaultPlan] = None):
         """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
         prefill/decode through the fused single-pass W4A8 kernel, and paged
         decode attention (GQA and MLA-latent) through the flash-decoding
@@ -242,7 +264,22 @@ class Server:
         families: enc-dec decoder K/V depends on the encoder frames, not
         just the token prefix, and recurrent families cannot skip a
         prefill chunk (the slab carry has no content address) — both fall
-        back to exclusive prefills automatically."""
+        back to exclusive prefills automatically.
+
+        Failure semantics (see runtime/README.md):
+          * ``strict=True`` (default): ``run_until_drained`` raises
+            ``ServingError`` on starvation — fail-fast for tests/bench.
+            ``strict=False`` degrades per request instead: permanently
+            unadmittable work retires with ``Request.status='failed'``
+            and the drain completes (production mode: one oversized or
+            starved request never takes the batch down).
+          * ``audit_every=N``: every N decode steps, run the full pool
+            ownership audit (``Server.audit()``) in-line and raise
+            ``PoolCorruptionError`` on any violation (0 = off).
+          * ``faults``: a ``runtime.faults.FaultPlan`` consulted at the
+            engine's injection hook points — None (default) keeps every
+            hook a no-op; injection never changes the jitted programs
+            (the NaN poison is a jit *input*)."""
         if scheduler not in ("token_budget", "reserve"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.kernel_backend = kernel_backend
@@ -259,6 +296,9 @@ class Server:
         self.steal_cooldown = steal_cooldown
         self.prefill_chunk_pages = prefill_chunk_pages
         self.spill_budget_bytes = spill_budget_bytes
+        self.strict = strict
+        self.audit_every = audit_every
+        self.faults = faults
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.preempted: List[_Spill] = []
@@ -269,8 +309,14 @@ class Server:
             "pages_stolen": 0, "spill_evictions": 0, "truncated": 0,
             "prefix_hit_pages": 0, "prefix_hit_tokens": 0,
             "prefix_reclaims": 0, "resume_fallbacks": 0,
+            "failed": 0, "spill_integrity_failures": 0,
         }
         self._step_no = 0
+        # engine tick: advances every step() *call*, decoded or not — the
+        # clock fault hooks key on (a blocked alloc tick always passes,
+        # so injected exhaustion is transient by construction)
+        self._tick = 0
+        self._alloc_faulted = False
         self._submit_seq = 0
         self._spill_bytes = 0
         # distinct (padded_chunk_len, table_width) prefill signatures fed to
@@ -400,6 +446,10 @@ class Server:
         self.lengths = np.zeros(slots, dtype=np.int32)
         self._slot_seq = [0] * slots  # admission sequence of the occupant
         self._slot_since = [0] * slots  # step admitted/resumed (cooldown)
+        # clean poison masks for the jitted step (fault injection swaps in
+        # a real mask; reused so the no-fault path allocates nothing)
+        self._no_poison = jnp.zeros((slots,), jnp.bool_)
+        self._no_poison1 = jnp.zeros((1,), jnp.bool_)
 
     @property
     def _null_page(self) -> int:
@@ -432,6 +482,11 @@ class Server:
         """Pages allocatable right now: the free list plus the prefix
         cache's refcount-0 reusable LRU — reclaimed (blanked) before any
         live request is ever stolen from."""
+        if self._alloc_faulted:
+            # injected transient exhaustion: the allocator reports dry for
+            # this tick, so admission defers and growth falls back to the
+            # normal steal response — exactly what a real stall triggers
+            return 0
         n = len(self.free_pages)
         if self._prefix is not None:
             n += self._prefix.n_reusable
@@ -516,6 +571,20 @@ class Server:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        if not len(req.prompt):
+            raise ValueError(
+                f"request {req.rid}: empty prompt (decode needs at least "
+                "one context token to seed the first logits row)")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new={req.max_new} must be >= 1")
+        lo, hi = min(req.prompt), max(req.prompt)
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"request {req.rid}: prompt token ids must be in "
+                f"[0, {self.cfg.vocab_size}), got "
+                f"{lo if lo < 0 else hi} (an out-of-vocab id would surface "
+                "as an opaque in-graph embedding gather)")
         if len(req.prompt) >= self.max_seq:
             # fail fast here: the streaming prefill would otherwise run out
             # of reserved pages mid-chunk with an opaque shape error
@@ -656,6 +725,14 @@ class Server:
                     return False
             if not self._slab_available(req.priority):
                 return False
+            if kvc.payload_checksum(spill.payload) != spill.crc:
+                # bit rot while spilled: restoring these bytes would put
+                # silent garbage in the pool. Drop them and fall back to
+                # the eviction-style tail re-prefill — the request still
+                # finishes, token-identically, it just pays the prefill
+                self.stats["spill_integrity_failures"] += 1
+                self._evict_spill(spill)
+                return self._admit_one(slot)
             self.preempted.remove(spill)
             self._spill_bytes -= spill.nbytes
             self._resume(slot, spill, shared_pids, need - self._cross_pp)
@@ -760,6 +837,7 @@ class Server:
             self._prefix.assert_unfrozen(
                 own[start // page: kvc.pages_needed(n, page)])
         logits = None
+        ok = True
         pos = start
         while pos < n:
             take = min(chunk, n - pos)
@@ -787,14 +865,26 @@ class Server:
                                     np.asarray([pos], np.int32), chunk_len)
             state = state._replace(page_table=jnp.asarray(table))
             with _backend_scope(self.kernel_backend):
-                logits, pools = self._decode(self.params, self.pools,
-                                             jnp.asarray([toks], jnp.int32),
-                                             state)
+                logits, row_ok, pools = self._decode(
+                    self.params, self.pools, jnp.asarray([toks], jnp.int32),
+                    state, self._no_poison1)
             self.pools = pools
+            ok = ok and bool(np.asarray(row_ok)[0])
             self.prefill_traces.add((padded, w))
             pos += take
         self.lengths[slot] = n
         self.stats["prefill_tokens"] += n - start
+        if not ok:
+            # non-finite logits during this request's prefill: quarantine
+            # the request alone. Its pages are NOT registered in the
+            # prefix index (frozen garbage would poison every future hit)
+            # and no seed token is appended — retire through the normal
+            # path so pages/slab accounting stays intact
+            self._fail_slot(slot, req,
+                            f"non-finite logits during prefill of request "
+                            f"{req.rid} ({n} context tokens)",
+                            scrub_null=True)
+            return
         if self._prefix is not None:
             self._register_prefix(slot, req)
         if fresh:
@@ -856,10 +946,16 @@ class Server:
                     for name, leaf in pool.items()}
             nbytes += sum(a.nbytes for a in part.values())
             payload.append(part)
+        # integrity checksum over the pristine bytes; the fault hook runs
+        # *after* it (tampering models bit rot during host residency, so
+        # the resume-time verify is what must catch it)
+        crc = kvc.payload_checksum(payload)
+        if self.faults is not None:
+            payload = self.faults.spill_payload(req.rid, payload)
         req.since = self._step_no  # re-enters the wait line now
         self.preempted.append(_Spill(req=req, ctx_len=ctx_len,
                                      shared_pages=shared, payload=payload,
-                                     nbytes=nbytes))
+                                     nbytes=nbytes, crc=crc))
         self._spill_bytes += nbytes
         req.preemptions += 1
         self.stats["preemptions"] += 1
@@ -998,6 +1094,8 @@ class Server:
     # -- retirement ----------------------------------------------------------
     def _retire(self, slot: int, req: Request):
         req.done = True
+        if req.truncated and req.status == "ok":
+            req.status = "truncated"
         self.active[slot] = None
         self.finished.append(req)
         # freed pages are NOT zeroed (that would rewrite the whole pool per
@@ -1023,6 +1121,96 @@ class Server:
             self.slab_table[slot] = self._n_slabs
         self.lengths[slot] = 0
 
+    # -- request-level failure isolation --------------------------------------
+    def _scrub_slot(self, slot: int, include_null: bool = False):
+        """Zero every pool page / slab a quarantined row may have written:
+        its private non-registered pages, cross pages and slab — plus the
+        shared null page when a failing prefill's bucketed overhang wrote
+        there. Necessary, not cosmetic: a non-finite upstream activation
+        writes NaN K/V codes, and NaN survives attention's zero-weight
+        masking (0 * NaN = NaN) — a recycled free-list page or the null
+        page holding NaN bytes would fail *healthy* rows, breaking exactly
+        the isolation the quarantine guarantees. Registered pages are
+        excluded: they were frozen by a healthy prefill (the CoW invariant
+        keeps a failing row's writes out of them)."""
+        priv = list(self.slot_pages[slot][self.slot_shared[slot]:])
+        if include_null:
+            priv.append(self._null_page)
+        kv_ids = jnp.asarray(priv, jnp.int32) if priv else None
+        cross_ids = (jnp.asarray(self.slot_cross[slot], jnp.int32)
+                     if self.slot_cross[slot] else None)
+        slab_ids = (jnp.asarray([self.slot_slab[slot]], jnp.int32)
+                    if self.slot_slab[slot] >= 0 else None)
+        for path, kind in self._units:
+            ids = {"kv": kv_ids, "cross": cross_ids}.get(kind, slab_ids)
+            if ids is None:
+                continue
+            pool = self._unit(path)
+            for name in pool:
+                pool[name] = pool[name].at[:, ids].set(0)
+            self._set_unit(path, pool)
+
+    def _fail_slot(self, slot: int, req: Request, error: str,
+                   scrub_null: bool = False):
+        """Quarantine one active row: scrub the pool bytes it wrote, mark
+        it failed and retire it through the normal path — its pages/slab
+        free (or park) with refcounts intact, every other row keeps
+        decoding. The per-process blast radius of a poisoned row is
+        exactly that row."""
+        self._scrub_slot(slot, include_null=scrub_null)
+        req.status = "failed"
+        req.error = error
+        self.stats["failed"] += 1
+        self._retire(slot, req)
+
+    def _fail_request(self, req: Request, error: str):
+        """Fail a request that holds no pool state (queued or already
+        spilled-and-dropped): it retires straight into ``finished``."""
+        req.status = "failed"
+        req.error = error
+        req.done = True
+        self.stats["failed"] += 1
+        self.finished.append(req)
+
+    def _fail_pending(self, reason: str):
+        """Non-strict starvation response: fail every queued and spilled
+        request individually (dropping spill bytes) instead of raising a
+        drain-wide error — active rows are untouched and keep decoding."""
+        for sp in list(self.preempted):
+            self.preempted.remove(sp)
+            self._spill_bytes -= sp.nbytes
+            self._fail_request(sp.req, reason)
+        for req in list(self.queue):
+            self.queue.remove(req)
+            self._fail_request(req, reason)
+
+    def _pending_diagnostics(self) -> List[Dict]:
+        """One diagnostic dict per request still waiting or running —
+        attached to ServingError so strict-mode callers see *why* each
+        straggler could not finish."""
+        diag = []
+        for req in self.queue:
+            ctx = req.resume_ctx if req.resume_ctx is not None else req.prompt
+            diag.append({
+                "rid": req.rid, "state": "queued", "since": req.since,
+                "out_tokens": len(req.out), "ctx_len": len(ctx),
+                "pages_needed": (kvc.pages_needed(len(ctx), self.page_size)
+                                 + self._cross_pp if self._has_pages else 0)})
+        for sp in self.preempted:
+            diag.append({
+                "rid": sp.req.rid, "state": "spilled", "since": sp.req.since,
+                "out_tokens": len(sp.req.out), "ctx_len": sp.ctx_len,
+                "pages_needed": (kvc.pages_needed(sp.ctx_len, self.page_size)
+                                 + self._cross_pp if self._has_pages else 0),
+                "spill_bytes": sp.nbytes})
+        for s, req in enumerate(self.active):
+            if req is not None:
+                diag.append({
+                    "rid": req.rid, "state": "active", "slot": s,
+                    "out_tokens": len(req.out),
+                    "ctx_len": int(self.lengths[s])})
+        return diag
+
     # -- engine step ----------------------------------------------------------
     def step(self):
         """One decode step for all active slots. Per-slot true lengths, the
@@ -1030,6 +1218,9 @@ class Server:
         families the slab ids) ride into the jitted step as inputs —
         per-row positions and length masks, one fixed-shape program.
         Returns True if any slot decoded."""
+        self._tick += 1
+        self._alloc_faulted = (self.faults is not None
+                               and self.faults.alloc_blocked(self._tick))
         self._enforce_spill_budget()
         self._admit()
         if self.scheduler == "token_budget":
@@ -1050,13 +1241,29 @@ class Server:
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 tok[s, 0] = req.out[-1]
+        pmask = (self.faults.poison_rows(self._step_no, self.slots)
+                 if self.faults is not None else None)
+        poison = (jnp.asarray(pmask) if pmask is not None and pmask.any()
+                  else self._no_poison)
         state = self._state_for(slice(None), self.lengths)
         with _backend_scope(self.kernel_backend):
-            logits, self.pools = self._decode(self.params, self.pools,
-                                              jnp.asarray(tok), state)
+            logits, row_ok, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(tok), state, poison)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        okrow = np.asarray(row_ok)
         for s, req in enumerate(self.active):
             if req is None:
+                continue
+            if not okrow[s]:
+                # the in-graph isfinite sentinel tripped for this row:
+                # quarantine exactly this request (its garbage token is
+                # never appended; pages/slab retire through the normal
+                # path) while the rest of the batch keeps going
+                if pmask is not None and pmask[s]:
+                    self.faults.note_nan(self._step_no, s, req.rid)
+                self._fail_slot(s, req,
+                                f"non-finite logits at decode step "
+                                f"{self._step_no} (slot {s})")
                 continue
             req.out.append(int(nxt[s]))
             self.lengths[s] += 1
@@ -1069,6 +1276,8 @@ class Server:
                     req.truncated = True
                     self.stats["truncated"] += 1
                 self._retire(s, req)
+        if self.audit_every and self._step_no % self.audit_every == 0:
+            self.audit()
         return True
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
@@ -1077,15 +1286,25 @@ class Server:
 
         Starvation guard: if an engine step makes no progress while work is
         still waiting (queued or preempted-but-never-resumed — e.g. the pool
-        was fully stolen and nothing can be readmitted), this raises instead
-        of spinning to ``max_steps`` and silently dropping the stragglers."""
+        was fully stolen and nothing can be readmitted), ``strict=True``
+        raises ``ServingError`` — carrying the requests that *did* finish
+        during this call plus per-request pending diagnostics, so callers
+        recover partial results — instead of spinning to ``max_steps`` and
+        silently dropping the stragglers. ``strict=False`` instead fails
+        exactly the unadmittable requests (``status='failed'`` with the
+        starvation diagnostic as ``Request.error``) and completes the
+        drain: request-level isolation for production traffic. A step
+        blocked only by an injected transient allocator fault is not
+        starvation — capacity returns on the next tick."""
         start = len(self.finished)
         for _ in range(max_steps):
             if self.step():
                 continue
             if not self.queue and not self.preempted:
                 break
-            raise RuntimeError(
+            if self._alloc_faulted:
+                continue  # injected transient exhaustion, not starvation
+            msg = (
                 f"serving starved: {len(self.queue)} queued + "
                 f"{len(self.preempted)} preempted request(s) cannot be "
                 f"(re)admitted with {self._free_capacity()}/{self._n_pages} "
@@ -1093,16 +1312,130 @@ class Server:
                 f"{len(self.free_slabs)}/{self._n_slabs} "
                 "slabs free and no active work to retire — the pool is "
                 "too small for the waiting context (or pages leaked)")
+            if not self.strict:
+                self._fail_pending(msg)
+                continue  # active rows (if any) still drain normally
+            raise ServingError(msg, finished=self.finished[start:],
+                               pending=self._pending_diagnostics())
         else:
             pending = (len(self.queue) + len(self.preempted)
                        + sum(r is not None for r in self.active))
             if pending:
-                raise RuntimeError(
+                raise ServingError(
                     f"run_until_drained: max_steps={max_steps} exhausted "
-                    f"with {pending} request(s) still pending")
+                    f"with {pending} request(s) still pending",
+                    finished=self.finished[start:],
+                    pending=self._pending_diagnostics())
         return self.finished[start:]
 
     # -- accounting ------------------------------------------------------------
+    def audit(self) -> Dict:
+        """Full pool-ownership audit: the invariants the scheduler fuzz
+        tests assert, promoted to a production check (run it ad hoc, or
+        every N decode steps via ``audit_every``). Raises a structured
+        ``PoolCorruptionError`` — every violation plus a state dump — if
+        anything is broken; returns a summary dict when clean.
+
+        Invariants: page refcounts equal table occupancy; the mapped /
+        parked / free sets are pairwise disjoint and partition the pool
+        (no leaks, no double-frees); the device page table mirrors the
+        host slot lists; each slot's pages are a leading shared-frozen
+        registered run followed by exclusively-owned unregistered private
+        pages; no active row's boundary (write-target) page is frozen;
+        slabs are exclusively owned, owned + free partition the slab
+        pool, and the slab table mirrors ownership."""
+        from collections import Counter
+
+        v: List[str] = []
+        mapped = Counter()
+        for ids in self.slot_pages:
+            mapped.update(ids)
+        for ids in self.slot_cross:
+            mapped.update(ids)
+        for pid in range(self._n_pages):
+            if self.page_refs[pid] != mapped.get(pid, 0):
+                v.append(f"page {pid}: refcount {int(self.page_refs[pid])} "
+                         f"!= {mapped.get(pid, 0)} table mappings")
+        free, parked = self.free_pages, self.reusable_pages
+        if len(free) != len(set(free)):
+            v.append(f"double-freed pages in the free list: {free}")
+        for kind_a, kind_b, inter in (
+                ("mapped", "free", set(mapped) & set(free)),
+                ("mapped", "parked", set(mapped) & set(parked)),
+                ("free", "parked", set(free) & set(parked))):
+            if inter:
+                v.append(f"pages both {kind_a} and {kind_b}: {sorted(inter)}")
+        if sorted(set(mapped) | set(free) | set(parked)) != \
+                list(range(self._n_pages)):
+            lost = (set(range(self._n_pages))
+                    - set(mapped) - set(free) - set(parked))
+            v.append(f"pages leaked from the pool: {sorted(lost)}")
+        for slot, ids in enumerate(self.slot_pages):
+            if not np.array_equal(self.page_table[slot, :len(ids)], ids):
+                v.append(f"slot {slot}: page table "
+                         f"{self.page_table[slot, :len(ids)].tolist()} != "
+                         f"owned pages {ids}")
+            for i, pid in enumerate(ids):
+                if i < self.slot_shared[slot]:
+                    if self._prefix is None or \
+                            not self._prefix.registered(pid):
+                        v.append(f"slot {slot}: shared page {pid} not "
+                                 "registered in the prefix index")
+                else:
+                    if self.page_refs[pid] != 1:
+                        v.append(f"slot {slot}: private page {pid} has "
+                                 f"refcount {int(self.page_refs[pid])} "
+                                 "(copy-on-write violated)")
+                    if self._prefix is not None and \
+                            self._prefix.registered(pid):
+                        v.append(f"slot {slot}: private page {pid} is "
+                                 "registered (would be written while "
+                                 "shared-frozen)")
+        if self._prefix is not None:
+            for s, req in enumerate(self.active):
+                if req is None:
+                    continue
+                bidx = int(self.lengths[s]) // self.page_size
+                if bidx < len(self.slot_pages[s]) and \
+                        self._prefix.registered(self.slot_pages[s][bidx]):
+                    v.append(f"slot {s}: boundary (write-target) page "
+                             f"{self.slot_pages[s][bidx]} is frozen")
+        owned = [s for s in self.slot_slab if s >= 0]
+        if len(owned) != len(set(owned)):
+            v.append(f"slab double-owned: {owned}")
+        if sorted(owned + self.free_slabs) != list(range(self._n_slabs)):
+            v.append(f"slabs leaked: owned {sorted(owned)} + free "
+                     f"{sorted(self.free_slabs)} != 0..{self._n_slabs - 1}")
+        for slot in range(self.slots):
+            want = self.slot_slab[slot] if self.slot_slab[slot] >= 0 \
+                else self._n_slabs
+            if int(self.slab_table[slot]) != want:
+                v.append(f"slot {slot}: slab table "
+                         f"{int(self.slab_table[slot])} != owned {want}")
+        if v:
+            dump = {
+                "step": self._step_no, "tick": self._tick,
+                "page_refs": self.page_refs.tolist(),
+                "slot_pages": [list(p) for p in self.slot_pages],
+                "slot_cross": [list(p) for p in self.slot_cross],
+                "slot_shared": list(self.slot_shared),
+                "free_pages": list(self.free_pages),
+                "parked_pages": list(parked),
+                "slot_slab": list(self.slot_slab),
+                "free_slabs": list(self.free_slabs),
+                "lengths": self.lengths.tolist(),
+                "active_rids": [r.rid if r is not None else None
+                                for r in self.active],
+            }
+            raise PoolCorruptionError(v, dump)
+        return {"step": self._step_no,
+                "pages_mapped": len(mapped), "pages_free": len(free),
+                "pages_parked": len(parked),
+                "slabs_owned": len(owned),
+                "slabs_free": len(self.free_slabs),
+                "active": sum(r is not None for r in self.active),
+                "violations": 0}
+
     def utilization(self) -> float:
         """Mean fraction of slots that decoded per engine step — the number
         the token-budget scheduler raises under long-tail max_new."""

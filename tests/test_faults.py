@@ -1,0 +1,470 @@
+"""Fault-tolerant serving: request-level failure isolation, deterministic
+fault injection, spill integrity checksums, and the runtime pool auditor.
+
+Covers: submit() input validation fail-fasts; the in-graph isfinite
+sentinel quarantining exactly the poisoned row (decode and prefill) with
+pages/slabs retired through the normal accounting path; spill CRC
+verification falling back to the tail re-prefill on corrupted/dropped
+payloads (token-identical recovery); transient allocator-exhaustion
+injection absorbed by the steal/defer machinery; Server.audit() returning
+a clean summary vs raising structured PoolCorruptionError on seeded
+corruption (ad hoc and via audit_every); strict-mode ServingError carrying
+partial results + pending diagnostics and non-strict per-request
+starvation failure; deadline/failed interplay in victim selection; and
+the capstone seeded chaos test (NaN + corrupted spill + alloc fault on a
+steal-happy pool, bf16 + fp8): survivors token-identical to the fault-free
+run, exactly the injected requests fail, audit clean at drain."""
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import tiny_lm_cfg
+
+from repro import models
+from repro.runtime import kv_cache as kvc
+from repro.runtime.faults import FaultPlan
+from repro.runtime.serve import (PoolCorruptionError, Request, Server,
+                                 ServingError)
+
+
+def _tiny_server(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("kv_fmt", "fp8_e4m3")
+    kw.setdefault("page_size", 4)
+    kw.setdefault("a_fmt", None)
+    return Server(params, cfg, **kw)
+
+
+def _solo_out(params, cfg, prompt, max_new, **kw):
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("kv_fmt", "fp8_e4m3")
+    kw.setdefault("page_size", 4)
+    srv = Server(params, cfg, slots=1, a_fmt=None, **kw)
+    ref = Request(rid=99, prompt=list(prompt), max_new=max_new)
+    srv.submit(ref)
+    srv.run_until_drained()
+    return ref.out
+
+
+class TestSubmitValidation:
+    @pytest.fixture(scope="class")
+    def srv(self):
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        return _tiny_server(params, cfg)
+
+    def test_empty_prompt_rejected(self, srv):
+        with pytest.raises(ValueError, match="empty prompt"):
+            srv.submit(Request(rid=0, prompt=[], max_new=4))
+
+    def test_nonpositive_max_new_rejected(self, srv):
+        with pytest.raises(ValueError, match="max_new"):
+            srv.submit(Request(rid=0, prompt=[1, 2], max_new=0))
+        with pytest.raises(ValueError, match="max_new"):
+            srv.submit(Request(rid=0, prompt=[1, 2], max_new=-3))
+
+    def test_out_of_vocab_ids_rejected(self, srv):
+        v = srv.cfg.vocab_size
+        with pytest.raises(ValueError, match="vocab"):
+            srv.submit(Request(rid=0, prompt=[1, v], max_new=4))
+        with pytest.raises(ValueError, match="vocab"):
+            srv.submit(Request(rid=0, prompt=[-1, 2], max_new=4))
+
+    def test_rejected_request_leaves_no_state(self, srv):
+        before = (list(srv.queue), srv._submit_seq)
+        with pytest.raises(ValueError):
+            srv.submit(Request(rid=0, prompt=[], max_new=4))
+        assert (list(srv.queue), srv._submit_seq) == before
+
+
+class TestNaNQuarantine:
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_decode_nan_quarantines_only_offending_row(self, trained_tiny,
+                                                       kv_fmt):
+        """A NaN logits row (injected in-graph, upstream of the sentinel)
+        fails exactly that request; batchmates finish token-identical to
+        solo runs and the drained pool is whole."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        plan = FaultPlan(nan_logits=((2, 1),))
+        srv = _tiny_server(params, cfg, slots=3, kv_fmt=kv_fmt, faults=plan)
+        reqs = [Request(rid=i, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=8) for i in range(3)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        victim = reqs[1]  # slot i holds rid i: all admitted in one round
+        assert victim.done and victim.status == "failed"
+        assert "non-finite" in victim.error
+        assert plan.nan_hits == [(2, 1, victim.rid)]
+        assert srv.stats["failed"] == 1
+        for r in reqs:
+            if r is victim:
+                continue
+            assert r.status == "ok" and r.error is None
+            assert r.out == _solo_out(params, cfg, r.prompt, 8, kv_fmt=kv_fmt)
+        assert srv.audit()["violations"] == 0
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+
+    def test_prefill_nonfinite_fails_request_not_process(self, trained_tiny):
+        """Non-finite logits during a prefill stream fail that request
+        without registering its pages in the prefix index (frozen garbage
+        must never become a future hit) and without a process error. The
+        quarantine scrubs every page the failing prefill wrote — including
+        the shared null page its bucketed overhang hit: NaN K/V codes
+        survive attention's zero-weight masking (0 * NaN = NaN), so
+        unscubbed bytes would fail healthy batchmates and successors."""
+        cfg, params = trained_tiny
+        bad = dict(params)
+        # poison one learned position embedding: only a context that
+        # reaches position 5 goes non-finite, through the real forward
+        # pass (token embeddings are tied to the head, so poisoning those
+        # would NaN one logit column for every request)
+        pos = np.array(bad["pos_embed"])  # host copy, original dtype
+        pos[5] = np.nan
+        bad["pos_embed"] = pos
+        srv = _tiny_server(bad, cfg)
+        ok_req = Request(rid=0, prompt=[13, 14, 15], max_new=2)
+        bad_req = Request(rid=1, prompt=[3, 4, 5, 6, 8, 9, 10, 11, 12],
+                          max_new=4)
+        srv.submit(ok_req)
+        srv.submit(bad_req)
+        srv.run_until_drained()
+        assert bad_req.done and bad_req.status == "failed"
+        assert "prefill" in bad_req.error
+        assert bad_req.out == []  # no seed token from garbage logits
+        assert ok_req.status == "ok" and len(ok_req.out) == 2
+        # the failed prefill's pages (incl. the null page) were scrubbed:
+        # a successor recycling them from the free list decodes clean
+        after = Request(rid=2, prompt=[16, 17, 18], max_new=2)
+        srv.submit(after)
+        srv.run_until_drained()
+        assert after.status == "ok" and len(after.out) == 2
+        assert srv.audit()["violations"] == 0
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+
+    def test_failed_recurrent_request_frees_slab(self):
+        """Slab accounting for a quarantined recurrent request: the slab
+        returns to the free pool and a later request reuses it."""
+        from repro.configs import get_smoke
+
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        plan = FaultPlan(nan_logits=((2, 0),))
+        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
+                     pool_slabs=2, prefill_chunk_pages=1, page_size=4,
+                     faults=plan)
+        a = Request(rid=0, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                    max_new=8)
+        b = Request(rid=1, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
+                    max_new=6)
+        srv.submit(a)
+        srv.submit(b)
+        srv.run_until_drained()
+        assert a.status == "failed" and plan.nan_hits[0][2] == 0
+        assert b.status == "ok"
+        assert sorted(srv.free_slabs) == list(range(srv._n_slabs))
+        assert srv.audit()["violations"] == 0
+        solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
+                      prefill_chunk_pages=1, page_size=4)
+        ref = Request(rid=99, prompt=list(b.prompt), max_new=6)
+        solo.submit(ref)
+        solo.run_until_drained()
+        assert b.out == ref.out
+
+
+class TestSpillIntegrity:
+    @pytest.mark.parametrize("mode", ["corrupt", "drop"])
+    def test_tampered_spill_reprefills_token_identical(self, trained_tiny,
+                                                       mode):
+        """A corrupted (one byte flipped) or dropped (zeroed) host spill
+        fails the CRC verify at resume; the engine falls back to the tail
+        re-prefill and the request still finishes token-identically — a
+        rotted spill costs a prefill, never correctness."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        plan = (FaultPlan(corrupt_spills=(0,)) if mode == "corrupt"
+                else FaultPlan(drop_spills=(0,)))
+        srv = _tiny_server(params, cfg, pool_pages=6, faults=plan)
+        reqs = [Request(rid=i, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10) for i in range(2)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert srv.stats["preemptions"] >= 1
+        assert srv.stats["spill_integrity_failures"] == 1
+        assert srv.stats["spill_evictions"] >= 1
+        tampered = (plan.corrupted_rids if mode == "corrupt"
+                    else plan.dropped_rids)
+        assert len(tampered) == 1
+        for r in reqs:
+            assert r.status == "ok" and len(r.out) == 10
+            assert r.out == _solo_out(params, cfg, r.prompt, 10)
+        assert srv.audit()["violations"] == 0
+
+    def test_checksum_detects_any_single_byte_flip(self, trained_tiny):
+        """payload_checksum changes under every single-byte XOR the
+        corruptor can apply (CRC32 is linear: flipped bits always move
+        the checksum)."""
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg, pool_pages=6)
+        r = Request(rid=0, prompt=[3, 4, 5, 6, 7], max_new=8)
+        srv.submit(r)
+        srv.step()
+        srv._preempt(0)
+        sp = srv.preempted[0]
+        clean = kvc.payload_checksum(sp.payload)
+        assert clean == sp.crc
+        for seed in range(5):
+            plan = FaultPlan(seed=seed, corrupt_spills=(0,))
+            tampered = plan.spill_payload(r.rid, sp.payload)
+            assert kvc.payload_checksum(tampered) != clean
+        # the original payload was not mutated in place
+        assert kvc.payload_checksum(sp.payload) == clean
+
+
+class TestAllocFaults:
+    def test_transient_exhaustion_recovers_token_identical(self,
+                                                           trained_tiny):
+        """A blanked-allocator tick defers admission and routes growth
+        through the steal path; once the tick passes, everything resumes
+        and finishes token-identically — transient exhaustion is absorbed,
+        not fatal."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(7)
+        plan = FaultPlan(alloc_fail_ticks=(3, 4))
+        srv = _tiny_server(params, cfg, pool_pages=6, faults=plan)
+        reqs = [Request(rid=i, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10) for i in range(2)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert plan.blocked_ticks == [3, 4]
+        for r in reqs:
+            assert r.status == "ok"
+            assert r.out == _solo_out(params, cfg, r.prompt, 10)
+        assert srv.audit()["violations"] == 0
+
+    def test_blocked_idle_tick_is_not_starvation(self, trained_tiny):
+        """run_until_drained must not call a step blocked only by an
+        injected allocator fault 'starved' — capacity returns next tick."""
+        cfg, params = trained_tiny
+        plan = FaultPlan(alloc_fail_ticks=(1,))
+        srv = _tiny_server(params, cfg, faults=plan)
+        r = Request(rid=0, prompt=[3, 4, 5], max_new=4)
+        srv.submit(r)
+        srv.run_until_drained()  # tick 1 admits nothing; tick 2 proceeds
+        assert r.status == "ok" and len(r.out) == 4
+        assert plan.blocked_ticks == [1]
+
+
+class TestAuditor:
+    def test_clean_audit_returns_summary(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg)
+        r = Request(rid=0, prompt=[3, 4, 5, 6, 7], max_new=6)
+        srv.submit(r)
+        srv.step()
+        mid = srv.audit()
+        assert mid["violations"] == 0 and mid["active"] == 1
+        assert mid["pages_mapped"] == len(srv.slot_pages[0])
+        srv.run_until_drained()
+        end = srv.audit()
+        assert end["violations"] == 0 and end["active"] == 0
+
+    def test_refcount_corruption_raises_structured(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg)
+        srv.submit(Request(rid=0, prompt=[3, 4, 5, 6, 7], max_new=6))
+        srv.step()
+        srv.page_refs[srv.slot_pages[0][0]] += 1  # seeded corruption
+        with pytest.raises(PoolCorruptionError, match="refcount") as ei:
+            srv.audit()
+        assert any("refcount" in v for v in ei.value.violations)
+        assert ei.value.dump["slot_pages"][0] == srv.slot_pages[0]
+        assert "page_refs" in ei.value.dump
+
+    def test_double_free_and_leak_detected(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg)
+        srv.submit(Request(rid=0, prompt=[3, 4, 5, 6, 7], max_new=6))
+        srv.step()
+        srv.free_pages.append(srv.slot_pages[0][0])  # mapped AND free
+        with pytest.raises(PoolCorruptionError) as ei:
+            srv.audit()
+        assert any("mapped and free" in v for v in ei.value.violations)
+
+    def test_audit_every_runs_inside_step(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg, audit_every=1)
+        srv.submit(Request(rid=0, prompt=[3, 4, 5, 6, 7], max_new=8))
+        srv.step()  # clean: audit passes silently
+        srv.page_refs[srv.slot_pages[0][0]] += 1
+        with pytest.raises(PoolCorruptionError):
+            srv.step()
+
+
+class TestStrictness:
+    def _starve(self, params, cfg, strict):
+        """A finishes while B sits spilled against a pool that never
+        recovers: strict raises with partial results, non-strict fails
+        exactly B."""
+        rng = np.random.default_rng(5)
+        srv = _tiny_server(params, cfg, pool_pages=8, strict=strict,
+                           prefix_cache=False)
+        a = Request(rid=0, prompt=rng.integers(1, 64, 3).tolist(), max_new=6)
+        # B's resume will need pages(9 ctx) + headroom = 4 pages; after the
+        # free list is dropped, A's retirement returns only 2 — B starves
+        b = Request(rid=1, prompt=rng.integers(1, 64, 9).tolist(), max_new=6)
+        srv.submit(a)
+        srv.submit(b)
+        srv.step()  # both admitted
+        srv._preempt(srv.active.index(b))
+        srv.free_pages.clear()  # the pool never recovers for B
+        return srv, a, b
+
+    def test_strict_starvation_attaches_partial_results(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv, a, b = self._starve(params, cfg, strict=True)
+        with pytest.raises(ServingError, match="starved") as ei:
+            srv.run_until_drained()
+        # A finished during the failing call and is recoverable from the
+        # exception; B's pending diagnostics say what it was waiting for
+        assert ei.value.finished == [a] and a.status == "ok"
+        assert len(a.out) == 6
+        (diag,) = ei.value.pending
+        assert diag["rid"] == b.rid and diag["state"] == "spilled"
+        assert diag["pages_needed"] > 0
+
+    def test_non_strict_fails_pending_per_request(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv, a, b = self._starve(params, cfg, strict=False)
+        done = srv.run_until_drained()  # completes: degrade per request
+        assert a in done and b in done
+        assert a.status == "ok" and len(a.out) == 6
+        assert b.status == "failed" and "starved" in b.error
+        assert srv.stats["failed"] == 1
+        assert not srv.preempted and srv._spill_bytes == 0
+
+    def test_max_steps_attaches_diagnostics(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _tiny_server(params, cfg)
+        r = Request(rid=0, prompt=[3, 4, 5], max_new=20)
+        srv.submit(r)
+        with pytest.raises(ServingError, match="max_steps") as ei:
+            srv.run_until_drained(max_steps=3)
+        (diag,) = ei.value.pending
+        assert diag["rid"] == 0 and diag["state"] == "active"
+        assert diag["out_tokens"] == len(r.out) > 0
+
+    def test_legacy_starvation_match_still_works(self, trained_tiny):
+        """ServingError subclasses RuntimeError and keeps the 'starved'
+        message — existing callers catching RuntimeError keep working."""
+        cfg, params = trained_tiny
+        srv, a, b = self._starve(params, cfg, strict=True)
+        with pytest.raises(RuntimeError, match="starved"):
+            srv.run_until_drained()
+
+
+class TestDeadlineFailedInterplay:
+    def test_failed_row_stops_shielding(self, trained_tiny):
+        """Satellite: a tight-deadline request that fails is retired out
+        of the active set immediately — victim selection must never see
+        (and shield) the dead row; the surviving no-deadline request is
+        the only candidate and finishes token-identically."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(13)
+        plan = FaultPlan(nan_logits=((2, 1),))
+        srv = _tiny_server(params, cfg, pool_pages=6, steal_cooldown=0,
+                           faults=plan)
+        loose = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10)
+        tight = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
+                        max_new=10, deadline_step=14)  # would be shielded
+        srv.submit(loose)
+        srv.submit(tight)
+        srv.step()
+        srv.step()  # step 2: tight (slot 1) is poisoned and quarantined
+        assert tight.status == "failed" and tight.done
+        assert srv.active[1] is None
+        assert srv.active[srv._pick_victim()] is loose
+        srv.run_until_drained()
+        assert loose.status == "ok"
+        assert loose.out == _solo_out(params, cfg, loose.prompt, 10)
+
+    def test_truncated_status_and_failed_are_distinct(self, trained_tiny):
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(4)
+        srv = Server(params, cfg, slots=1, max_seq=16, kv_fmt=None,
+                     page_size=4, a_fmt=None)
+        r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                    max_new=50)
+        srv.submit(r)
+        srv.run_until_drained()
+        assert r.truncated and r.status == "truncated" and r.error is None
+        assert srv.stats["failed"] == 0
+
+
+class TestChaos:
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_chaos_survivors_token_identical(self, trained_tiny, kv_fmt):
+        """Capstone: a steal-happy mixed workload under a seeded fault
+        schedule (NaN rows + a corrupted spill + transient allocator
+        exhaustion, audited every 2 steps). Exactly the NaN-hit requests
+        fail; every survivor — including preempted/resumed and
+        re-prefilled ones — finishes token-identical to the fault-free
+        run; the auditor is clean at drain and the pool is whole."""
+        cfg, params = trained_tiny
+
+        def workload():
+            rng = np.random.default_rng(17)
+            return [Request(rid=i,
+                            prompt=rng.integers(1, 64,
+                                                rng.choice([3, 5, 9])).tolist(),
+                            max_new=int(rng.choice([4, 8, 14])),
+                            priority=int(rng.choice([0, 1])))
+                    for i in range(10)]
+
+        def serve(faults=None, audit_every=0):
+            srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt=kv_fmt,
+                         page_size=4, pool_pages=9, a_fmt=None,
+                         headroom_pages=1, steal_cooldown=1,
+                         faults=faults, audit_every=audit_every)
+            reqs = workload()
+            for r in reqs:
+                srv.submit(r)
+            srv.run_until_drained(max_steps=800)
+            return srv, reqs
+
+        clean_srv, clean_reqs = serve()
+        clean = {r.rid: list(r.out) for r in clean_reqs}
+        assert clean_srv.stats["preemptions"] >= 1, \
+            "chaos workload must exercise steals"
+        assert all(r.status == "ok" for r in clean_reqs)
+
+        plan = FaultPlan(seed=23, nan_logits=((10, 0), (15, 2)),
+                         corrupt_spills=(0,), alloc_fail_ticks=(20,))
+        srv, reqs = serve(faults=plan, audit_every=2)
+
+        failed = {r.rid for r in reqs if r.status == "failed"}
+        assert failed == {rid for (_, _, rid) in plan.nan_hits}
+        assert len(failed) >= 1, "the NaN schedule must land"
+        assert srv.stats["failed"] == len(failed)
+        assert srv.stats["spill_integrity_failures"] >= 1
+        assert plan.corrupted_rids and plan.blocked_ticks == [20]
+        # unaffected requests: token-identical to the fault-free run
+        for r in reqs:
+            assert r.done
+            if r.rid not in failed:
+                assert r.status == "ok"
+                assert list(r.out) == clean[r.rid], (r.rid, r.out)
+        # drained engine: auditor clean, pool whole
+        assert srv.audit()["violations"] == 0
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+        assert (srv.page_refs == 0).all()
