@@ -19,6 +19,10 @@ later request maps them straight from the content-addressed prefix cache
 (refcount++, zero prefill compute) and streams only its own tail. Compare
 against ``--no-prefix-cache`` to see the cold-engine cost.
 
+``--temperature T`` (with ``--top-k/--top-p/--seed``) switches every
+request from greedy argmax to in-graph seeded sampling — same compiled
+decode step, per-row fixed-trace masks, reproducible run-to-run.
+
 ``--inject-faults SEED`` serves the same workload through a seeded
 deterministic fault schedule (a NaN-poisoned decode row, a bit-flipped
 host spill, a transient allocator stall): exactly the poisoned requests
@@ -41,7 +45,8 @@ from repro import models
 from repro.core.policy import QuantPolicy
 from repro.core.ptq import quantize_tree
 from repro.kernels import ops
-from repro.runtime.serve import FaultPlan, Request, Server
+from repro.runtime.serve import (FaultPlan, Request, SamplingParams,
+                                 SchedulerConfig, Server, ServerConfig)
 
 from benchmarks.common import BENCH_CFG, trained_params
 
@@ -109,8 +114,10 @@ def serve_families(backend):
         cfg = get_smoke(arch)
         encdec = cfg.encoder_layers > 0
         params = _train_smoke(cfg, tag, with_frames=encdec)
-        srv = Server(params, cfg, slots=3, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=8, kernel_backend=backend, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=3, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, kernel_backend=backend,
+                                  a_fmt=None))
         reqs = []
         for rid in range(3):
             prompt = rng.integers(1, cfg.vocab_size,
@@ -147,6 +154,20 @@ def main():
                          "pages up front) or token-budget (prompt pages + "
                          "headroom, on-demand growth, page-steal preemption)")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "default; > 0 samples in-graph with the "
+                         "fixed-trace top-k/top-p masks)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens before "
+                         "sampling (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest probability "
+                         "mass >= p (1.0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request RNG seed base; request rid uses "
+                         "seed+rid so streams differ but each is "
+                         "reproducible run-to-run")
     ap.add_argument("--max-new-tail", type=int, default=0,
                     help="long-tail workload: every third request gets this "
                          "max_new instead of --max-new (0 = uniform). "
@@ -216,13 +237,15 @@ def main():
               f"NaN rows at {plan.nan_logits}, corrupt spill ordinals "
               f"{plan.corrupt_spills}, allocator blanked on ticks "
               f"{plan.alloc_fail_ticks}")
-    server = Server(packed, BENCH_CFG, slots=args.slots, max_seq=96,
-                    kernel_backend=args.backend, kv_fmt=kv_fmt,
-                    page_size=page_size, scheduler=args.scheduler,
-                    pool_pages=args.pool_pages or None,
-                    prefix_cache=not args.no_prefix_cache,
-                    strict=False, faults=plan,
-                    audit_every=args.audit_every)
+    server = Server(packed, BENCH_CFG,
+                    ServerConfig(slots=args.slots, max_seq=96,
+                                 kernel_backend=args.backend, kv_fmt=kv_fmt,
+                                 page_size=page_size,
+                                 pool_pages=args.pool_pages or None,
+                                 prefix_cache=not args.no_prefix_cache,
+                                 strict=False, audit_every=args.audit_every,
+                                 scheduler=SchedulerConfig(policy=args.scheduler)),
+                    faults=plan)
     print(f"kv cache: paged {args.kv_fmt}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
           f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
@@ -230,6 +253,10 @@ def main():
     shared = (rng.integers(1, BENCH_CFG.vocab_size,
                            size=args.shared_prefix).tolist()
               if args.shared_prefix else [])
+    if args.temperature > 0:
+        print(f"sampling: temperature={args.temperature}, "
+              f"top_k={args.top_k}, top_p={args.top_p}, "
+              f"seed base {args.seed} (+rid per request)")
     reqs = []
     for rid in range(args.requests):
         prompt = shared + rng.integers(1, BENCH_CFG.vocab_size,
@@ -237,7 +264,9 @@ def main():
         max_new = args.max_new
         if args.max_new_tail and rid % 3 == 0:
             max_new = args.max_new_tail
-        r = Request(rid=rid, prompt=prompt, max_new=max_new)
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + rid)
+        r = Request(rid=rid, prompt=prompt, max_new=max_new, sampling=sp)
         reqs.append(r)
         server.submit(r)
 

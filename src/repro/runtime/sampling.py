@@ -1,0 +1,181 @@
+"""In-graph batched sampling for the paged serving engine.
+
+The engine decodes every active slot in one fixed-shape jitted step, so
+sampling has to be *fixed-trace* too: temperature, top-k and top-p are
+per-row **array inputs** (never Python branches), compiled once into the
+decode step as per-row masks over the logits. A greedy row
+(``temperature == 0``) and a sampled row ride the same program — the
+final ``where`` selects argmax for greedy rows, so a server that only
+ever serves greedy traffic pays one extra fused epilogue, not a retrace.
+
+Reproducibility contract: a request's token stream is a pure function of
+``(params, prompt, SamplingParams)`` — independent of batch composition,
+page steals, spills and resumes. Two properties deliver that:
+
+  * the KV path is already bit-deterministic (pages restore bit-exactly,
+    prefix-cache hits are scale-frozen), so the logits row a request sees
+    at emitted-token index ``i`` is the same in any batch; and
+  * the RNG key for emitted-token index ``i`` is
+    ``fold_in(PRNGKey(seed), i)`` — split per *emitted-token index*, not
+    per engine step. A step-split key would tangle a request's stream
+    with whatever else happened to be scheduled that step; the per-index
+    split makes the draw at index ``i`` identical whether the request ran
+    solo, batched, or was stolen and resumed halfway through.
+
+Mask semantics (mirrored by the numpy oracle in tests/test_sampling.py):
+top-k keeps every logit ``>=`` the k-th largest *after* temperature
+scaling (ties at the boundary are all kept — the fixed-shape threshold
+compare cannot break ties, and keeping ties is the conservative side);
+top-p keeps the smallest prefix of the descending-sorted distribution
+whose *exclusive* cumulative probability is still ``< p`` (so the top
+token always survives, and ``p = 1`` keeps everything). Survivors are
+renormalized implicitly by ``categorical`` over the masked logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplingParams", "sampling_mask", "sample_tokens",
+           "slot_arrays", "fill_slot", "clear_slot"]
+
+# temperature == 0 selects the argmax branch; the sampling branch still
+# traces (fixed trace), so its divide needs a non-zero denominator
+_MIN_TEMP = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling spec, carried (immutably) on the Request.
+
+    ``temperature == 0`` (the default) is greedy argmax — bit-identical
+    to the pre-sampling engine. ``top_k == 0`` disables the top-k mask,
+    ``top_p == 1.0`` disables the nucleus mask. ``seed`` roots the
+    request's RNG key; the stream is reproducible for a fixed seed
+    regardless of batch composition or preemption (see module doc)."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    def validate(self, rid: Optional[int] = None) -> "SamplingParams":
+        """Fail-fast bounds check (same style as Server.submit's prompt
+        checks): temperature >= 0, 0 < top_p <= 1, top_k >= 0."""
+        tag = f"request {rid}: " if rid is not None else ""
+        if not self.temperature >= 0:  # NaN fails this comparison too
+            raise ValueError(
+                f"{tag}temperature={self.temperature} must be >= 0 "
+                "(0 = greedy argmax)")
+        if not 0 < self.top_p <= 1:
+            raise ValueError(
+                f"{tag}top_p={self.top_p} must be in (0, 1] "
+                "(1 disables the nucleus mask)")
+        if not self.top_k >= 0:
+            raise ValueError(
+                f"{tag}top_k={self.top_k} must be >= 0 "
+                "(0 disables the top-k mask)")
+        return self
+
+
+# -- host-side slot arrays ---------------------------------------------------
+# The engine threads sampling state through the jitted step as five flat
+# arrays (one entry per slot). Idle rows keep the greedy defaults — their
+# sampled token is discarded anyway, and temperature 0 keeps the where()
+# on the cheap branch.
+
+def slot_arrays(n: int) -> dict:
+    """Greedy-default per-slot sampling arrays for an ``n``-row step."""
+    return {
+        "temperature": np.zeros(n, np.float32),
+        "top_k": np.zeros(n, np.int32),
+        "top_p": np.ones(n, np.float32),
+        "seed": np.zeros(n, np.uint32),
+        "count": np.zeros(n, np.int32),
+    }
+
+
+def fill_slot(arrs: dict, i: int, sp: SamplingParams, emitted: int):
+    """Load slot ``i`` with a request's params and its emitted-token
+    count (the RNG key index for the token about to be sampled)."""
+    arrs["temperature"][i] = sp.temperature
+    arrs["top_k"][i] = sp.top_k
+    arrs["top_p"][i] = sp.top_p
+    arrs["seed"][i] = np.uint32(sp.seed & 0xFFFFFFFF)
+    arrs["count"][i] = emitted
+
+
+def clear_slot(arrs: dict, i: int):
+    """Reset slot ``i`` to the greedy defaults (idle row)."""
+    arrs["temperature"][i] = 0.0
+    arrs["top_k"][i] = 0
+    arrs["top_p"][i] = 1.0
+    arrs["seed"][i] = 0
+    arrs["count"][i] = 0
+
+
+def as_tuple(arrs: dict) -> tuple:
+    """The positional form the jitted step takes (stable field order)."""
+    return (jnp.asarray(arrs["temperature"]), jnp.asarray(arrs["top_k"]),
+            jnp.asarray(arrs["top_p"]), jnp.asarray(arrs["seed"]),
+            jnp.asarray(arrs["count"]))
+
+
+# -- in-graph sampling -------------------------------------------------------
+
+def sampling_mask(scaled, top_ks, top_ps):
+    """Fixed-trace per-row keep mask over temperature-scaled logits.
+
+    ``scaled``: (B, V) f32 logits / temperature. ``top_ks``: (B,) i32
+    (0 = off). ``top_ps``: (B,) f32 in (0, 1]. Returns a (B, V) bool mask
+    of the tokens that survive both filters. No dynamic shapes: both
+    filters reduce to a per-row threshold value gathered from the
+    descending sort, then one vectorized compare."""
+    vocab = scaled.shape[-1]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]  # descending per row
+    # top-k: the k-th largest value is the keep threshold (>=, so ties at
+    # the boundary are all kept); k = 0 disables
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_ks - 1, 0, vocab - 1)[:, None], axis=-1)
+    keep_k = jnp.where((top_ks > 0)[:, None], scaled >= kth, True)
+    # top-p: keep the smallest descending prefix whose exclusive cumsum
+    # of probability is < p — the top token's exclusive mass is 0, so at
+    # least one token always survives; p = 1 keeps everything
+    probs = jax.nn.softmax(srt, axis=-1)
+    exclusive = jnp.cumsum(probs, axis=-1) - probs
+    n_keep = jnp.sum(exclusive < top_ps[:, None], axis=-1)  # >= 1
+    cut = jnp.take_along_axis(srt, (n_keep - 1)[:, None], axis=-1)
+    keep_p = scaled >= cut
+    return keep_k & keep_p
+
+
+def sample_tokens(logits, temps, top_ks, top_ps, seeds, counts):
+    """One sampled (or greedy) token id per row, inside the jitted step.
+
+    ``logits``: (B, V) f32. Per-row arrays: ``temps`` f32 (0 = greedy),
+    ``top_ks`` i32, ``top_ps`` f32, ``seeds`` u32 (the request's RNG
+    root) and ``counts`` i32 (the request's emitted-token index for this
+    draw). Returns (B,) i32 token ids. Greedy rows take the argmax; a
+    poisoned/non-finite row's draw is garbage, but the engine's row_ok
+    sentinel discards it before it is ever appended."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, _MIN_TEMP)[:, None]
+    keep = sampling_mask(scaled, top_ks, top_ps)
+    masked = jnp.where(keep, scaled, -jnp.inf)
+
+    def draw(seed, count, row):
+        # key split per emitted-token *index*, not per engine step: the
+        # draw at index i is the same in any batch / after any resume
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seeds, counts, masked).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)

@@ -90,6 +90,8 @@ import contextlib
 import dataclasses
 import functools
 import math
+import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -99,32 +101,43 @@ import numpy as np
 from repro import models
 from repro.models.transformer import segments_for
 from repro.runtime import kv_cache as kvc
+from repro.runtime import sampling as smp
 from repro.runtime.faults import (FaultPlan, PoolCorruptionError,
                                   ServingError)
+from repro.runtime.sampling import SamplingParams
 
-__all__ = ["Request", "Server", "FaultPlan", "PoolCorruptionError",
-           "ServingError"]
+__all__ = ["Request", "RequestResult", "TokenEvent", "Server",
+           "ServerConfig", "SchedulerConfig", "SamplingParams", "FaultPlan",
+           "PoolCorruptionError", "ServingError"]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
-def _decode_step_jit(params, caches, tokens, cache_index, poison, cfg, a_fmt):
+def _decode_step_jit(params, caches, tokens, cache_index, poison, samp,
+                     cfg, a_fmt):
     """Module-level jitted engine step: ``cfg`` is a frozen (hashable)
     ArchConfig, so the compiled program cache is shared across Server
     instances — a restarted or side-by-side server reuses every
     prefill-chunk and decode executable instead of recompiling.
 
-    Returns ``(logits, row_ok, caches)``: ``row_ok`` is the per-row
-    isfinite sentinel — True iff every logit in the row is finite — and
-    is the engine's detection path for FP8's operational sharp edge (a
-    NaN code point or overflow saturating through the cache poisons the
-    row's logits). ``poison`` is a per-row bool *input* (no retrace):
-    fault injection sets it to force NaN upstream of the sentinel, so
-    chaos tests exercise the same detection path production does."""
+    Returns ``(nxt, row_ok, caches)``: ``nxt`` is the per-row next token
+    — sampled in-graph from the logits by ``samp``, a 5-tuple of per-row
+    arrays (temperature, top_k, top_p, seed, emitted-count; see
+    runtime.sampling). Greedy rows (temperature 0) take the argmax, so
+    the pre-sampling engine's output is reproduced bit-exactly; all of
+    it is fixed-trace — sampling params are jit *inputs*, never retrace
+    keys. ``row_ok`` is the per-row isfinite sentinel — True iff every
+    logit in the row is finite — and is the engine's detection path for
+    FP8's operational sharp edge (a NaN code point or overflow
+    saturating through the cache poisons the row's logits). ``poison``
+    is a per-row bool *input* (no retrace): fault injection sets it to
+    force NaN upstream of the sentinel, so chaos tests exercise the same
+    detection path production does."""
     logits, caches = models.decode_step(params, cfg, tokens, caches,
                                         cache_index, a_fmt=a_fmt)
     logits = jnp.where(poison[:, None], jnp.float32(jnp.nan), logits)
     row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
-    return logits, row_ok, caches
+    nxt = smp.sample_tokens(logits, *samp)
+    return nxt, row_ok, caches
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
@@ -161,11 +174,185 @@ def _is_hybrid(cfg) -> bool:
             and cfg.family == "hybrid")
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission/preemption policy knobs (see the module docstring).
+
+    ``policy``: ``"token_budget"`` (default — prompt pages + headroom at
+    admission, on-demand growth, preemption by page steal) or
+    ``"reserve"`` (legacy worst-case reserve-on-admit; the serving
+    benchmark's baseline). The remaining knobs only act under
+    ``token_budget``:
+      * ``headroom_pages``: decode headroom charged at admission on top
+        of the prompt's pages — the first page boundary never stalls.
+      * ``low_watermark``: pages that must stay free *after* admitting
+        fresh work while other requests run (growth slack; hysteresis
+        against admit-then-steal thrash).
+      * ``resume_watermark``: extra free pages, beyond the spilled
+        context, required to resume a preempted request while other
+        requests run (hysteresis against steal/resume ping-pong).
+      * ``steal_cooldown``: steps a freshly admitted/resumed request is
+        protected from preemption (unless no other victim exists).
+      * ``prefill_chunk_pages``: streaming-prefill chunk size, in pages.
+      * ``spill_budget_bytes``: cap on host bytes held by spills; on
+        overflow the oldest spill is evicted and its request re-queued
+        for a full re-prefill (None = unbounded).
+    Both watermarks are bypassed when nothing is running — the pool is
+    then fully available, so progress is always made when physically
+    possible."""
+
+    policy: str = "token_budget"
+    headroom_pages: int = 1
+    low_watermark: int = 0
+    resume_watermark: int = 1
+    steal_cooldown: int = 2
+    prefill_chunk_pages: int = 4
+    spill_budget_bytes: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Frozen Server construction spec (replaces the old 19-kwarg flat
+    ``Server.__init__``; those kwargs still map here through a
+    ``DeprecationWarning`` shim).
+
+    ``kernel_backend``: 'pallas' routes every PackedLinear matmul in
+    prefill/decode through the fused single-pass W4A8 kernel, and paged
+    decode attention (GQA and MLA-latent) through the flash-decoding
+    page-gather kernels; 'ref' forces the jnp oracles; None keeps the
+    process-wide setting.
+
+    ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
+    per-(page, head) M2 scales) or None (bf16 pages, fallback path).
+    Recurrent state slabs always hold exact f32 state regardless.
+    ``page_size``: tokens per page. ``pool_pages``: pool capacity in
+    pages (default: full backing — slots * pages per slot, plus the
+    encoder pages for enc-dec). ``pool_slabs``: state slabs for
+    recurrent families (default: one per slot — full backing).
+
+    ``scheduler``: a nested :class:`SchedulerConfig`.
+
+    ``prefix_cache``: content-addressed sharing of full, scale-frozen
+    prompt pages across requests (refcounted pages + host-side radix
+    index; see the module docstring). Active only for pure page
+    families: enc-dec decoder K/V depends on the encoder frames, not
+    just the token prefix, and recurrent families cannot skip a prefill
+    chunk — both fall back to exclusive prefills automatically.
+
+    Failure semantics (see runtime/README.md):
+      * ``strict=True`` (default): ``run_until_drained`` raises
+        ``ServingError`` on starvation — fail-fast for tests/bench.
+        ``strict=False`` degrades per request instead: permanently
+        unadmittable work retires with ``status='failed'`` and the
+        drain completes (production mode: one oversized or starved
+        request never takes the batch down).
+      * ``audit_every=N``: every N decode steps, run the full pool
+        ownership audit (``Server.audit()``) in-line and raise
+        ``PoolCorruptionError`` on any violation (0 = off)."""
+
+    slots: int = 4
+    max_seq: int = 512
+    a_fmt: Optional[str] = "fp8_e4m3"
+    kernel_backend: Optional[str] = None
+    kv_fmt: Optional[str] = None
+    page_size: int = 64
+    pool_pages: Optional[int] = None
+    pool_slabs: Optional[int] = None
+    scheduler: SchedulerConfig = SchedulerConfig()
+    prefix_cache: bool = True
+    strict: bool = True
+    audit_every: int = 0
+
+
+# legacy flat-kwarg -> config-field mapping for the deprecation shim
+_LEGACY_SCHED_KW = ("headroom_pages", "low_watermark", "resume_watermark",
+                    "steal_cooldown", "prefill_chunk_pages",
+                    "spill_budget_bytes")
+_LEGACY_TOP_KW = ("slots", "max_seq", "a_fmt", "kernel_backend", "kv_fmt",
+                  "page_size", "pool_pages", "pool_slabs", "prefix_cache",
+                  "strict", "audit_every")
+
+
+def _config_from_legacy(kwargs: Dict) -> ServerConfig:
+    """Map the pre-redesign flat ``Server.__init__`` kwargs onto a
+    ``ServerConfig`` (+ nested ``SchedulerConfig``). Unknown names raise
+    TypeError exactly like a normal bad keyword would."""
+    sched = {k: kwargs.pop(k) for k in _LEGACY_SCHED_KW if k in kwargs}
+    if "scheduler" in kwargs:
+        sched["policy"] = kwargs.pop("scheduler")
+    top = {k: kwargs.pop(k) for k in _LEGACY_TOP_KW if k in kwargs}
+    if kwargs:
+        raise TypeError(
+            f"Server() got unexpected keyword argument(s) {sorted(kwargs)}")
+    return ServerConfig(scheduler=SchedulerConfig(**sched), **top)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One engine emission: a decoded token for a request, or (with
+    ``finished=True`` and ``token=None``) the request's terminal event.
+    ``index`` is the emitted-token index (0 = the prefill's seed token),
+    ``t`` the host perf_counter timestamp at decode — the raw material
+    for TTFT / inter-token-latency measurement. Buffered by the Server
+    only while a front-end has switched ``collect_events`` on."""
+
+    rid: int
+    token: Optional[int]
+    index: int
+    t: float
+    finished: bool = False
+    status: Optional[str] = None  # terminal status on the finished event
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Immutable outcome of one served request — what
+    ``run_until_drained`` returns and the async front-end resolves to,
+    split from the mutable in-flight ``Request``. ``status`` is the one
+    source of truth for how the request ended: ``"ok"`` (hit max_new),
+    ``"truncated"`` (retired at the max_seq bound with fewer tokens) or
+    ``"failed"`` (quarantined; ``error`` has the diagnostic).
+    ``token_times`` holds the per-token host timestamps the engine
+    recorded at decode — ``ttft``/``itl`` derive latency from them."""
+
+    rid: int
+    tokens: Tuple[int, ...]
+    status: str
+    error: Optional[str]
+    prompt_len: int
+    preemptions: int  # times this request's pages were stolen
+    evictions: int  # times its host spill was dropped (re-prefilled)
+    submitted_at: float
+    token_times: Tuple[float, ...]
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    @property
+    def truncated(self) -> bool:
+        return self.status == "truncated"
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Seconds from submit to the first token (None if none came)."""
+        if not self.token_times:
+            return None
+        return self.token_times[0] - self.submitted_at
+
+    @property
+    def itl(self) -> Tuple[float, ...]:
+        """Inter-token gaps in seconds (empty with < 2 tokens)."""
+        ts = self.token_times
+        return tuple(b - a for a, b in zip(ts, ts[1:]))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: list
     max_new: int = 16
+    sampling: SamplingParams = SamplingParams()  # frozen -> safe default
     priority: int = 0  # higher = steal from it last; ties -> slack, then age
     deadline_step: Optional[int] = None  # SLO: engine step to finish by;
     # victim selection steals the most slack first within a priority class
@@ -175,12 +362,27 @@ class Request:
     done: bool = False
     status: str = "ok"  # terminal status: "ok" | "truncated" | "failed"
     error: Optional[str] = None  # diagnostic when status == "failed"
-    truncated: bool = False  # retired at the max_seq bound with < max_new out
     preemptions: int = 0  # times this request's pages were stolen
     evictions: int = 0  # times its host spill was dropped (re-prefilled)
     resume_ctx: Optional[list] = None  # evicted: full context to re-prefill
     since: int = 0  # server-managed: step this request entered the wait line
     seq: int = 0  # server-managed: global arrival sequence (tie-break)
+    t_submit: float = 0.0  # server-managed: perf_counter at submit()
+    token_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def truncated(self) -> bool:
+        """Retired at the max_seq bound with < max_new tokens out. Folded
+        into ``status`` — one source of truth for how the request ended."""
+        return self.status == "truncated"
+
+    def result(self) -> RequestResult:
+        """Snapshot this (retired) request as an immutable result."""
+        return RequestResult(
+            rid=self.rid, tokens=tuple(self.out), status=self.status,
+            error=self.error, prompt_len=len(self.prompt),
+            preemptions=self.preemptions, evictions=self.evictions,
+            submitted_at=self.t_submit, token_times=tuple(self.token_times))
 
 
 @dataclasses.dataclass
@@ -204,100 +406,68 @@ class _Spill:
     crc: int = 0  # CRC32 of the pristine payload (kvc.payload_checksum),
     # re-verified before a resume commits: bit rot while spilled falls
     # back to a tail re-prefill instead of restoring garbage into the pool
+    rng_seed: int = 0  # sampling RNG root at preemption — with ``emitted``
+    emitted: int = 0  # (tokens sampled so far) this is the complete RNG
+    # state of the stream: token i's key is fold_in(PRNGKey(seed), i), so
+    # a resume continues the stream token-identically from index
+    # ``emitted``. Both ride on the Request too (sampling.seed / len(out));
+    # the spill carries them explicitly so _resume can assert the
+    # restored stream position matches the bytes being restored
 
 
 class Server:
-    def __init__(self, params, cfg, slots: int = 4, max_seq: int = 512,
-                 a_fmt: Optional[str] = "fp8_e4m3",
-                 kernel_backend: Optional[str] = None,
-                 kv_fmt: Optional[str] = None,
-                 page_size: int = 64,
-                 pool_pages: Optional[int] = None,
-                 pool_slabs: Optional[int] = None,
-                 scheduler: str = "token_budget",
-                 headroom_pages: int = 1,
-                 low_watermark: int = 0,
-                 resume_watermark: int = 1,
-                 steal_cooldown: int = 2,
-                 prefill_chunk_pages: int = 4,
-                 spill_budget_bytes: Optional[int] = None,
-                 prefix_cache: bool = True,
-                 strict: bool = True,
-                 audit_every: int = 0,
-                 faults: Optional[FaultPlan] = None):
-        """``kernel_backend``: 'pallas' routes every PackedLinear matmul in
-        prefill/decode through the fused single-pass W4A8 kernel, and paged
-        decode attention (GQA and MLA-latent) through the flash-decoding
-        page-gather kernels; 'ref' forces the jnp oracles; None keeps the
-        process-wide setting.
+    def __init__(self, params, cfg, config: Optional[ServerConfig] = None,
+                 *, faults: Optional[FaultPlan] = None, **legacy):
+        """``config``: a frozen :class:`ServerConfig` (every construction
+        knob lives there; scheduler policy knobs nest in its
+        ``scheduler: SchedulerConfig``). ``faults`` is runtime state, not
+        configuration — a ``runtime.faults.FaultPlan`` consulted at the
+        engine's injection hook points; None (default) keeps every hook a
+        no-op, and injection never changes the jitted programs (the NaN
+        poison is a jit *input*).
 
-        ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
-        per-(page, head) M2 scales) or None (bf16 pages, fallback path).
-        Recurrent state slabs always hold exact f32 state regardless.
-        ``page_size``: tokens per page. ``pool_pages``: pool capacity in
-        pages (default: full backing — slots * pages per slot, plus the
-        encoder pages for enc-dec). ``pool_slabs``: state slabs for
-        recurrent families (default: one per slot — full backing).
-
-        Scheduler knobs (``scheduler='token_budget'``):
-          * ``headroom_pages``: decode headroom charged at admission on top
-            of the prompt's pages — the first page boundary never stalls.
-          * ``low_watermark``: pages that must stay free *after* admitting
-            fresh work while other requests run (growth slack; hysteresis
-            against admit-then-steal thrash).
-          * ``resume_watermark``: extra free pages, beyond the spilled
-            context, required to resume a preempted request while other
-            requests run (hysteresis against steal/resume ping-pong).
-          * ``steal_cooldown``: steps a freshly admitted/resumed request is
-            protected from preemption (unless no other victim exists).
-          * ``prefill_chunk_pages``: streaming-prefill chunk, in pages.
-          * ``spill_budget_bytes``: cap on host bytes held by spills; on
-            overflow the oldest spill is evicted and its request re-queued
-            for a full re-prefill (None = unbounded).
-        Both watermarks are bypassed when nothing is running — the pool is
-        then fully available, so progress is always made when physically
-        possible.
-
-        ``prefix_cache``: content-addressed sharing of full, scale-frozen
-        prompt pages across requests (refcounted pages + host-side radix
-        index; see the module docstring). Active only for pure page
-        families: enc-dec decoder K/V depends on the encoder frames, not
-        just the token prefix, and recurrent families cannot skip a
-        prefill chunk (the slab carry has no content address) — both fall
-        back to exclusive prefills automatically.
-
-        Failure semantics (see runtime/README.md):
-          * ``strict=True`` (default): ``run_until_drained`` raises
-            ``ServingError`` on starvation — fail-fast for tests/bench.
-            ``strict=False`` degrades per request instead: permanently
-            unadmittable work retires with ``Request.status='failed'``
-            and the drain completes (production mode: one oversized or
-            starved request never takes the batch down).
-          * ``audit_every=N``: every N decode steps, run the full pool
-            ownership audit (``Server.audit()``) in-line and raise
-            ``PoolCorruptionError`` on any violation (0 = off).
-          * ``faults``: a ``runtime.faults.FaultPlan`` consulted at the
-            engine's injection hook points — None (default) keeps every
-            hook a no-op; injection never changes the jitted programs
-            (the NaN poison is a jit *input*)."""
-        if scheduler not in ("token_budget", "reserve"):
-            raise ValueError(f"unknown scheduler {scheduler!r}")
-        self.kernel_backend = kernel_backend
+        The pre-redesign flat kwargs (``slots=``, ``max_seq=``,
+        ``scheduler="token_budget"``, ``headroom_pages=``, ...) still
+        work through a ``DeprecationWarning`` shim that maps them onto a
+        ``ServerConfig`` — but cannot be mixed with an explicit
+        ``config``."""
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServerConfig or legacy flat kwargs, "
+                    f"not both (got config= and {sorted(legacy)})")
+            warnings.warn(
+                "flat Server(...) kwargs are deprecated; pass "
+                "Server(params, cfg, ServerConfig(...)) — scheduler knobs "
+                "nest under ServerConfig(scheduler=SchedulerConfig(...))",
+                DeprecationWarning, stacklevel=2)
+            config = _config_from_legacy(legacy)
+        if config is None:
+            config = ServerConfig()
+        sched = config.scheduler
+        if sched.policy not in ("token_budget", "reserve"):
+            raise ValueError(f"unknown scheduler policy {sched.policy!r}")
+        self.config = config
+        slots, max_seq = config.slots, config.max_seq
+        kv_fmt, page_size = config.kv_fmt, config.page_size
+        pool_pages, pool_slabs = config.pool_pages, config.pool_slabs
+        a_fmt, prefix_cache = config.a_fmt, config.prefix_cache
+        self.kernel_backend = config.kernel_backend
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
         self.a_fmt = a_fmt
         self.kv_fmt = kv_fmt
-        self.scheduler = scheduler
-        self.headroom_pages = headroom_pages
-        self.low_watermark = low_watermark
-        self.resume_watermark = resume_watermark
-        self.steal_cooldown = steal_cooldown
-        self.prefill_chunk_pages = prefill_chunk_pages
-        self.spill_budget_bytes = spill_budget_bytes
-        self.strict = strict
-        self.audit_every = audit_every
+        self.scheduler = sched.policy
+        self.headroom_pages = sched.headroom_pages
+        self.low_watermark = sched.low_watermark
+        self.resume_watermark = sched.resume_watermark
+        self.steal_cooldown = sched.steal_cooldown
+        self.prefill_chunk_pages = sched.prefill_chunk_pages
+        self.spill_budget_bytes = sched.spill_budget_bytes
+        self.strict = config.strict
+        self.audit_every = config.audit_every
         self.faults = faults
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
@@ -450,6 +620,16 @@ class Server:
         # a real mask; reused so the no-fault path allocates nothing)
         self._no_poison = jnp.zeros((slots,), jnp.bool_)
         self._no_poison1 = jnp.zeros((1,), jnp.bool_)
+        # per-slot sampling params threaded into the jitted step as five
+        # flat arrays (greedy defaults on idle rows); refreshed from the
+        # active requests every step — fixed-trace, never a retrace key
+        self._samp = smp.slot_arrays(slots)
+        # engine emissions for the streaming front-end: decoded-token and
+        # terminal events, buffered only while ``collect_events`` is on
+        # (a sync run_until_drained caller would otherwise grow the
+        # buffer unboundedly with nobody draining it)
+        self.collect_events = False
+        self._events: List[TokenEvent] = []
 
     @property
     def _null_page(self) -> int:
@@ -578,6 +758,10 @@ class Server:
         if req.max_new < 1:
             raise ValueError(
                 f"request {req.rid}: max_new={req.max_new} must be >= 1")
+        # same fail-fast contract as the prompt checks: a bad sampling
+        # bound surfaces here as a clear ValueError, never as an opaque
+        # in-graph mask (top_p <= 0 would silently kill every token)
+        req.sampling.validate(req.rid)
         lo, hi = min(req.prompt), max(req.prompt)
         if lo < 0 or hi >= self.cfg.vocab_size:
             raise ValueError(
@@ -609,6 +793,7 @@ class Server:
                 "shrink prompt/max_new")
         req.since = self._step_no
         req.seq = self._submit_seq
+        req.t_submit = time.perf_counter()
         self._submit_seq += 1
         self.queue.append(req)  # (since, seq) is monotonic here: stays sorted
 
@@ -836,7 +1021,13 @@ class Server:
             # them may be shared-frozen (boundary pages stay private)
             self._prefix.assert_unfrozen(
                 own[start // page: kvc.pages_needed(n, page)])
-        logits = None
+        # the final chunk's in-graph sample seeds the stream (emitted-token
+        # index = len(out): 0 for a fresh prefill; a resume re-prefill
+        # discards the draw, so the index is never consumed twice)
+        samp1 = smp.slot_arrays(1)
+        smp.fill_slot(samp1, 0, req.sampling, len(req.out))
+        samp1 = smp.as_tuple(samp1)
+        nxt = None
         ok = True
         pos = start
         while pos < n:
@@ -865,9 +1056,9 @@ class Server:
                                     np.asarray([pos], np.int32), chunk_len)
             state = state._replace(page_table=jnp.asarray(table))
             with _backend_scope(self.kernel_backend):
-                logits, row_ok, pools = self._decode(
+                nxt, row_ok, pools = self._decode(
                     self.params, self.pools, jnp.asarray([toks], jnp.int32),
-                    state, self._no_poison1)
+                    state, self._no_poison1, samp1)
             self.pools = pools
             ok = ok and bool(np.asarray(row_ok)[0])
             self.prefill_traces.add((padded, w))
@@ -888,7 +1079,7 @@ class Server:
         if self._prefix is not None:
             self._register_prefix(slot, req)
         if fresh:
-            req.out.append(int(jnp.argmax(logits[0])))
+            self._emit_token(req, int(np.asarray(nxt)[0]))
 
     def _register_prefix(self, slot: int, req: Request):
         """Promote this slot's full prompt pages to shared-frozen: register
@@ -955,7 +1146,9 @@ class Server:
         req.since = self._step_no  # re-enters the wait line now
         self.preempted.append(_Spill(req=req, ctx_len=ctx_len,
                                      shared_pages=shared, payload=payload,
-                                     nbytes=nbytes, crc=crc))
+                                     nbytes=nbytes, crc=crc,
+                                     rng_seed=req.sampling.seed,
+                                     emitted=len(req.out)))
         self._spill_bytes += nbytes
         req.preemptions += 1
         self.stats["preemptions"] += 1
@@ -1056,6 +1249,15 @@ class Server:
                 pool[name] = pool[name].at[:, ids].set(jnp.asarray(arr))
             self._set_unit(path, pool)
         self.lengths[slot] = spill.ctx_len
+        # RNG continuity: the spill carries the request's complete sampling
+        # state (seed + emitted count). The key for the next draw is
+        # fold_in(PRNGKey(seed), len(out)) — recomputed from the request,
+        # so the spilled copy is an integrity check, not a live register.
+        assert spill.rng_seed == spill.req.sampling.seed
+        assert spill.emitted == len(spill.req.out), (
+            f"request {spill.req.rid}: spill recorded {spill.emitted} "
+            f"emitted tokens but the request holds {len(spill.req.out)} — "
+            "the resumed RNG stream would diverge")
         self.stats["resumes"] += 1
 
     def _steal_for(self, needer: int) -> bool:
@@ -1091,13 +1293,38 @@ class Server:
                 elif not self._steal_for(slot):
                     break  # pragma: no cover — needer itself is a candidate
 
+    # -- streaming emissions ---------------------------------------------------
+    def _emit_token(self, req: Request, token: int):
+        """Append a decoded token to the request and (when a front-end is
+        listening) buffer its TokenEvent with the decode timestamp — the
+        raw material for TTFT / inter-token latency."""
+        t = time.perf_counter()
+        req.out.append(token)
+        req.token_times.append(t)
+        if self.collect_events:
+            self._events.append(TokenEvent(
+                rid=req.rid, token=token, index=len(req.out) - 1, t=t))
+
+    def _emit_finished(self, req: Request):
+        if self.collect_events:
+            self._events.append(TokenEvent(
+                rid=req.rid, token=None, index=len(req.out),
+                t=time.perf_counter(), finished=True, status=req.status))
+
+    def pop_events(self) -> List[TokenEvent]:
+        """Drain the buffered engine emissions (empty unless a front-end
+        switched ``collect_events`` on). Every decoded token yields one
+        event in decode order; every retirement (ok / truncated / failed)
+        yields a terminal event with the request's status."""
+        ev, self._events = self._events, []
+        return ev
+
     # -- retirement ----------------------------------------------------------
     def _retire(self, slot: int, req: Request):
         req.done = True
-        if req.truncated and req.status == "ok":
-            req.status = "truncated"
         self.active[slot] = None
         self.finished.append(req)
+        self._emit_finished(req)
         # freed pages are NOT zeroed (that would rewrite the whole pool per
         # retirement): recycled pages are overwritten by the prefill stream,
         # and decode appends mask positions past the new owner's length
@@ -1171,6 +1398,7 @@ class Server:
         req.done = True
         self.stats["failed"] += 1
         self.finished.append(req)
+        self._emit_finished(req)
 
     def _fail_pending(self, reason: str):
         """Non-strict starvation response: fail every queued and spilled
@@ -1241,15 +1469,23 @@ class Server:
         for s, req in enumerate(self.active):
             if req is not None and req.out:
                 tok[s, 0] = req.out[-1]
+            if req is not None:
+                # count = tokens emitted so far = RNG index of this draw;
+                # recomputed from the request each step, so the stream
+                # position survives steals and resumes for free
+                smp.fill_slot(self._samp, s, req.sampling, len(req.out))
+            else:
+                smp.clear_slot(self._samp, s)
         pmask = (self.faults.poison_rows(self._step_no, self.slots)
                  if self.faults is not None else None)
         poison = (jnp.asarray(pmask) if pmask is not None and pmask.any()
                   else self._no_poison)
         state = self._state_for(slice(None), self.lengths)
         with _backend_scope(self.kernel_backend):
-            logits, row_ok, self.pools = self._decode(
-                self.params, self.pools, jnp.asarray(tok), state, poison)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            nxt_dev, row_ok, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(tok), state, poison,
+                smp.as_tuple(self._samp))
+        nxt = np.asarray(nxt_dev)
         okrow = np.asarray(row_ok)
         for s, req in enumerate(self.active):
             if req is None:
@@ -1265,7 +1501,7 @@ class Server:
                                 f"non-finite logits at decode step "
                                 f"{self._step_no} (slot {s})")
                 continue
-            req.out.append(int(nxt[s]))
+            self._emit_token(req, int(nxt[s]))
             self.lengths[s] += 1
             self.stats["decoded_tokens"] += 1
             if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
@@ -1273,16 +1509,18 @@ class Server:
                     # hit the max_seq - 1 context bound: the request ends
                     # short of its token budget — flag it instead of
                     # retiring silently as if it were satisfied
-                    req.truncated = True
+                    req.status = "truncated"
                     self.stats["truncated"] += 1
                 self._retire(s, req)
         if self.audit_every and self._step_no % self.audit_every == 0:
             self.audit()
         return True
 
-    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+    def run_until_drained(self, max_steps: int = 10_000) -> List[RequestResult]:
         """Step until queue, preempted set and slots are all empty; returns
-        the requests finished during this call (in retirement order).
+        one immutable ``RequestResult`` snapshot per request finished during
+        this call (in retirement order). The mutable ``Request`` stays the
+        engine's working record; callers get the frozen view.
 
         Starvation guard: if an engine step makes no progress while work is
         still waiting (queued or preempted-but-never-resumed — e.g. the pool
@@ -1315,8 +1553,10 @@ class Server:
             if not self.strict:
                 self._fail_pending(msg)
                 continue  # active rows (if any) still drain normally
-            raise ServingError(msg, finished=self.finished[start:],
-                               pending=self._pending_diagnostics())
+            raise ServingError(
+                msg,
+                finished=[r.result() for r in self.finished[start:]],
+                pending=self._pending_diagnostics())
         else:
             pending = (len(self.queue) + len(self.preempted)
                        + sum(r is not None for r in self.active))
@@ -1324,9 +1564,9 @@ class Server:
                 raise ServingError(
                     f"run_until_drained: max_steps={max_steps} exhausted "
                     f"with {pending} request(s) still pending",
-                    finished=self.finished[start:],
+                    finished=[r.result() for r in self.finished[start:]],
                     pending=self._pending_diagnostics())
-        return self.finished[start:]
+        return [r.result() for r in self.finished[start:]]
 
     # -- accounting ------------------------------------------------------------
     def audit(self) -> Dict:

@@ -24,7 +24,8 @@ from conftest import tiny_lm_cfg
 from repro import models
 from repro.runtime import kv_cache as kvc
 from repro.runtime.faults import FaultPlan
-from repro.runtime.serve import (PoolCorruptionError, Request, Server,
+from repro.runtime.serve import (PoolCorruptionError, Request,
+                                 SchedulerConfig, Server, ServerConfig,
                                  ServingError)
 
 
@@ -156,8 +157,10 @@ class TestNaNQuarantine:
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(3)
         plan = FaultPlan(nan_logits=((2, 0),))
-        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
-                     pool_slabs=2, prefill_chunk_pages=1, page_size=4,
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, a_fmt=None,
+                                  pool_slabs=2, page_size=4,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1)),
                      faults=plan)
         a = Request(rid=0, prompt=rng.integers(1, cfg.vocab_size, 5).tolist(),
                     max_new=8)
@@ -170,8 +173,10 @@ class TestNaNQuarantine:
         assert b.status == "ok"
         assert sorted(srv.free_slabs) == list(range(srv._n_slabs))
         assert srv.audit()["violations"] == 0
-        solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
-                      prefill_chunk_pages=1, page_size=4)
+        solo = Server(params, cfg,
+                      ServerConfig(slots=1, max_seq=32, a_fmt=None,
+                                   page_size=4,
+                                   scheduler=SchedulerConfig(prefill_chunk_pages=1)))
         ref = Request(rid=99, prompt=list(b.prompt), max_new=6)
         solo.submit(ref)
         solo.run_until_drained()
@@ -335,7 +340,9 @@ class TestStrictness:
             srv.run_until_drained()
         # A finished during the failing call and is recoverable from the
         # exception; B's pending diagnostics say what it was waiting for
-        assert ei.value.finished == [a] and a.status == "ok"
+        # finished now carries immutable RequestResult snapshots
+        assert [r.rid for r in ei.value.finished] == [a.rid]
+        assert ei.value.finished[0].ok and a.status == "ok"
         assert len(a.out) == 6
         (diag,) = ei.value.pending
         assert diag["rid"] == b.rid and diag["state"] == "spilled"
@@ -345,7 +352,7 @@ class TestStrictness:
         cfg, params = trained_tiny
         srv, a, b = self._starve(params, cfg, strict=False)
         done = srv.run_until_drained()  # completes: degrade per request
-        assert a in done and b in done
+        assert {a.rid, b.rid} == {r.rid for r in done}
         assert a.status == "ok" and len(a.out) == 6
         assert b.status == "failed" and "starved" in b.error
         assert srv.stats["failed"] == 1
@@ -400,8 +407,9 @@ class TestDeadlineFailedInterplay:
     def test_truncated_status_and_failed_are_distinct(self, trained_tiny):
         cfg, params = trained_tiny
         rng = np.random.default_rng(4)
-        srv = Server(params, cfg, slots=1, max_seq=16, kv_fmt=None,
-                     page_size=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=16, kv_fmt=None,
+                                  page_size=4, a_fmt=None))
         r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
                     max_new=50)
         srv.submit(r)
@@ -431,10 +439,13 @@ class TestChaos:
                     for i in range(10)]
 
         def serve(faults=None, audit_every=0):
-            srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt=kv_fmt,
-                         page_size=4, pool_pages=9, a_fmt=None,
-                         headroom_pages=1, steal_cooldown=1,
-                         faults=faults, audit_every=audit_every)
+            srv = Server(params, cfg,
+                         ServerConfig(slots=3, max_seq=32, kv_fmt=kv_fmt,
+                                      page_size=4, pool_pages=9, a_fmt=None,
+                                      audit_every=audit_every,
+                                      scheduler=SchedulerConfig(headroom_pages=1,
+                                                                steal_cooldown=1)),
+                         faults=faults)
             reqs = workload()
             for r in reqs:
                 srv.submit(r)

@@ -1,0 +1,243 @@
+"""Async streaming front-end: per-request token streams match the sync
+engine, concurrent submissions batch in the running scheduler, terminal
+events carry the outcome, and the stdlib SSE endpoint speaks the
+OpenAI-completions shape. Tests drive asyncio via asyncio.run inside
+sync defs (no pytest-asyncio in the container).
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.runtime.frontend import AsyncServer, serve_http
+from repro.runtime.serve import (Request, SamplingParams, Server,
+                                 ServerConfig, TokenEvent)
+
+
+def _mk(params, cfg, **over):
+    base = dict(slots=3, max_seq=64, page_size=8, a_fmt=None)
+    base.update(over)
+    return Server(params, cfg, ServerConfig(**base))
+
+
+def _sync_reference(params, cfg, specs):
+    srv = _mk(params, cfg)
+    for rid, (prompt, max_new, sp) in enumerate(specs):
+        srv.submit(Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                           sampling=sp))
+    return {r.rid: r.tokens for r in srv.run_until_drained()}
+
+
+async def _collect(front, rid, prompt, max_new, sp):
+    toks, events = [], []
+    async for ev in front.generate(list(prompt), max_new=max_new,
+                                   sampling=sp, rid=rid):
+        events.append(ev)
+        if not ev.finished:
+            toks.append(ev.token)
+    return tuple(toks), events
+
+
+class TestAsyncServer:
+    def _specs(self, cfg):
+        rng = np.random.default_rng(0)
+        return [
+            (rng.integers(1, cfg.vocab_size, 5).tolist(), 6,
+             SamplingParams()),
+            (rng.integers(1, cfg.vocab_size, 9).tolist(), 4,
+             SamplingParams(temperature=0.8, top_k=12, seed=3)),
+            (rng.integers(1, cfg.vocab_size, 3).tolist(), 5,
+             SamplingParams(temperature=1.1, top_p=0.9, seed=9)),
+        ]
+
+    def test_concurrent_streams_match_sync_engine(self, trained_tiny):
+        """Three concurrent generates (greedy + two sampled) stream the
+        same tokens the batch run produces — the front-end only changes
+        delivery, never the schedule's determinism."""
+        cfg, params = trained_tiny
+        specs = self._specs(cfg)
+        want = _sync_reference(params, cfg, specs)
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            try:
+                return await asyncio.gather(*[
+                    _collect(front, rid, p, m, sp)
+                    for rid, (p, m, sp) in enumerate(specs)])
+            finally:
+                await front.close()
+
+        got = asyncio.run(main())
+        for rid, (toks, events) in enumerate(got):
+            assert toks == want[rid], rid
+            assert all(isinstance(e, TokenEvent) for e in events)
+            assert [e.index for e in events[:-1]] == list(range(len(toks)))
+            term = events[-1]
+            assert term.finished and term.token is None
+            assert term.status == "ok"
+            ts = [e.t for e in events]
+            assert ts == sorted(ts)
+
+    def test_late_submission_joins_running_batch(self, trained_tiny):
+        """A generate() issued while the engine is mid-decode streams from
+        the same pump: continuous batching, not run-to-completion."""
+        cfg, params = trained_tiny
+        specs = self._specs(cfg)[:2]
+        want = _sync_reference(params, cfg, specs)
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            try:
+                first = asyncio.ensure_future(
+                    _collect(front, 0, specs[0][0], specs[0][1],
+                             specs[0][2]))
+                # let the pump take a few engine steps before joining
+                for _ in range(8):
+                    await asyncio.sleep(0)
+                second = asyncio.ensure_future(
+                    _collect(front, 1, specs[1][0], specs[1][1],
+                             specs[1][2]))
+                return await asyncio.gather(first, second)
+            finally:
+                await front.close()
+
+        (toks0, _), (toks1, _) = asyncio.run(main())
+        # determinism holds regardless of when each stream was opened
+        assert toks0 == want[0] and toks1 == want[1]
+
+    def test_result_available_after_stream(self, trained_tiny):
+        cfg, params = trained_tiny
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            try:
+                toks, _ = await _collect(front, 0, [1, 2, 3], 4,
+                                         SamplingParams())
+                return toks, front.result(0)
+            finally:
+                await front.close()
+
+        toks, res = asyncio.run(main())
+        assert res is not None and res.tokens == toks and res.ok
+        assert res.ttft is not None and len(res.itl) == 3
+
+    def test_submit_validation_raises_before_streaming(self, trained_tiny):
+        cfg, params = trained_tiny
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            try:
+                gen = front.generate([1, 2], max_new=2,
+                                     sampling=SamplingParams(top_p=0.0))
+                with pytest.raises(ValueError, match="top_p"):
+                    await gen.__anext__()
+            finally:
+                await front.close()
+
+        asyncio.run(main())
+
+
+class TestHTTPEndpoint:
+    async def _post(self, port, body):
+        reader, writer = await asyncio.open_connection("127.0.0.1", port)
+        data = json.dumps(body).encode()
+        writer.write(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                     b"Content-Type: application/json\r\n"
+                     + f"Content-Length: {len(data)}\r\n\r\n".encode()
+                     + data)
+        await writer.drain()
+        raw = await reader.read()
+        writer.close()
+        return raw.decode()
+
+    def test_sse_streams_two_concurrent_prefix_sharing_requests(
+            self, trained_tiny):
+        """Acceptance: two concurrent SSE requests sharing a prompt prefix
+        stream token chunks from one engine; the shared prefix pages hit
+        the content cache (prefix_hit_tokens > 0)."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(5)
+        shared = rng.integers(1, cfg.vocab_size, 16).tolist()
+        p1 = shared + [3, 4]
+        p2 = shared + [9]
+
+        async def main():
+            engine = _mk(params, cfg, slots=2, page_size=8)
+            front = AsyncServer(engine)
+            srv = await serve_http(front, port=0)
+            port = srv.sockets[0].getsockname()[1]
+            try:
+                r1, r2 = await asyncio.gather(
+                    self._post(port, {"prompt": p1, "max_tokens": 5,
+                                      "stream": True}),
+                    self._post(port, {"prompt": p2, "max_tokens": 5,
+                                      "temperature": 0.7, "seed": 4,
+                                      "stream": True}))
+                return r1, r2, engine.stats["prefix_hit_tokens"]
+            finally:
+                srv.close()
+                await srv.wait_closed()
+                await front.close()
+
+        r1, r2, hit_tokens = asyncio.run(main())
+        for raw in (r1, r2):
+            assert "text/event-stream" in raw
+            chunks = [json.loads(ln[6:]) for ln in raw.splitlines()
+                      if ln.startswith("data: {")]
+            toks = [c["choices"][0]["token"] for c in chunks
+                    if c["choices"][0].get("token") is not None]
+            assert len(toks) == 5
+            assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+            assert raw.rstrip().endswith("data: [DONE]")
+        assert hit_tokens > 0  # the second prompt reused the shared pages
+
+    def test_non_stream_matches_sync_tokens(self, trained_tiny):
+        cfg, params = trained_tiny
+        prompt = [1, 2, 3, 4]
+        want = _sync_reference(
+            params, cfg, [(prompt, 5, SamplingParams(temperature=0.9,
+                                                     seed=2))])[0]
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            srv = await serve_http(front, port=0)
+            port = srv.sockets[0].getsockname()[1]
+            try:
+                return await self._post(port, {
+                    "prompt": prompt, "max_tokens": 5,
+                    "temperature": 0.9, "seed": 2})
+            finally:
+                srv.close()
+                await srv.wait_closed()
+                await front.close()
+
+        raw = asyncio.run(main())
+        assert raw.startswith("HTTP/1.1 200")
+        body = json.loads(raw.split("\r\n\r\n", 1)[1])
+        assert tuple(body["choices"][0]["tokens"]) == want
+        assert body["choices"][0]["finish_reason"] == "stop"
+        assert body["usage"]["completion_tokens"] == 5
+
+    def test_bad_request_is_400(self, trained_tiny):
+        cfg, params = trained_tiny
+
+        async def main():
+            front = AsyncServer(_mk(params, cfg))
+            srv = await serve_http(front, port=0)
+            port = srv.sockets[0].getsockname()[1]
+            try:
+                bad_prompt = await self._post(port, {"prompt": "text"})
+                bad_param = await self._post(
+                    port, {"prompt": [1, 2], "top_p": 0.0})
+                return bad_prompt, bad_param
+            finally:
+                srv.close()
+                await srv.wait_closed()
+                await front.close()
+
+        bad_prompt, bad_param = asyncio.run(main())
+        assert bad_prompt.startswith("HTTP/1.1 400")
+        assert "token ids" in bad_prompt
+        assert bad_param.startswith("HTTP/1.1 400")
+        assert "top_p" in bad_param

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro import models
 from repro.kernels import ops
 from repro.runtime import kv_cache as kvc
-from repro.runtime.serve import Request, Server
+from repro.runtime.serve import Request, Server, ServerConfig
 
 
 def _attn_exact(q, k, v, kv_len, g):
@@ -386,12 +386,13 @@ class TestServerPaged:
                 for n in (5, 9, 3)]
 
     def _serve(self, params, cfg, kv_fmt, prompts, max_new=6):
-        srv = Server(params, cfg, slots=len(prompts), max_seq=64,
-                     kv_fmt=kv_fmt, page_size=8, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=len(prompts), max_seq=64,
+                                  kv_fmt=kv_fmt, page_size=8, a_fmt=None))
         for i, p in enumerate(prompts):
             srv.submit(Request(rid=i, prompt=p, max_new=max_new))
         done = srv.run_until_drained()
-        return {r.rid: r.out for r in done}, srv
+        return {r.rid: list(r.tokens) for r in done}, srv
 
     def test_bf16_paged_matches_legacy_greedy(self, trained_tiny):
         """Per-slot true lengths: a mixed-length batch reproduces each
@@ -415,13 +416,14 @@ class TestServerPaged:
     def test_run_until_drained_returns_finished(self, trained_tiny):
         cfg, params = trained_tiny
         prompts = self._prompts(cfg)
-        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=8, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, a_fmt=None))
         for i, p in enumerate(prompts):
             srv.submit(Request(rid=i, prompt=p, max_new=4))
         done = srv.run_until_drained()
         assert sorted(r.rid for r in done) == [0, 1, 2]
-        assert all(r.done and len(r.out) == 4 for r in done)
+        assert all(r.ok and len(r.tokens) == 4 for r in done)
         assert srv.queue == [] and not any(srv.active)
         # pages recycled: 3 requests served through a 2-slot pool (full
         # prompt pages stay parked in the prefix cache's reusable LRU —
@@ -435,13 +437,14 @@ class TestServerPaged:
         retirements, every request still completes correctly."""
         cfg, params = trained_tiny
         prompts = self._prompts(cfg) * 2
-        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=8, pool_pages=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, pool_pages=4, a_fmt=None))
         for i, p in enumerate(prompts):
             srv.submit(Request(rid=i, prompt=p, max_new=4))
         done = srv.run_until_drained()
         assert len(done) == len(prompts)
-        by_rid = {r.rid: r.out for r in done}
+        by_rid = {r.rid: r.tokens for r in done}
         assert by_rid[0] == by_rid[3] and by_rid[2] == by_rid[5]
 
     def test_sliding_window_config_matches_legacy(self, trained_tiny):
@@ -460,8 +463,9 @@ class TestServerPaged:
         """A request that can never fit the pool raises at submit instead of
         head-of-line blocking the queue forever."""
         cfg, params = trained_tiny
-        srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=8, pool_pages=2, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, pool_pages=2, a_fmt=None))
         with pytest.raises(ValueError, match="pages"):
             srv.submit(Request(rid=0, prompt=list(range(1, 20)), max_new=10))
 
@@ -492,13 +496,14 @@ class TestServerEncDec:
         return prompts, frames
 
     def _serve(self, params, cfg, kv_fmt, prompts, frames, max_new=6):
-        srv = Server(params, cfg, slots=len(prompts), max_seq=64,
-                     kv_fmt=kv_fmt, page_size=8, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=len(prompts), max_seq=64,
+                                  kv_fmt=kv_fmt, page_size=8, a_fmt=None))
         for i, (p, f) in enumerate(zip(prompts, frames)):
             srv.submit(Request(rid=i, prompt=list(p), max_new=max_new,
                                frames=f))
         done = srv.run_until_drained()
-        return {r.rid: r.out for r in done}, srv
+        return {r.rid: list(r.tokens) for r in done}, srv
 
     @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
     def test_paged_matches_legacy_greedy(self, trained_tiny_encdec, kv_fmt):
@@ -521,16 +526,18 @@ class TestServerEncDec:
         rng = np.random.default_rng(1)
         prompts, frames = self._reqs(cfg, rng, n=1)
         cross_pp = kvc.pages_needed(cfg.encoder_seq, 8)
-        srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=8, pool_pages=cross_pp, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, pool_pages=cross_pp, a_fmt=None))
         with pytest.raises(ValueError, match="pages"):
             srv.submit(Request(rid=0, prompt=prompts[0], max_new=4,
                                frames=frames[0]))
 
     def test_missing_frames_fails_fast(self, trained_tiny_encdec):
         cfg, params = trained_tiny_encdec
-        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=8, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=8, a_fmt=None))
         # decoder K/V depends on the encoder frames, not just the token
         # prefix: content-addressing by token ids alone would be wrong
         assert srv._prefix is None
@@ -548,8 +555,10 @@ class TestServerEncDec:
         # at admission, but growth to 15 and 19 tokens (4 + 5 pages) wants
         # one page more than the pool holds -> exactly one steal + resume
         cross_pp = kvc.pages_needed(cfg.encoder_seq, 4)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=8 + 2 * cross_pp, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=8 + 2 * cross_pp,
+                                  a_fmt=None))
         reqs = [Request(rid=i, prompt=list(p), max_new=10, frames=f)
                 for i, (p, f) in enumerate(zip(prompts, frames))]
         for r in reqs:
@@ -557,8 +566,9 @@ class TestServerEncDec:
         srv.run_until_drained()
         assert srv.stats["preemptions"] >= 1 and srv.stats["resumes"] >= 1
         for r in reqs:
-            solo = Server(params, cfg, slots=1, max_seq=32,
-                          kv_fmt="fp8_e4m3", page_size=4, a_fmt=None)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                       page_size=4, a_fmt=None))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=10,
                           frames=r.frames)
             solo.submit(ref)

@@ -1,0 +1,335 @@
+"""In-graph sampling: mask parity vs a numpy oracle, greedy identity to
+the pre-sampling argmax engine, seed reproducibility across batch
+compositions and across a preempt/spill/resume cycle, submit-time
+validation, and the ServerConfig/RequestResult API redesign contracts.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import sampling as smp
+from repro.runtime.serve import (Request, RequestResult, SamplingParams,
+                                 SchedulerConfig, Server, ServerConfig)
+
+
+# -- mask parity vs numpy oracle ----------------------------------------------
+
+def _oracle_mask(scaled, top_k, top_p):
+    """Numpy mirror of sampling_mask's documented semantics: top-k keeps
+    everything >= the k-th largest (ties kept); top-p keeps the smallest
+    descending prefix whose exclusive cumulative probability is < p."""
+    keep = np.ones_like(scaled, dtype=bool)
+    for r in range(scaled.shape[0]):
+        row = scaled[r]
+        if top_k[r] > 0:
+            kth = np.sort(row)[::-1][min(top_k[r], row.size) - 1]
+            keep[r] &= row >= kth
+        srt = np.sort(row)[::-1]
+        probs = np.exp(srt - srt.max())
+        probs /= probs.sum()
+        exclusive = np.cumsum(probs) - probs
+        n_keep = int((exclusive < top_p[r]).sum())  # >= 1 always
+        cut = srt[n_keep - 1]
+        keep[r] &= row >= cut
+    return keep
+
+
+class TestMaskOracle:
+    def test_mask_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        scaled = rng.normal(scale=3.0, size=(16, 37)).astype(np.float32)
+        top_k = rng.integers(0, 40, size=16).astype(np.int32)
+        top_p = rng.uniform(0.05, 1.0, size=16).astype(np.float32)
+        top_p[3] = 1.0  # exact no-op nucleus
+        top_k[5] = 0  # top-k off
+        got = np.asarray(smp.sampling_mask(
+            jnp.asarray(scaled), jnp.asarray(top_k), jnp.asarray(top_p)))
+        want = _oracle_mask(scaled, top_k, top_p)
+        assert (got == want).all()
+
+    def test_mask_keeps_boundary_ties(self):
+        # three tokens tied at the k=2 boundary: all three survive (the
+        # fixed-shape threshold compare cannot break ties; keeping them
+        # is the documented conservative side)
+        scaled = jnp.asarray([[5.0, 2.0, 2.0, 2.0, 1.0]])
+        got = np.asarray(smp.sampling_mask(
+            scaled, jnp.asarray([2], jnp.int32), jnp.asarray([1.0])))
+        assert got.tolist() == [[True, True, True, True, False]]
+
+    def test_top_token_always_survives_tiny_p(self):
+        scaled = jnp.asarray(np.random.default_rng(1)
+                             .normal(size=(4, 11)).astype(np.float32))
+        got = np.asarray(smp.sampling_mask(
+            scaled, jnp.zeros(4, jnp.int32), jnp.full(4, 1e-6, jnp.float32)))
+        assert (got.sum(-1) >= 1).all()
+        top = np.asarray(scaled).argmax(-1)
+        assert got[np.arange(4), top].all()
+
+    def test_sampled_tokens_respect_mask(self):
+        rng = np.random.default_rng(2)
+        logits = rng.normal(scale=2.0, size=(8, 23)).astype(np.float32)
+        temps = np.full(8, 0.7, np.float32)
+        top_k = np.full(8, 4, np.int32)
+        top_p = np.full(8, 0.8, np.float32)
+        allowed = _oracle_mask(logits / 0.7, top_k, top_p)
+        for trial in range(5):
+            toks = np.asarray(smp.sample_tokens(
+                jnp.asarray(logits), jnp.asarray(temps), jnp.asarray(top_k),
+                jnp.asarray(top_p), jnp.asarray(np.full(8, trial, np.uint32)),
+                jnp.asarray(np.arange(8), jnp.int32)))
+            assert allowed[np.arange(8), toks].all()
+
+    def test_temperature_zero_rows_are_argmax(self):
+        rng = np.random.default_rng(3)
+        logits = rng.normal(size=(6, 19)).astype(np.float32)
+        temps = np.asarray([0, 0.9, 0, 1.5, 0, 0.1], np.float32)
+        toks = np.asarray(smp.sample_tokens(
+            jnp.asarray(logits), jnp.asarray(temps),
+            jnp.zeros(6, jnp.int32), jnp.ones(6, jnp.float32),
+            jnp.asarray(np.full(6, 7, np.uint32)),
+            jnp.zeros(6, jnp.int32)))
+        greedy = logits.argmax(-1)
+        assert (toks[temps == 0] == greedy[temps == 0]).all()
+
+    def test_draw_depends_on_index_not_batch_row(self):
+        """The key is fold_in(seed, emitted-index): the same (seed, index)
+        draws the same token whatever row of the batch it occupies."""
+        rng = np.random.default_rng(4)
+        row = rng.normal(scale=2.0, size=23).astype(np.float32)
+        for slot in range(3):
+            logits = rng.normal(size=(4, 23)).astype(np.float32)
+            logits[slot] = row
+            toks = np.asarray(smp.sample_tokens(
+                jnp.asarray(logits),
+                jnp.full(4, 0.8, jnp.float32), jnp.zeros(4, jnp.int32),
+                jnp.ones(4, jnp.float32),
+                jnp.asarray(np.full(4, 11, np.uint32)),
+                jnp.full(4, 5, jnp.int32)))
+            if slot == 0:
+                want = toks[0]
+            assert toks[slot] == want
+
+
+# -- validation ---------------------------------------------------------------
+
+class TestValidation:
+    @pytest.mark.parametrize("bad, match", [
+        (dict(temperature=-0.1), "temperature"),
+        (dict(temperature=float("nan")), "temperature"),
+        (dict(top_p=0.0), "top_p"),
+        (dict(top_p=-0.5), "top_p"),
+        (dict(top_p=1.5), "top_p"),
+        (dict(top_k=-1), "top_k"),
+    ])
+    def test_bad_params_raise(self, bad, match):
+        with pytest.raises(ValueError, match=match):
+            SamplingParams(**bad).validate()
+
+    def test_bounds_are_inclusive_where_documented(self):
+        SamplingParams(temperature=0.0, top_p=1.0, top_k=0).validate()
+        SamplingParams(temperature=2.0, top_p=0.01, top_k=1).validate()
+
+    def test_submit_validates_with_rid(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, page_size=8,
+                                  a_fmt=None))
+        with pytest.raises(ValueError, match="request 7.*top_p"):
+            srv.submit(Request(rid=7, prompt=[1, 2], max_new=2,
+                               sampling=SamplingParams(top_p=0.0)))
+        assert srv.queue == []  # fail-fast: nothing was enqueued
+
+
+# -- engine-level sampling ----------------------------------------------------
+
+def _drain_tokens(srv, reqs):
+    for r in reqs:
+        srv.submit(r)
+    return {r.rid: r.tokens for r in srv.run_until_drained()}
+
+
+def _mk(params, cfg, **over):
+    base = dict(slots=3, max_seq=64, page_size=8, a_fmt=None)
+    base.update(over)
+    return Server(params, cfg, ServerConfig(**base))
+
+
+class TestServerSampling:
+    def _prompts(self, cfg, n=3):
+        rng = np.random.default_rng(0)
+        return [rng.integers(1, cfg.vocab_size, size=m).tolist()
+                for m in (5, 9, 3)[:n]]
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_greedy_token_identical_to_argmax_engine(self, trained_tiny,
+                                                     kv_fmt):
+        """temperature=0 (the default) must reproduce the pre-sampling
+        engine bit-exactly — the sampling epilogue ends in
+        where(temp > 0, sampled, argmax), so greedy rows never see the
+        masks. Reference: argmax over the model's own decode logits."""
+        from repro import models
+
+        cfg, params = trained_tiny
+        prompts = self._prompts(cfg)
+        outs = _drain_tokens(
+            _mk(params, cfg, kv_fmt=kv_fmt),
+            [Request(rid=i, prompt=p, max_new=6)
+             for i, p in enumerate(prompts)])
+        for i, p in enumerate(prompts):
+            batch = {"tokens": jnp.asarray([p], jnp.int32)}
+            logits, caches = models.prefill(params, cfg, batch, 64)
+            ref = [int(jnp.argmax(logits[0]))]
+            idx = len(p)
+            while len(ref) < 6:
+                logits, caches = models.decode_step(
+                    params, cfg, jnp.asarray([[ref[-1]]], jnp.int32),
+                    caches, idx)
+                ref.append(int(jnp.argmax(logits[0])))
+                idx += 1
+            assert list(outs[i]) == ref, (kv_fmt, i)
+
+    def test_seeded_stream_independent_of_batch_composition(self,
+                                                            trained_tiny):
+        """The same (prompt, SamplingParams) produces the same tokens
+        solo, batched with different neighbours, and in a different
+        slot — the key depends only on (seed, emitted-index)."""
+        cfg, params = trained_tiny
+        prompts = self._prompts(cfg)
+        sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.95, seed=21)
+        solo = _drain_tokens(
+            _mk(params, cfg, slots=1),
+            [Request(rid=0, prompt=list(prompts[0]), max_new=8, sampling=sp)])
+        batched = _drain_tokens(
+            _mk(params, cfg, slots=3),
+            [Request(rid=0, prompt=list(prompts[0]), max_new=8, sampling=sp),
+             Request(rid=1, prompt=list(prompts[1]), max_new=4,
+                     sampling=SamplingParams(temperature=1.2, seed=5)),
+             Request(rid=2, prompt=list(prompts[2]), max_new=6)])
+        assert solo[0] == batched[0]
+        # and in a different admission order (different slot)
+        reordered = _drain_tokens(
+            _mk(params, cfg, slots=3),
+            [Request(rid=2, prompt=list(prompts[2]), max_new=6),
+             Request(rid=1, prompt=list(prompts[1]), max_new=4,
+                     sampling=SamplingParams(temperature=1.2, seed=5)),
+             Request(rid=0, prompt=list(prompts[0]), max_new=8, sampling=sp)])
+        assert reordered[0] == solo[0] and reordered[1] == batched[1]
+
+    def test_different_seeds_diverge(self, trained_tiny):
+        cfg, params = trained_tiny
+        p = self._prompts(cfg)[0]
+        outs = _drain_tokens(
+            _mk(params, cfg),
+            [Request(rid=i, prompt=list(p), max_new=8,
+                     sampling=SamplingParams(temperature=1.0, seed=i))
+             for i in range(3)])
+        assert len({outs[i] for i in range(3)}) > 1
+
+    def test_seeded_stream_survives_preempt_spill_resume(self, trained_tiny):
+        """A sampled request stolen mid-stream and resumed continues its
+        token stream exactly: the spill carries (rng_seed, emitted) and
+        the KV restore is bit-exact, so draw i's key and logits are both
+        unchanged. Pool sized to force >= 1 steal (same shape as the
+        scheduler suite's preempt tests)."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(1, cfg.vocab_size, size=5).tolist()
+                   for _ in range(2)]
+        sps = [SamplingParams(temperature=0.9, top_k=16, top_p=0.9, seed=31),
+               SamplingParams(temperature=0.7, seed=32)]
+        # pool of 6 x 4-token pages: both charge 2 prompt pages + 1
+        # headroom, then growth past 12 tokens forces a steal + resume
+        # (same contention shape as the scheduler suite's preempt tests)
+        srv = _mk(params, cfg, slots=2, max_seq=32, page_size=4,
+                  pool_pages=6, kv_fmt="fp8_e4m3",
+                  scheduler=SchedulerConfig(steal_cooldown=0))
+        reqs = [Request(rid=i, prompt=list(p), max_new=10, sampling=sp)
+                for i, (p, sp) in enumerate(zip(prompts, sps))]
+        contended = _drain_tokens(srv, reqs)
+        assert srv.stats["preemptions"] >= 1 and srv.stats["resumes"] >= 1
+        for i in range(2):
+            solo = _mk(params, cfg, slots=1, max_seq=32, page_size=4,
+                       kv_fmt="fp8_e4m3")
+            ref = _drain_tokens(solo, [Request(
+                rid=9, prompt=list(prompts[i]), max_new=10, sampling=sps[i])])
+            assert contended[i] == ref[9], i
+
+
+# -- API redesign contracts ---------------------------------------------------
+
+class TestServerConfigAPI:
+    def test_legacy_kwargs_warn_and_map(self, trained_tiny):
+        cfg, params = trained_tiny
+        with pytest.warns(DeprecationWarning, match="ServerConfig"):
+            srv = Server(params, cfg, slots=2, max_seq=32, page_size=8,
+                         a_fmt=None, headroom_pages=3, scheduler="reserve")
+        assert srv.config.slots == 2
+        assert srv.config.scheduler.policy == "reserve"
+        assert srv.config.scheduler.headroom_pages == 3
+
+    def test_legacy_unknown_kwarg_raises(self, trained_tiny):
+        cfg, params = trained_tiny
+        with pytest.raises(TypeError, match="bogus"):
+            Server(params, cfg, bogus=1)
+
+    def test_config_and_legacy_mutually_exclusive(self, trained_tiny):
+        cfg, params = trained_tiny
+        with pytest.raises(TypeError, match="not both"):
+            Server(params, cfg, ServerConfig(), slots=2)
+
+    def test_config_is_frozen(self):
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            ServerConfig().slots = 8
+
+    def test_new_form_emits_no_warning(self, trained_tiny):
+        cfg, params = trained_tiny
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            Server(params, cfg, ServerConfig(slots=1, max_seq=32,
+                                             page_size=8, a_fmt=None))
+
+
+class TestRequestResultAPI:
+    def test_drained_results_are_frozen_snapshots(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _mk(params, cfg, slots=2)
+        rng = np.random.default_rng(1)
+        srv.submit(Request(rid=0, prompt=rng.integers(1, 64, 4).tolist(),
+                           max_new=3))
+        (res,) = srv.run_until_drained()
+        assert isinstance(res, RequestResult)
+        assert res.ok and res.status == "ok" and res.error is None
+        assert isinstance(res.tokens, tuple) and len(res.tokens) == 3
+        assert res.prompt_len == 4
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            res.status = "failed"
+
+    def test_result_timing_fields(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = _mk(params, cfg, slots=1)
+        srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+        (res,) = srv.run_until_drained()
+        assert len(res.token_times) == 4
+        assert res.ttft is not None and res.ttft > 0
+        assert len(res.itl) == 3 and all(g >= 0 for g in res.itl)
+        assert list(res.token_times) == sorted(res.token_times)
+
+    def test_truncated_folds_into_status(self, trained_tiny):
+        """Request.truncated is now derived: status == 'truncated' is the
+        one source of truth, on both the Request and its result."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(4)
+        srv = _mk(params, cfg, slots=1, max_seq=16, page_size=4)
+        req = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
+                      max_new=50)
+        srv.submit(req)
+        (res,) = srv.run_until_drained()
+        assert req.status == "truncated" and req.truncated
+        assert res.truncated and not res.ok
+        assert len(res.tokens) < 50
+        with pytest.raises(AttributeError):
+            req.truncated = False  # read-only property

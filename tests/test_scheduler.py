@@ -19,7 +19,8 @@ from conftest import tiny_lm_cfg
 
 from repro import models
 from repro.runtime import kv_cache as kvc
-from repro.runtime.serve import Request, Server
+from repro.runtime.serve import (Request, SchedulerConfig, Server,
+                                 ServerConfig)
 
 
 def _assert_pool_invariants(srv):
@@ -61,8 +62,9 @@ class TestPreemptResume:
         # pool of 6 x 4-token pages; both requests charge 2 prompt pages + 1
         # headroom, then both grow past 12 tokens -> the later-admitted
         # request (rid 1) is the steal victim and must resume afterwards
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt=kv_fmt,
-                     page_size=4, pool_pages=6, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt=kv_fmt,
+                                  page_size=4, pool_pages=6, a_fmt=None))
         reqs = [Request(rid=i, prompt=p, max_new=10)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -71,8 +73,9 @@ class TestPreemptResume:
         assert reqs[1].preemptions >= 1, "scenario must actually preempt"
         assert srv.stats["resumes"] >= 1
         for r in reqs:
-            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
-                          page_size=4, a_fmt=None)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, kv_fmt=kv_fmt,
+                                       page_size=4, a_fmt=None))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
             solo.submit(ref)
             solo.run_until_drained()
@@ -83,8 +86,9 @@ class TestPreemptResume:
         order: the high-priority request is never preempted."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(3)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=6, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=6, a_fmt=None))
         lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
                      max_new=10, priority=0)
         hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
@@ -105,9 +109,10 @@ class TestFuzzAccounting:
         cfg = tiny_lm_cfg()
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(7)
-        srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=9, a_fmt=None,
-                     headroom_pages=1, steal_cooldown=1)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=3, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=9, a_fmt=None,
+                                  scheduler=SchedulerConfig(headroom_pages=1, steal_cooldown=1)))
         # prompt lengths restricted to a few values: each distinct length is
         # a fresh prefill-chunk jit trace on CPU
         reqs = [Request(rid=i, prompt=rng.integers(1, 64, rng.choice([3, 5, 9])).tolist(),
@@ -241,9 +246,10 @@ class TestSpillBudget:
         rng = np.random.default_rng(11)
         prompts = [rng.integers(1, cfg.vocab_size, size=5).tolist()
                    for _ in range(2)]
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt=kv_fmt,
-                     page_size=4, pool_pages=6, a_fmt=None,
-                     spill_budget_bytes=0)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt=kv_fmt,
+                                  page_size=4, pool_pages=6, a_fmt=None,
+                                  scheduler=SchedulerConfig(spill_budget_bytes=0)))
         reqs = [Request(rid=i, prompt=list(p), max_new=10)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -254,8 +260,9 @@ class TestSpillBudget:
         assert srv._spill_bytes == 0 and not srv.preempted
         assert any(r.evictions >= 1 for r in reqs)
         for r in reqs:
-            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
-                          page_size=4, a_fmt=None)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, kv_fmt=kv_fmt,
+                                       page_size=4, a_fmt=None))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
             solo.submit(ref)
             solo.run_until_drained()
@@ -266,9 +273,10 @@ class TestSpillBudget:
         (oldest-first eviction) instead of dropping everything."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(3)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=6, a_fmt=None,
-                     spill_budget_bytes=1 << 30)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=6, a_fmt=None,
+                                  scheduler=SchedulerConfig(spill_budget_bytes=1 << 30)))
         reqs = [Request(rid=i, prompt=rng.integers(1, 64, 5).tolist(),
                         max_new=10) for i in range(2)]
         for r in reqs:
@@ -288,8 +296,10 @@ class TestPrefillBucketing:
         trace-cache key set."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(0)
-        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None, prefill_chunk_pages=4)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=4)))
         lengths = list(range(3, 28))  # 25 distinct prompt lengths
         rng.shuffle(lengths)
         for i, n in enumerate(lengths):
@@ -315,8 +325,10 @@ class TestPrefillBucketing:
         rng = np.random.default_rng(9)
         for n in (1, 3, 8, 13, 17, 30):
             prompt = rng.integers(1, cfg.vocab_size, size=n).tolist()
-            srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt=None,
-                         page_size=4, a_fmt=None, prefill_chunk_pages=2)
+            srv = Server(params, cfg,
+                         ServerConfig(slots=1, max_seq=64, kv_fmt=None,
+                                      page_size=4, a_fmt=None,
+                                      scheduler=SchedulerConfig(prefill_chunk_pages=2)))
             r = Request(rid=0, prompt=list(prompt), max_new=5)
             srv.submit(r)
             srv.run_until_drained()
@@ -335,9 +347,11 @@ class TestStateSlabs:
         cfg = get_smoke("xlstm-125m")
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(13)
-        srv = Server(params, cfg, slots=3, max_seq=32, a_fmt=None,
-                     pool_slabs=2, prefill_chunk_pages=1, page_size=4,
-                     steal_cooldown=1)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=3, max_seq=32, a_fmt=None,
+                                  pool_slabs=2, page_size=4,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1,
+                                                            steal_cooldown=1)))
         # recurrent state cannot skip prefill chunks: no prefix cache
         assert srv._prefix is None
         reqs = [Request(rid=i,
@@ -364,8 +378,10 @@ class TestStateSlabs:
         assert srv.stats["preemptions"] >= 1, "fuzz should exercise steals"
         assert sorted(srv.free_slabs) == list(range(srv._n_slabs))
         for r in reqs:
-            solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
-                          prefill_chunk_pages=1, page_size=4)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, a_fmt=None,
+                                       page_size=4,
+                                       scheduler=SchedulerConfig(prefill_chunk_pages=1)))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
             solo.submit(ref)
             solo.run_until_drained()
@@ -383,9 +399,12 @@ class TestStateSlabs:
         cfg = get_smoke("xlstm-125m")
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(1)
-        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
-                     pool_slabs=1, prefill_chunk_pages=1, page_size=4,
-                     spill_budget_bytes=0, steal_cooldown=0)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, a_fmt=None,
+                                  pool_slabs=1, page_size=4,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1,
+                                                            spill_budget_bytes=0,
+                                                            steal_cooldown=0)))
         lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
                      max_new=8, priority=0)
         hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
@@ -398,8 +417,10 @@ class TestStateSlabs:
         assert srv.stats["preemptions"] >= 1
         assert srv.stats["spill_evictions"] >= 1 and lo.evictions >= 1
         for r in (lo, hi):
-            solo = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
-                          prefill_chunk_pages=1, page_size=4)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, a_fmt=None,
+                                       page_size=4,
+                                       scheduler=SchedulerConfig(prefill_chunk_pages=1)))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
             solo.submit(ref)
             solo.run_until_drained()
@@ -415,9 +436,12 @@ class TestStateSlabs:
         cfg = get_smoke("xlstm-125m")
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(5)
-        srv = Server(params, cfg, slots=2, max_seq=32, a_fmt=None,
-                     pool_slabs=1, prefill_chunk_pages=1, page_size=4,
-                     scheduler="reserve", steal_cooldown=0)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, a_fmt=None,
+                                  pool_slabs=1, page_size=4,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1,
+                                                            policy="reserve",
+                                                            steal_cooldown=0)))
         lo = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
                      max_new=6, priority=0)
         hi = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
@@ -442,8 +466,9 @@ class TestStateSlabs:
         prompt = rng.integers(1, cfg.vocab_size, size=13).tolist()
         logits_ref, _ = models.prefill(
             params, cfg, {"tokens": jnp.asarray([prompt], jnp.int32)}, 32)
-        srv = Server(params, cfg, slots=1, max_seq=32, a_fmt=None,
-                     prefill_chunk_pages=1, page_size=4)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, a_fmt=None, page_size=4,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1)))
         r = Request(rid=0, prompt=list(prompt), max_new=1)
         srv.submit(r)
         srv.run_until_drained()
@@ -473,8 +498,10 @@ class TestPrefixCacheServing:
         total = sum(len(p) for p in prompts)
         outs = {}
         for warm in (False, True):
-            srv = Server(params, cfg, slots=4, max_seq=96, kv_fmt=kv_fmt,
-                         page_size=page, a_fmt=None, prefix_cache=warm)
+            srv = Server(params, cfg,
+                         ServerConfig(slots=4, max_seq=96, kv_fmt=kv_fmt,
+                                      page_size=page, a_fmt=None,
+                                      prefix_cache=warm))
             reqs = [Request(rid=i, prompt=list(p), max_new=6)
                     for i, p in enumerate(prompts)]
             for r in reqs:
@@ -503,8 +530,9 @@ class TestPrefixCacheServing:
         shared = rng.integers(1, cfg.vocab_size, size=2 * page).tolist()
         tail = rng.integers(1, cfg.vocab_size, size=3).tolist()
         mk = lambda rid: Request(rid=rid, prompt=shared + tail, max_new=3)
-        srv = Server(params, cfg, slots=2, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=page, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=page, a_fmt=None))
         a, b = mk(0), mk(1)
         srv.submit(a)
         srv.submit(b)
@@ -530,8 +558,9 @@ class TestPrefixCacheServing:
         cfg, params = trained_tiny
         rng = np.random.default_rng(5)
         prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
-        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None))
         r = Request(rid=0, prompt=list(prompt), max_new=8)
         srv.submit(r)
         srv.step()
@@ -543,8 +572,9 @@ class TestPrefixCacheServing:
         _assert_pool_invariants(srv)
         srv.run_until_drained()
         assert srv.stats["resumes"] == 1 and r.done
-        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                      page_size=4, a_fmt=None)
+        solo = Server(params, cfg,
+                      ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                   page_size=4, a_fmt=None))
         ref = Request(rid=99, prompt=list(prompt), max_new=8)
         solo.submit(ref)
         solo.run_until_drained()
@@ -558,8 +588,9 @@ class TestPrefixCacheServing:
         cfg, params = trained_tiny
         rng = np.random.default_rng(7)
         prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
-        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None))
         r = Request(rid=0, prompt=list(prompt), max_new=8)
         srv.submit(r)
         srv.step()
@@ -572,8 +603,9 @@ class TestPrefixCacheServing:
         assert srv.stats["resume_fallbacks"] == 1
         assert srv.stats["spill_evictions"] == 1 and r.evictions == 1
         assert r.done and len(r.out) == 8
-        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                      page_size=4, a_fmt=None)
+        solo = Server(params, cfg,
+                      ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                   page_size=4, a_fmt=None))
         ref = Request(rid=99, prompt=list(prompt), max_new=8)
         solo.submit(ref)
         solo.run_until_drained()
@@ -590,8 +622,9 @@ class TestPrefixCacheServing:
         rng = np.random.default_rng(19)
         page = 4
         prompt_a = rng.integers(1, cfg.vocab_size, size=13).tolist()
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=page, pool_pages=8, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=page, pool_pages=8, a_fmt=None))
         a = Request(rid=0, prompt=list(prompt_a), max_new=2)
         srv.submit(a)
         _drain_checked(srv)
@@ -608,8 +641,9 @@ class TestPrefixCacheServing:
         srv.submit(e)
         done = _drain_checked(srv)
         assert e in done and len(e.out) == 8 and d in done
-        solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                      page_size=page, a_fmt=None)
+        solo = Server(params, cfg,
+                      ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                   page_size=page, a_fmt=None))
         ref = Request(rid=99, prompt=list(prompt_a), max_new=8)
         solo.submit(ref)
         solo.run_until_drained()
@@ -628,9 +662,11 @@ class TestPrefixCacheServing:
                    for t in (3, 5, 4)]
         outs = {}
         for warm in (False, True):
-            srv = Server(params, cfg, slots=3, max_seq=64, kv_fmt="fp8_e4m3",
-                         page_size=page, a_fmt=None, prefill_chunk_pages=1,
-                         prefix_cache=warm)
+            srv = Server(params, cfg,
+                         ServerConfig(slots=3, max_seq=64, kv_fmt="fp8_e4m3",
+                                      page_size=page, a_fmt=None,
+                                      prefix_cache=warm,
+                                      scheduler=SchedulerConfig(prefill_chunk_pages=1)))
             reqs = [Request(rid=i, prompt=list(p), max_new=5)
                     for i, p in enumerate(prompts)]
             for r in reqs:
@@ -653,10 +689,12 @@ class TestPrefixCacheServing:
         rng = np.random.default_rng(17)
         page = 4
         shared = rng.integers(1, cfg.vocab_size, size=2 * page).tolist()
-        srv = Server(params, cfg, slots=3, max_seq=32, kv_fmt=kv_fmt,
-                     page_size=page, pool_pages=8, a_fmt=None,
-                     prefill_chunk_pages=1, headroom_pages=1,
-                     steal_cooldown=1)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=3, max_seq=32, kv_fmt=kv_fmt,
+                                  page_size=page, pool_pages=8, a_fmt=None,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=1,
+                                                            headroom_pages=1,
+                                                            steal_cooldown=1)))
         reqs = [Request(rid=i,
                         prompt=shared + rng.integers(
                             1, cfg.vocab_size, int(rng.choice([1, 3, 6]))
@@ -682,9 +720,11 @@ class TestPrefixCacheServing:
             list(range(srv._n_pages))
         assert (srv.page_refs == 0).all()
         for r in reqs:
-            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt=kv_fmt,
-                          page_size=page, a_fmt=None, prefill_chunk_pages=1,
-                          prefix_cache=False)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, kv_fmt=kv_fmt,
+                                       page_size=page, a_fmt=None,
+                                       prefix_cache=False,
+                                       scheduler=SchedulerConfig(prefill_chunk_pages=1)))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=r.max_new)
             solo.submit(ref)
             solo.run_until_drained()
@@ -700,8 +740,9 @@ class TestWaitLineFairness:
         'preempted strictly before fresh'."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(11)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=12, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=12, a_fmt=None))
         a = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=10)
         b = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(), max_new=10)
         srv.submit(a)
@@ -721,8 +762,9 @@ class TestWaitLineFairness:
         assert srv.active[0] is a
         srv.run_until_drained()
         for r in (a, b):
-            solo = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                          page_size=4, a_fmt=None)
+            solo = Server(params, cfg,
+                          ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                       page_size=4, a_fmt=None))
             ref = Request(rid=99, prompt=list(r.prompt), max_new=10)
             solo.submit(ref)
             solo.run_until_drained()
@@ -737,8 +779,10 @@ class TestDeadlineVictim:
         to the newer request racing a tight deadline."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(13)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=6, a_fmt=None, steal_cooldown=0)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=6, a_fmt=None,
+                                  scheduler=SchedulerConfig(steal_cooldown=0)))
         loose = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(),
                         max_new=10)  # no deadline: infinite slack
         tight = Request(rid=1, prompt=rng.integers(1, 64, 5).tolist(),
@@ -753,8 +797,10 @@ class TestDeadlineVictim:
     def test_pick_victim_orders_by_slack_then_age(self, trained_tiny):
         cfg, params = trained_tiny
         rng = np.random.default_rng(2)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None, steal_cooldown=0)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None,
+                                  scheduler=SchedulerConfig(steal_cooldown=0)))
         r0 = Request(rid=0, prompt=rng.integers(1, 64, 3).tolist(),
                      max_new=8, deadline_step=100)  # plenty of slack
         r1 = Request(rid=1, prompt=rng.integers(1, 64, 3).tolist(),
@@ -782,8 +828,9 @@ class TestTruncation:
         retires with fewer than max_new tokens and must say so."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(4)
-        srv = Server(params, cfg, slots=1, max_seq=16, kv_fmt=None,
-                     page_size=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=16, kv_fmt=None,
+                                  page_size=4, a_fmt=None))
         r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=50)
         srv.submit(r)
         srv.run_until_drained()
@@ -805,14 +852,16 @@ class TestPrefillTableContract:
         headroom (a correctness hazard once pages are shared read-only)."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(6)
-        srv = Server(params, cfg, slots=1, max_seq=64, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None, prefill_chunk_pages=4)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None,
+                                  scheduler=SchedulerConfig(prefill_chunk_pages=4)))
         tables = []
         orig = srv._decode
 
-        def spy(params, pools, toks, state, poison):
+        def spy(params, pools, toks, state, poison, samp):
             tables.append(np.asarray(state.page_table))
-            return orig(params, pools, toks, state, poison)
+            return orig(params, pools, toks, state, poison, samp)
 
         srv._decode = spy
         r = Request(rid=0, prompt=rng.integers(1, 64, 9).tolist(), max_new=2)
@@ -836,9 +885,10 @@ class TestSchedulerPolicy:
         cfg = tiny_lm_cfg()
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
-        srv = Server(params, cfg, slots=2, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=4, a_fmt=None,
-                     headroom_pages=1, low_watermark=2)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=2, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=4, a_fmt=None,
+                                  scheduler=SchedulerConfig(headroom_pages=1, low_watermark=2)))
         a = Request(rid=0, prompt=rng.integers(1, 64, 3).tolist(), max_new=3)
         b = Request(rid=1, prompt=rng.integers(1, 64, 3).tolist(), max_new=3)
         srv.submit(a)
@@ -853,8 +903,9 @@ class TestSchedulerPolicy:
         not crash mid-prefill after pages were already allocated."""
         cfg = tiny_lm_cfg()
         params = models.init_params(cfg, jax.random.PRNGKey(0))
-        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, a_fmt=None))
         with pytest.raises(ValueError, match="max_seq"):
             srv.submit(Request(rid=0, prompt=list(range(1, 41)), max_new=4))
 
@@ -865,8 +916,9 @@ class TestSchedulerPolicy:
         cfg = tiny_lm_cfg()
         params = models.init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
-        srv = Server(params, cfg, slots=1, max_seq=32, kv_fmt="fp8_e4m3",
-                     page_size=4, pool_pages=4, a_fmt=None)
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                                  page_size=4, pool_pages=4, a_fmt=None))
         r = Request(rid=0, prompt=rng.integers(1, 64, 5).tolist(), max_new=8)
         srv.submit(r)
         srv.step()
@@ -886,9 +938,10 @@ class TestSchedulerPolicy:
                    for m in rng.integers(3, 8, size=8)]
         outs, stats = {}, {}
         for sched in ("reserve", "token_budget"):
-            srv = Server(params, cfg, slots=4, max_seq=48, kv_fmt="fp8_e4m3",
-                         page_size=4, pool_pages=12, a_fmt=None,
-                         scheduler=sched)
+            srv = Server(params, cfg,
+                         ServerConfig(slots=4, max_seq=48, kv_fmt="fp8_e4m3",
+                                      page_size=4, pool_pages=12, a_fmt=None,
+                                      scheduler=SchedulerConfig(policy=sched)))
             reqs = [Request(rid=i, prompt=list(p),
                             max_new=24 if i % 4 == 0 else 4)
                     for i, p in enumerate(prompts)]
