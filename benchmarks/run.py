@@ -358,7 +358,7 @@ def serving_bench(tiny: bool = False):
 
     from repro import models
     from repro.models.config import ArchConfig
-    from repro.runtime.serve import (Request, SamplingParams,
+    from repro.runtime.serve import (CachePolicy, Request, SamplingParams,
                                      SchedulerConfig, Server, ServerConfig)
 
     tiny = tiny or os.environ.get("REPRO_BENCH_TINY") == "1"
@@ -383,7 +383,7 @@ def serving_bench(tiny: bool = False):
     def run(sched):
         srv = Server(params, cfg,
                      ServerConfig(slots=slots, max_seq=max_seq,
-                                  kv_fmt="fp8_e4m3", page_size=page,
+                                  cache=CachePolicy(active_fmt="fp8_e4m3"), page_size=page,
                                   pool_pages=pool_pages, a_fmt=None,
                                   scheduler=SchedulerConfig(policy=sched)))
         reqs = [Request(rid=i, prompt=list(p), max_new=mn)
@@ -434,7 +434,7 @@ def serving_bench(tiny: bool = False):
 
     def run_prefix(warm):
         srv = Server(params, cfg,
-                     ServerConfig(slots=slots, max_seq=96, kv_fmt="fp8_e4m3",
+                     ServerConfig(slots=slots, max_seq=96, cache=CachePolicy(active_fmt="fp8_e4m3"),
                                   page_size=8, a_fmt=None, prefix_cache=warm,
                                   scheduler=SchedulerConfig(policy="token_budget")))
         reqs = [Request(rid=i, prompt=list(p), max_new=8)
@@ -472,6 +472,65 @@ def serving_bench(tiny: bool = False):
           f" | hit rate {warm['hit_rate']:.3f} "
           f"({warm['hit_tokens']} prefill tokens saved)")
 
+    # ---- mixed-precision cache policy: packed FP4 frozen prefix pages -----
+    # The same warm shared-prefix workload under CachePolicy(frozen_fmt=
+    # 'fp4_e2m1'): shared pages are transcoded FP8 -> packed FP4 exactly
+    # once, at the freeze point. Gated in-bench: the frozen page class must
+    # cost <= 0.55x the active-FP8 bytes-per-token, greedy streams must
+    # stay within bounded divergence of the all-FP8 warm run (only the
+    # frozen prefix differs in precision), and the drain audit must hold
+    # with mixed-format pages live.
+    def run_fp4(policy):
+        srv = Server(params, cfg,
+                     ServerConfig(slots=slots, max_seq=96, cache=policy,
+                                  page_size=8, a_fmt=None,
+                                  scheduler=SchedulerConfig(policy="token_budget")))
+        reqs = [Request(rid=i, prompt=list(p), max_new=8)
+                for i, p in enumerate(pprompts)]
+        for r in reqs:
+            srv.submit(r)
+        t0 = time.perf_counter()
+        done = srv.run_until_drained()
+        dt = time.perf_counter() - t0
+        assert len(done) == len(reqs)
+        srv.audit()  # mixed-format pages live at drain
+        toks = sum(len(r.out) for r in reqs)
+        return {"sec": dt, "tps": toks / dt,
+                "residency": srv.cache_residency(),
+                "frozen_pages": srv.stats["fp4_frozen_pages"],
+                "failed": srv.stats["failed"],
+                "outs": {r.rid: tuple(r.out) for r in reqs}}
+
+    mixed = CachePolicy(active_fmt="fp8_e4m3", frozen_fmt="fp4_e2m1")
+    warm8 = run_fp4(CachePolicy(active_fmt="fp8_e4m3"))
+    run_fp4(mixed)  # warmup: compile the mixed-table decode shapes
+    a, b = run_fp4(mixed), run_fp4(mixed)
+    warm4 = a if a["tps"] >= b["tps"] else b
+    assert warm8["outs"] == warm["outs"], \
+        "CachePolicy(active_fmt='fp8_e4m3') must reproduce the kv_fmt run"
+    r8, r4 = warm8["residency"], warm4["residency"]
+    # the page-class density win: frozen FP4 vs active FP8 bytes-per-token
+    fp4_density = r4["frozen_bytes_per_token"] / r4["active_bytes_per_token"]
+    assert fp4_density <= 0.55, fp4_density
+    assert warm4["frozen_pages"] >= len(shared) // 8, warm4["frozen_pages"]
+    # blended residency win: tokens held per live byte at drain, fp4 / fp8
+    resident_ratio = ((r4["resident_tokens"] / r4["live_bytes"])
+                      / (r8["resident_tokens"] / r8["live_bytes"]))
+    assert resident_ratio >= 1.0, resident_ratio
+    # bounded greedy divergence: only the frozen prefix pages differ in
+    # precision, so the bulk of both streams must agree position-wise
+    fp4_total = fp4_agree = 0
+    for rid in warm8["outs"]:
+        for x, y in zip(warm8["outs"][rid], warm4["outs"][rid]):
+            fp4_total += 1
+            fp4_agree += x == y
+    fp4_agreement = fp4_agree / fp4_total
+    assert fp4_agreement >= 0.5, (fp4_agreement, warm8["outs"], warm4["outs"])
+    print(f"{'frozen_fp4':14s} {warm4['sec']:.2f}s = {warm4['tps']:7.1f} "
+          f"tok/s | frozen/active B/token {fp4_density:.3f}x | "
+          f"{warm4['frozen_pages']} pages transcoded | greedy agreement "
+          f"{fp4_agreement:.2f}")
+
     # ---- degraded mode: the token-budget workload under injected faults ----
     # Same requests, same pool, plus a deterministic fault schedule: two
     # NaN-poisoned decode rows, the first host spill bit-flipped, one
@@ -491,7 +550,7 @@ def serving_bench(tiny: bool = False):
                          corrupt_spills=(0,), alloc_fail_ticks=(12,))
         srv = Server(params, cfg,
                      ServerConfig(slots=slots, max_seq=max_seq,
-                                  kv_fmt="fp8_e4m3", page_size=page,
+                                  cache=CachePolicy(active_fmt="fp8_e4m3"), page_size=page,
                                   pool_pages=pool_pages, a_fmt=None,
                                   strict=False, audit_every=4,
                                   scheduler=SchedulerConfig(policy="token_budget")),
@@ -550,7 +609,7 @@ def serving_bench(tiny: bool = False):
     def run_sampled():
         srv = Server(params, cfg,
                      ServerConfig(slots=slots, max_seq=max_seq,
-                                  kv_fmt="fp8_e4m3", page_size=page,
+                                  cache=CachePolicy(active_fmt="fp8_e4m3"), page_size=page,
                                   pool_pages=pool_pages, a_fmt=None,
                                   scheduler=SchedulerConfig(
                                       policy="token_budget")))
@@ -611,7 +670,7 @@ def serving_bench(tiny: bool = False):
         async def main():
             srv = Server(params, cfg,
                          ServerConfig(slots=slots, max_seq=max_seq,
-                                      kv_fmt="fp8_e4m3", page_size=page,
+                                      cache=CachePolicy(active_fmt="fp8_e4m3"), page_size=page,
                                       pool_pages=pool_pages, a_fmt=None,
                                       scheduler=SchedulerConfig(
                                           policy="token_budget")))
@@ -656,7 +715,13 @@ def serving_bench(tiny: bool = False):
         "prefix_cache/hit_rate": warm["hit_rate"],
         "prefix_cache/prefill_tokens_saved": float(warm["hit_tokens"]),
         "speedup/prefix_cache_tokens_per_sec": warm["tps"] / cold["tps"],
-        "serving/failed/clean": float(rv["failed"] + tb["failed"]),
+        "serving/failed/clean": float(rv["failed"] + tb["failed"]
+                                      + warm8["failed"] + warm4["failed"]),
+        "serving/fp4/bytes_per_token_ratio": fp4_density,
+        "serving/fp4/resident_tokens_ratio": resident_ratio,
+        "serving/fp4/warm_tps": warm4["tps"],
+        "serving/fp4/greedy_agreement": fp4_agreement,
+        "serving/fp4/frozen_pages_transcoded": float(warm4["frozen_pages"]),
         "serving/degraded/injected_faults": float(dg["injected"]),
         "serving/degraded/failed": float(dg["failed"]),
         "serving/degraded/spill_integrity_failures": float(dg["integrity"]),
@@ -679,6 +744,7 @@ def serving_bench(tiny: bool = False):
         ("serving/step_token_budget", tb["sec"] / tb["steps"] * 1e6, tb["tps"]),
         ("serving/prefix_cold", cold["sec"] * 1e6, cold["tps"]),
         ("serving/prefix_warm", warm["sec"] * 1e6, warm["tps"]),
+        ("serving/prefix_warm_fp4", warm4["sec"] * 1e6, warm4["tps"]),
     ]
     # the paper-level claim this PR gates in CI: on-demand paging converts
     # FP8's bytes-per-token win into strictly more concurrent work

@@ -22,7 +22,7 @@ from repro.core.policy import QuantPolicy
 from repro.core.ptq import gptq_quantize_lm, quantize_tree
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optimizer import AdamWConfig
-from repro.runtime.serve import Request, Server, ServerConfig
+from repro.runtime.serve import CachePolicy, Request, Server, ServerConfig
 from repro.runtime.train import TrainLoopConfig, train_loop
 
 from benchmarks.common import BENCH_CFG, calib_batches, data_cfg, eval_ppl
@@ -52,7 +52,9 @@ def main():
 
     print("== 4. pack + serve ==")
     packed = quantize_tree(params, models.build_def(BENCH_CFG), policy)
-    server = Server(packed, BENCH_CFG, ServerConfig(slots=2, max_seq=64))
+    server = Server(packed, BENCH_CFG,
+                    ServerConfig(slots=2, max_seq=64,
+                                 cache=CachePolicy(active_fmt="fp8_e4m3")))
     server.submit(Request(rid=0, prompt=[5, 17, 99, 3], max_new=8))
     server.submit(Request(rid=1, prompt=[1, 2, 3], max_new=8))
     reqs = [server.queue[0], server.queue[1]]

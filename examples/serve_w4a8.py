@@ -19,6 +19,12 @@ later request maps them straight from the content-addressed prefix cache
 (refcount++, zero prefill compute) and streams only its own tail. Compare
 against ``--no-prefix-cache`` to see the cold-engine cost.
 
+``--frozen-kv-fmt fp4_e2m1`` (with ``--shared-prefix``) switches the
+cache policy to mixed precision: shared pages are transcoded FP8 ->
+packed FP4 E2M1 exactly once at the moment the prefix cache freezes
+them, roughly halving the bytes-per-token of prefix residency. The
+drain prints live page counts per format and the density ratio.
+
 ``--temperature T`` (with ``--top-k/--top-p/--seed``) switches every
 request from greedy argmax to in-graph seeded sampling — same compiled
 decode step, per-row fixed-trace masks, reproducible run-to-run.
@@ -45,8 +51,9 @@ from repro import models
 from repro.core.policy import QuantPolicy
 from repro.core.ptq import quantize_tree
 from repro.kernels import ops
-from repro.runtime.serve import (FaultPlan, Request, SamplingParams,
-                                 SchedulerConfig, Server, ServerConfig)
+from repro.runtime.serve import (CachePolicy, FaultPlan, Request,
+                                 SamplingParams, SchedulerConfig, Server,
+                                 ServerConfig)
 
 from benchmarks.common import BENCH_CFG, trained_params
 
@@ -115,7 +122,8 @@ def serve_families(backend):
         encdec = cfg.encoder_layers > 0
         params = _train_smoke(cfg, tag, with_frames=encdec)
         srv = Server(params, cfg,
-                     ServerConfig(slots=3, max_seq=64, kv_fmt="fp8_e4m3",
+                     ServerConfig(slots=3, max_seq=64,
+                                  cache=CachePolicy(active_fmt="fp8_e4m3"),
                                   page_size=8, kernel_backend=backend,
                                   a_fmt=None))
         reqs = []
@@ -144,8 +152,15 @@ def main():
     ap.add_argument("--backend", default="ref",
                     choices=["ref", "pallas", "pallas_interpret"])
     ap.add_argument("--kv-fmt", default="fp8_e4m3", choices=["fp8_e4m3", "bf16"],
-                    help="KV page payload: packed FP8 codes with "
+                    help="active KV page payload: packed FP8 codes with "
                          "per-(page, head) M2 scales, or bf16 (fallback)")
+    ap.add_argument("--frozen-kv-fmt", default="none",
+                    choices=["none", "fp4_e2m1"],
+                    help="frozen (prefix-cache-registered) page payload: "
+                         "'fp4_e2m1' transcodes each shared page FP8 -> "
+                         "packed FP4 exactly once at the freeze point "
+                         "(needs --shared-prefix and FP8 --kv-fmt); 'none' "
+                         "keeps frozen pages in the active format")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--scheduler", default="token_budget",
@@ -222,6 +237,11 @@ def main():
     # 'pallas' routes every PackedLinear matmul through the fused single-pass
     # W4A8 kernel (compiled on TPU, interpreter elsewhere)
     kv_fmt = None if args.kv_fmt == "bf16" else args.kv_fmt
+    frozen_fmt = None if args.frozen_kv_fmt == "none" else args.frozen_kv_fmt
+    if frozen_fmt and not args.shared_prefix:
+        ap.error("--frozen-kv-fmt needs --shared-prefix: frozen FP4 pages "
+                 "only ever hold prefix-cache-registered pages")
+    cache = CachePolicy(active_fmt=kv_fmt, frozen_fmt=frozen_fmt)
     page_size = 16 if args.shared_prefix else 32
     plan = None
     if args.inject_faults:
@@ -239,14 +259,15 @@ def main():
               f"{plan.alloc_fail_ticks}")
     server = Server(packed, BENCH_CFG,
                     ServerConfig(slots=args.slots, max_seq=96,
-                                 kernel_backend=args.backend, kv_fmt=kv_fmt,
+                                 kernel_backend=args.backend, cache=cache,
                                  page_size=page_size,
                                  pool_pages=args.pool_pages or None,
                                  prefix_cache=not args.no_prefix_cache,
                                  strict=False, audit_every=args.audit_every,
                                  scheduler=SchedulerConfig(policy=args.scheduler)),
                     faults=plan)
-    print(f"kv cache: paged {args.kv_fmt}, "
+    frozen_note = (f" + frozen {args.frozen_kv_fmt}" if frozen_fmt else "")
+    print(f"kv cache: paged {args.kv_fmt}{frozen_note}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
           f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
           f"scheduler={args.scheduler}")
@@ -313,6 +334,17 @@ def main():
     print(f"pool audit clean at drain: {summary['pages_mapped']} mapped / "
           f"{summary['pages_free']} free / {summary['pages_parked']} parked "
           f"pages, {summary['slabs_free']} slabs free")
+    resid = server.cache_residency()
+    print(f"page residency: {resid['n_active_live']} live "
+          f"{args.kv_fmt} pages ({resid['active_bytes_per_token']:.0f} "
+          f"B/token) + {resid['n_frozen_live']} live frozen pages "
+          f"({resid['frozen_bytes_per_token']:.0f} B/token)")
+    if frozen_fmt:
+        ratio = (resid["frozen_bytes_per_token"]
+                 / resid["active_bytes_per_token"])
+        print(f"  {server.stats['fp4_frozen_pages']} pages transcoded "
+              f"FP8 -> packed FP4 at freeze; frozen/active page density "
+              f"{ratio:.2f}x")
     for r in reqs[:3]:
         tag = " [truncated]" if r.truncated else ""
         print(f"  req {r.rid}: {r.prompt} -> {r.out}{tag}")

@@ -36,7 +36,8 @@ from repro.core.policy import QuantPolicy
 from repro.core.ptq import quantize_tree
 from repro.models.config import ArchConfig
 from repro.runtime.frontend import AsyncServer, serve_http
-from repro.runtime.serve import SchedulerConfig, Server, ServerConfig
+from repro.runtime.serve import (CachePolicy, SchedulerConfig, Server,
+                                 ServerConfig)
 
 
 async def stream_completion(host, port, name, payload):
@@ -88,8 +89,12 @@ def _build_engine(trained):
     policy = QuantPolicy(w_fmt="fp4_e2m1", a_fmt="fp8_e4m3",
                          scale_mode="m2", lorc_rank=8)
     packed = quantize_tree(params, models.build_def(cfg), policy)
+    # mixed-precision cache policy: FP8 active pages, and the shared system
+    # prefix both clients ride is transcoded to packed FP4 when it freezes
+    cache = CachePolicy(active_fmt="fp8_e4m3", frozen_fmt="fp4_e2m1")
     return cfg, Server(packed, cfg,
                        ServerConfig(slots=2, max_seq=96, page_size=8,
+                                    cache=cache,
                                     scheduler=SchedulerConfig()))
 
 

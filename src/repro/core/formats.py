@@ -33,6 +33,9 @@ __all__ = [
     "fp_encode",
     "fp_decode",
     "value_grid",
+    "pow2i",
+    "pack_nibbles",
+    "unpack_nibbles",
 ]
 
 

@@ -14,6 +14,9 @@ reference and shifting grid-tie roundings.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 # are pure integer bit twiddling with no captured constants, so they are
 # kernel-body-safe as-is; re-exported here so every kernel pulls its in-VMEM
 # math from one module.
-from repro.core.formats import pow2i, unpack_nibbles
+from repro.core.formats import FORMATS, pow2i, unpack_nibbles
 
 __all__ = [
     "pow2i",
@@ -33,6 +36,9 @@ __all__ = [
     "token_scale",
     "round_to_grid",
     "quantize_rows",
+    "PageFormat",
+    "page_format",
+    "PAGE_FORMAT_NAMES",
 ]
 
 
@@ -59,6 +65,86 @@ def decode_e3m0(code):
 
 
 DECODERS = {"fp4_e2m1": decode_e2m1, "fp4_e3m0": decode_e3m0}
+
+
+@dataclasses.dataclass(frozen=True)
+class PageFormat:
+    """The frozen spec of one KV page payload — how a page's bytes decode.
+
+    Replaces the ``kv_fmt: Optional[str]`` static string that used to be
+    threaded through the paged decode-attention kernels. A PageFormat is
+    hashable (a valid jit static argument) and carries everything a kernel
+    body or oracle needs to consume the page: the grid (``fmt``), the storage
+    width (``bytes_per_code`` — FP4 packs two codes per byte), and the
+    scale-apply mode (``exp_add``: per-head M2 shift applied as an exponent
+    add inside ``decode_fp8``; ``none``: bf16 passthrough, no scales).
+
+    Construct through :func:`page_format` — direct construction skips the
+    allowed-set validation.
+    """
+
+    name: Optional[str]  # FORMATS key, or None = bf16 passthrough
+    packed: bool = False  # two codes per byte (4-bit formats)
+    scale_apply: str = "none"  # "exp_add" | "none"
+
+    @property
+    def quantized(self) -> bool:
+        return self.name is not None
+
+    @property
+    def fmt(self):
+        """The core.formats.FloatFormat grid (None for bf16)."""
+        return FORMATS[self.name] if self.name is not None else None
+
+    @property
+    def bytes_per_code(self) -> float:
+        return 0.5 if self.packed else (1.0 if self.quantized else 2.0)
+
+    def width(self, d: int) -> int:
+        """Stored last-dim width (in array elements) for ``d`` logical codes."""
+        return (d + 1) // 2 if self.packed else d
+
+    def decode(self, raw, shift, d: int):
+        """Page bytes -> f32 values (the residual s_max multiply is the
+        caller's, once per page). ``raw``: (..., width(d)) uint8 codes or
+        bf16 values; ``shift`` broadcasts against the decoded codes. Static
+        ``d`` recovers the logical width after a packed nibble unpack (odd
+        head dims store one pad nibble)."""
+        if not self.quantized:
+            return raw
+        codes = raw
+        if self.packed:
+            codes = unpack_nibbles(codes)[..., :d]
+        return decode_fp8(codes, self.fmt, shift)
+
+
+_PAGE_FORMATS = {
+    None: PageFormat(None),
+    "fp8_e4m3": PageFormat("fp8_e4m3", packed=False, scale_apply="exp_add"),
+    "fp4_e2m1": PageFormat("fp4_e2m1", packed=True, scale_apply="exp_add"),
+}
+
+PAGE_FORMAT_NAMES = tuple(sorted(k for k in _PAGE_FORMATS if k is not None))
+
+
+def page_format(spec) -> PageFormat:
+    """Coerce a format name (or None, or an existing PageFormat) to the
+    registered PageFormat — failing FAST, at dispatch time, with the allowed
+    set in the message. Before this registry an unknown ``kv_fmt`` string
+    sailed into the jitted kernel body and surfaced as an opaque ``KeyError``
+    mid-trace."""
+    if isinstance(spec, PageFormat):
+        if spec.name in _PAGE_FORMATS:
+            return spec
+        raise ValueError(
+            f"unknown KV page format {spec.name!r}: expected one of "
+            f"{PAGE_FORMAT_NAMES} or None (bf16)")
+    try:
+        return _PAGE_FORMATS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown KV page format {spec!r}: expected one of "
+            f"{PAGE_FORMAT_NAMES} or None (bf16)") from None
 
 
 def decode_fp8(code, fmt, exp_shift=0):

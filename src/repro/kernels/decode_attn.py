@@ -1,18 +1,29 @@
-"""Pallas TPU kernel: paged FP8 decode attention (flash-decoding dataflow).
+"""Pallas TPU kernel: paged FP8/FP4 decode attention (flash-decoding dataflow).
 
 Decode's dominant memory term is the KV-cache read; this kernel reads the
 cache in its *deployed* form — packed FP8 E4M3 pages with per-(page, head)
-M2 scales — and never materializes a dequantized cache in HBM:
+M2 scales, plus (mixed-precision pools) a packed FP4 E2M1 frozen region —
+and never materializes a dequantized cache in HBM:
 
   * the page table and per-row true lengths ride in as scalar-prefetch
     operands (SMEM); each grid step's BlockSpec index_map *gathers* its page
     straight from the pool via ``page_table[b, j]`` — the DMA engine fetches
     exactly the pages a row owns, in page-table order,
-  * FP8 codes are dequantized in VMEM with the exponent-add scale apply
+  * codes are dequantized in VMEM with the exponent-add scale apply
     (kernels.common.decode_fp8: per-head shift k is an integer add on the
     exponent; the full-precision s_max multiplies once per page),
   * online softmax (m, l, acc) accumulators live in VMEM scratch across the
     page loop (innermost grid dim), standard flash-decoding.
+
+Formats ride in as one frozen ``PageFormat`` static per page class
+(``fmt`` for the active store, ``frozen`` for the packed FP4 region) —
+coerced through :func:`kernels.common.page_format`, which fails fast with
+the allowed set instead of letting an unknown string surface as an opaque
+``KeyError`` mid-trace. With ``frozen`` set, the per-page format select is
+driven by the scalar-prefetched page table itself: logical ids >= the
+active row count address the frozen store, so the index maps gather *both*
+candidate pages with clamped indices and the kernel body selects the
+decoded block by id class — no extra mask operand, no divergent grid.
 
 Grid: (B, KV_heads, pages_per_slot). The g = H/KV query heads of a KV group
 are processed together as the row block (padded to ``bq`` for VPU/MXU
@@ -21,7 +32,8 @@ true length are masked by position, so per-slot lengths need no host-side
 synchronization (this is what retires the engine's max-length hack).
 
 The jnp oracle is kernels.ref.paged_decode_attn_ref; interpret-mode parity
-is asserted by tests/test_kv_cache.py.
+is asserted by tests/test_kv_cache.py (FP8 tier) and tests/test_fp4_cache.py
+(packed FP4 tier).
 """
 from __future__ import annotations
 
@@ -32,17 +44,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.formats import FORMATS
-from .common import decode_fp8
+from .common import page_format
 
 __all__ = ["paged_decode_attn_pallas", "paged_mla_decode_attn_pallas"]
 
 _NEG_INF = -1e30
 
 
-def _kernel(pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
-            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, page, pp, scale, kv_fmt, window):
+def _kernel(*refs, page, pp, scale, fmt, frozen, base, nfz, hd, dv, window):
+    if frozen is not None:
+        (pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
+         kfsm_ref, kfsh_ref, vfsm_ref, vfsh_ref,
+         q_ref, k_ref, v_ref, kf_ref, vf_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
+         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
     b, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -52,13 +69,25 @@ def _kernel(pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
-    if kv_fmt is not None:
-        fmt = FORMATS[kv_fmt]
+    if fmt.quantized:
         pid = pt_ref[b, j]
         # exponent-add scale apply: integer add of -k on the code exponent,
         # then one full-precision s_max multiply per (page, head)
-        k = decode_fp8(k_ref[0, :, 0], fmt, ksh_ref[pid, h]) * ksm_ref[pid]
-        v = decode_fp8(v_ref[0, :, 0], fmt, vsh_ref[pid, h]) * vsm_ref[pid]
+        apid = jnp.minimum(pid, base - 1) if frozen is not None else pid
+        k = fmt.decode(k_ref[0, :, 0], ksh_ref[apid, h], hd) * ksm_ref[apid]
+        v = fmt.decode(v_ref[0, :, 0], vsh_ref[apid, h], dv) * vsm_ref[apid]
+        if frozen is not None:
+            # per-page format select off the prefetched table: logical ids
+            # >= base address the packed FP4 frozen region. Both candidate
+            # blocks were DMA'd via clamped index maps; pick by id class.
+            fpid = jnp.clip(pid - base, 0, nfz)
+            is_fz = pid >= base
+            kf = frozen.decode(kf_ref[0, :, 0], kfsh_ref[fpid, h], hd) \
+                * kfsm_ref[fpid]
+            vf = frozen.decode(vf_ref[0, :, 0], vfsh_ref[fpid, h], dv) \
+                * vfsm_ref[fpid]
+            k = jnp.where(is_fz, kf, k)
+            v = jnp.where(is_fz, vf, v)
     else:
         k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
@@ -87,20 +116,32 @@ def _kernel(pt_ref, len_ref, ksm_ref, ksh_ref, vsm_ref, vsh_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
-@functools.partial(jax.jit, static_argnames=("kv_fmt", "bq", "window",
+@functools.partial(jax.jit, static_argnames=("fmt", "frozen", "bq", "window",
                                              "interpret"))
 def paged_decode_attn_pallas(q, k_pages, v_pages, k_smax, k_shift, v_smax,
                              v_shift, page_table, kv_lens,
-                             kv_fmt=None, bq: int = 8, window: int = 0,
+                             fmt=None, frozen=None,
+                             k_fz=None, v_fz=None, k_fz_smax=None,
+                             k_fz_shift=None, v_fz_smax=None, v_fz_shift=None,
+                             bq: int = 8, window: int = 0,
                              interpret: bool = True):
     """q: (B, H, hd) single-token queries; k_pages/v_pages: (P+1, page, KV,
-    hd) uint8 codes (fp8) or bf16 values; k/v_smax: (P+1,) f32; k/v_shift:
-    (P+1, KV) int32 (pass zeros-shaped dummies when ``kv_fmt`` is None);
+    hd) uint8 codes (``fmt`` quantized) or bf16 values; k/v_smax: (P+1,) f32;
+    k/v_shift: (P+1, KV) int32 (pass zeros-shaped dummies for bf16);
     page_table: (B, PP) int32; kv_lens: (B,) valid token counts; ``window``:
-    sliding-window size (0 = full history). Returns (B, H, dv) f32. GQA
-    head repetition is internal (grid over KV heads, g query heads per
-    block, padded to ``bq``).
+    sliding-window size (0 = full history). ``fmt``/``frozen`` accept a
+    PageFormat or a format name (coerced via ``page_format`` — unknown names
+    fail fast with the allowed set). With ``frozen`` set the ``*_fz``
+    operands carry the packed FP4 region ((F+1, page, KV, ceil(hd/2)) codes
+    + its own scales; row F is the dummy clamped gathers land on) and table
+    entries >= P+1 select it per page. Returns (B, H, dv) f32. GQA head
+    repetition is internal (grid over KV heads, g query heads per block,
+    padded to ``bq``).
     """
+    fmt = page_format(fmt)
+    frozen = page_format(frozen) if frozen is not None else None
+    assert frozen is None or (fmt.quantized and frozen.quantized), \
+        "a frozen region requires quantized active pages"
     b, h, hd = q.shape
     p1, page, kv, _ = k_pages.shape
     dv = v_pages.shape[-1]
@@ -111,19 +152,40 @@ def paged_decode_attn_pallas(q, k_pages, v_pages, k_smax, k_shift, v_smax,
     if bq != g:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, bq - g), (0, 0)))
 
+    nfz = 0 if k_fz is None else k_fz.shape[0] - 1
+
     def page_map(bi, hi, ji, pt, ln, *_s):
-        return (pt[bi, ji], 0, hi, 0)
+        pid = pt[bi, ji]
+        if frozen is not None:  # frozen ids clamp to the null page
+            pid = jnp.minimum(pid, p1 - 1)
+        return (pid, 0, hi, 0)
+
+    def fz_page_map(bi, hi, ji, pt, ln, *_s):
+        return (jnp.clip(pt[bi, ji] - p1, 0, nfz), 0, hi, 0)
+
+    def q_map(bi, hi, ji, *_s):
+        return (bi, hi, 0, 0)
+
+    scalars = [page_table, kv_lens, k_smax, k_shift, v_smax, v_shift]
+    tensors = [qg, k_pages, v_pages]
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, hd), q_map),
+        pl.BlockSpec((1, page, 1, hd), page_map),
+        pl.BlockSpec((1, page, 1, dv), page_map),
+    ]
+    if frozen is not None:
+        scalars += [k_fz_smax, k_fz_shift, v_fz_smax, v_fz_shift]
+        tensors += [k_fz, v_fz]
+        in_specs += [
+            pl.BlockSpec((1, page, 1, k_fz.shape[-1]), fz_page_map),
+            pl.BlockSpec((1, page, 1, v_fz.shape[-1]), fz_page_map),
+        ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=len(scalars),
         grid=(b, kv, pp),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd), page_map),
-            pl.BlockSpec((1, page, 1, dv), page_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, dv),
-                               lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bq, dv), q_map),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -132,22 +194,29 @@ def paged_decode_attn_pallas(q, k_pages, v_pages, k_smax, k_shift, v_smax,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, page=page, pp=pp,
-                          scale=1.0 / float(hd) ** 0.5, kv_fmt=kv_fmt,
+                          scale=1.0 / float(hd) ** 0.5, fmt=fmt,
+                          frozen=frozen, base=p1, nfz=nfz, hd=hd, dv=dv,
                           window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kv, bq, dv), jnp.float32),
         interpret=interpret,
-    )(page_table, kv_lens, k_smax, k_shift, v_smax, v_shift, qg,
-      k_pages, v_pages)
+    )(*scalars, *tensors)
     return out[:, :, :g].reshape(b, h, dv)
 
 
 # ---------------------------------------------------------------------------
 # MLA latent decode: KV = 1 head, k = concat(ckv, krope), v = ckv view
 # ---------------------------------------------------------------------------
-def _mla_kernel(pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
-                ql_ref, qr_ref, ckv_ref, kr_ref, o_ref, m_ref, l_ref, acc_ref,
-                *, page, pp, scale, kv_fmt):
+def _mla_kernel(*refs, page, pp, scale, fmt, frozen, base, nfz, r, dr):
+    if frozen is not None:
+        (pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
+         cfsm_ref, cfsh_ref, rfsm_ref, rfsh_ref,
+         ql_ref, qr_ref, ckv_ref, kr_ref, cf_ref, rf_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
+         ql_ref, qr_ref, ckv_ref, kr_ref, o_ref, m_ref, l_ref,
+         acc_ref) = refs
     b, j = pl.program_id(0), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -158,13 +227,22 @@ def _mla_kernel(pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
 
     ql = ql_ref[0, 0].astype(jnp.float32)  # (bq, r)
     qr = qr_ref[0, 0].astype(jnp.float32)  # (bq, dr)
-    if kv_fmt is not None:
-        fmt = FORMATS[kv_fmt]
+    if fmt.quantized:
         pid = pt_ref[b, j]
         # the latent has no head axis: one M2 shift per page (head index 0),
         # applied as the same exponent add + one s_max multiply per page
-        ckv = decode_fp8(ckv_ref[0], fmt, csh_ref[pid, 0]) * csm_ref[pid]
-        kr = decode_fp8(kr_ref[0], fmt, rsh_ref[pid, 0]) * rsm_ref[pid]
+        apid = jnp.minimum(pid, base - 1) if frozen is not None else pid
+        ckv = fmt.decode(ckv_ref[0], csh_ref[apid, 0], r) * csm_ref[apid]
+        kr = fmt.decode(kr_ref[0], rsh_ref[apid, 0], dr) * rsm_ref[apid]
+        if frozen is not None:
+            fpid = jnp.clip(pid - base, 0, nfz)
+            is_fz = pid >= base
+            cf = frozen.decode(cf_ref[0], cfsh_ref[fpid, 0], r) \
+                * cfsm_ref[fpid]
+            rf = frozen.decode(rf_ref[0], rfsh_ref[fpid, 0], dr) \
+                * rfsm_ref[fpid]
+            ckv = jnp.where(is_fz, cf, ckv)
+            kr = jnp.where(is_fz, rf, kr)
     else:
         ckv = ckv_ref[0].astype(jnp.float32)  # (page, r)
         kr = kr_ref[0].astype(jnp.float32)  # (page, dr)
@@ -194,28 +272,39 @@ def _mla_kernel(pt_ref, len_ref, csm_ref, csh_ref, rsm_ref, rsh_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "kv_fmt", "bq",
+@functools.partial(jax.jit, static_argnames=("scale", "fmt", "frozen", "bq",
                                              "interpret"))
 def paged_mla_decode_attn_pallas(q_lat, q_rope, ckv_pages, krope_pages,
                                  ckv_smax, ckv_shift, krope_smax, krope_shift,
                                  page_table, kv_lens, scale,
-                                 kv_fmt=None, bq: int = 8,
-                                 interpret: bool = True):
+                                 fmt=None, frozen=None,
+                                 ckv_fz=None, krope_fz=None, ckv_fz_smax=None,
+                                 ckv_fz_shift=None, krope_fz_smax=None,
+                                 krope_fz_shift=None,
+                                 bq: int = 8, interpret: bool = True):
     """MLA absorbed decode over latent pages (flash-decoding dataflow).
 
     q_lat: (B, H, r) queries absorbed into the latent space; q_rope:
     (B, H, dr) rope-space queries; ckv_pages: (P+1, page, r) and
-    krope_pages: (P+1, page, dr) uint8 FP8 codes (``kv_fmt`` set) or bf16;
+    krope_pages: (P+1, page, dr) uint8 codes (``fmt`` quantized) or bf16;
     c/r smax: (P+1,) f32; c/r shift: (P+1, 1) int32 (single scale "head");
     page_table: (B, PP) int32; kv_lens: (B,); ``scale``: softmax scale
-    (1/sqrt(qk_nope + qk_rope)). Returns the latent context (B, H, r) f32 —
-    the caller applies the absorbed v_up projection.
+    (1/sqrt(qk_nope + qk_rope)). ``fmt``/``frozen`` are PageFormats (or
+    names — ``page_format`` coercion fails fast on unknowns); with
+    ``frozen`` set the ``*_fz`` operands carry the packed FP4 latent region
+    ((F+1, page, ceil(d/2)) codes + scales) and table entries >= P+1 select
+    it per page. Returns the latent context (B, H, r) f32 — the caller
+    applies the absorbed v_up projection.
 
     KV is a single head: every query head scores the same k =
     concat(ckv, krope) page block and v is the ckv view, so the grid is
     (B, ceil(H / bq), pages) with the page loop innermost and the latent
     never gathered into HBM.
     """
+    fmt = page_format(fmt)
+    frozen = page_format(frozen) if frozen is not None else None
+    assert frozen is None or (fmt.quantized and frozen.quantized), \
+        "a frozen region requires quantized active pages"
     b, h, r = q_lat.shape
     dr = q_rope.shape[-1]
     p1, page, _ = ckv_pages.shape
@@ -228,20 +317,42 @@ def paged_mla_decode_attn_pallas(q_lat, q_rope, ckv_pages, krope_pages,
     ql = q_lat.reshape(b, hb, bq, r)
     qr = q_rope.reshape(b, hb, bq, dr)
 
+    nfz = 0 if ckv_fz is None else ckv_fz.shape[0] - 1
+
     def page_map(bi, hi, ji, pt, ln, *_s):
-        return (pt[bi, ji], 0, 0)
+        pid = pt[bi, ji]
+        if frozen is not None:  # frozen ids clamp to the null page
+            pid = jnp.minimum(pid, p1 - 1)
+        return (pid, 0, 0)
+
+    def fz_page_map(bi, hi, ji, pt, ln, *_s):
+        return (jnp.clip(pt[bi, ji] - p1, 0, nfz), 0, 0)
+
+    def q_map(bi, hi, ji, *_s):
+        return (bi, hi, 0, 0)
+
+    scalars = [page_table, kv_lens, ckv_smax, ckv_shift, krope_smax,
+               krope_shift]
+    tensors = [ql, qr, ckv_pages, krope_pages]
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, r), q_map),
+        pl.BlockSpec((1, 1, bq, dr), q_map),
+        pl.BlockSpec((1, page, r), page_map),
+        pl.BlockSpec((1, page, dr), page_map),
+    ]
+    if frozen is not None:
+        scalars += [ckv_fz_smax, ckv_fz_shift, krope_fz_smax, krope_fz_shift]
+        tensors += [ckv_fz, krope_fz]
+        in_specs += [
+            pl.BlockSpec((1, page, ckv_fz.shape[-1]), fz_page_map),
+            pl.BlockSpec((1, page, krope_fz.shape[-1]), fz_page_map),
+        ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=len(scalars),
         grid=(b, hb, pp),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, r), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, 1, bq, dr), lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, page, r), page_map),
-            pl.BlockSpec((1, page, dr), page_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, r),
-                               lambda bi, hi, ji, *_s: (bi, hi, 0, 0)),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bq, r), q_map),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -250,10 +361,10 @@ def paged_mla_decode_attn_pallas(q_lat, q_rope, ckv_pages, krope_pages,
     )
     out = pl.pallas_call(
         functools.partial(_mla_kernel, page=page, pp=pp, scale=scale,
-                          kv_fmt=kv_fmt),
+                          fmt=fmt, frozen=frozen, base=p1, nfz=nfz,
+                          r=r, dr=dr),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hb, bq, r), jnp.float32),
         interpret=interpret,
-    )(page_table, kv_lens, ckv_smax, ckv_shift, krope_smax, krope_shift,
-      ql, qr, ckv_pages, krope_pages)
+    )(*scalars, *tensors)
     return out.reshape(b, hb * bq, r)[:, :h]

@@ -122,26 +122,58 @@ def w4a8_matmul_batched(x, w, transpose_w: bool = False,
     )
 
 
+def _layer_formats(pool_layer, key: str):
+    """Derive the (active, frozen) PageFormats from a pool slice's leaves —
+    dtype picks quantized vs bf16, the zero-size ``_fp4`` marker picks
+    packed FP4 over FP8, and a ``<key>_fz`` leaf announces the dedicated
+    packed frozen region (mirrors runtime.kv_cache.pool_format /
+    frozen_format without importing the runtime layer)."""
+    from .common import page_format
+
+    leaf = pool_layer[key]
+    if leaf.dtype != jnp.uint8:
+        name = None
+    else:
+        name = "fp4_e2m1" if "_fp4" in pool_layer else "fp8_e4m3"
+    frozen = ("fp4_e2m1" if key + "_fz" in pool_layer else None)
+    return page_format(name), page_format(frozen) if frozen else None
+
+
+def _fz_operands(pool_layer, names):
+    """The frozen-region operand dict for the kernel/oracle call: the
+    ``*_fz`` leaves when present, else all-None (the wrappers skip the
+    frozen operand block entirely)."""
+    out = {}
+    for name in names:
+        for suffix in ("_fz", "_fz_smax", "_fz_shift"):
+            out[name + suffix] = pool_layer.get(name + suffix)
+    return out
+
+
 def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
     """Paged decode attention over one layer's quantized KV pool slice.
 
     q: (B, H, hd) single-token queries; pool_layer: one layer of a
-    runtime.kv_cache GQA pool ({'k', 'v'} + fp8 scale leaves); page_table:
-    (B, PP) int32; kv_lens: (B,) int32 valid token counts; ``window``:
-    sliding-window size (0 = full history). Returns (B, H, dv) f32.
+    runtime.kv_cache GQA pool ({'k', 'v'} + fp8 scale leaves, plus the
+    packed ``*_fz`` frozen-region leaves in a mixed-precision pool);
+    page_table: (B, PP) int32 — entries >= P+1 are frozen logical ids;
+    kv_lens: (B,) int32 valid token counts; ``window``: sliding-window size
+    (0 = full history). Returns (B, H, dv) f32.
 
     Pallas backend: the flash-decoding kernel gathers pages through the
-    page table in its BlockSpec index maps and dequantizes FP8 in VMEM
-    (exponent-add scale apply). Ref: gathered-page jnp oracle.
+    page table in its BlockSpec index maps and dequantizes FP8/FP4 in VMEM
+    (exponent-add scale apply, per-page format select by id class). Ref:
+    gathered-page jnp oracle.
     """
     kp, vp = pool_layer["k"], pool_layer["v"]
-    kv_fmt = "fp8_e4m3" if kp.dtype == jnp.uint8 else None
-    if kv_fmt:
+    fmt, frozen = _layer_formats(pool_layer, "k")
+    if fmt.quantized:
         ksm, ksh = pool_layer["k_smax"], pool_layer["k_shift"]
         vsm, vsh = pool_layer["v_smax"], pool_layer["v_shift"]
     else:  # dummies keep the kernel operand list static across formats
         ksm = vsm = jnp.zeros((1,), jnp.float32)
         ksh = vsh = jnp.zeros((1, 1), jnp.int32)
+    fz = _fz_operands(pool_layer, ("k", "v"))
     if _BACKEND.startswith("pallas"):
         from .autotune import best_block_sizes
         from .decode_attn import paged_decode_attn_pallas
@@ -150,16 +182,17 @@ def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
         page, kv = kp.shape[1], kp.shape[2]
         bq, _ = best_block_sizes(
             "decode_attn", batch=b, m=h // kv, n=page, k=hd,
-            w_fmt=kv_fmt or "bf16", a_fmt=None, group_size=page, m2=True,
+            w_fmt=fmt.name or "bf16", a_fmt=None, group_size=page, m2=True,
             lorc_rank=0,
         )
         return paged_decode_attn_pallas(
             q, kp, vp, ksm, ksh, vsm, vsh, page_table, kv_lens,
-            kv_fmt=kv_fmt, bq=bq, window=window, interpret=interpret_mode(),
+            fmt=fmt, frozen=frozen, bq=bq, window=window,
+            interpret=interpret_mode(), **fz,
         )
     return _ref.paged_decode_attn_ref(
-        q, kp, vp, ksm, ksh, vsm, vsh, page_table, kv_lens, kv_fmt=kv_fmt,
-        window=window,
+        q, kp, vp, ksm, ksh, vsm, vsh, page_table, kv_lens, fmt=fmt,
+        window=window, frozen=frozen, **fz,
     )
 
 
@@ -179,13 +212,14 @@ def paged_mla_decode_attn(q_lat, q_rope, pool_layer, page_table, kv_lens,
     gathered-page jnp oracle.
     """
     cp, rp = pool_layer["ckv"], pool_layer["krope"]
-    kv_fmt = "fp8_e4m3" if cp.dtype == jnp.uint8 else None
-    if kv_fmt:
+    fmt, frozen = _layer_formats(pool_layer, "ckv")
+    if fmt.quantized:
         csm, csh = pool_layer["ckv_smax"], pool_layer["ckv_shift"]
         rsm, rsh = pool_layer["krope_smax"], pool_layer["krope_shift"]
     else:  # dummies keep the kernel operand list static across formats
         csm = rsm = jnp.zeros((1,), jnp.float32)
         csh = rsh = jnp.zeros((1, 1), jnp.int32)
+    fz = _fz_operands(pool_layer, ("ckv", "krope"))
     if _BACKEND.startswith("pallas"):
         from .autotune import best_block_sizes
         from .decode_attn import paged_mla_decode_attn_pallas
@@ -196,16 +230,17 @@ def paged_mla_decode_attn(q_lat, q_rope, pool_layer, page_table, kv_lens,
         # bn the page size; the latent contraction dim is r + dr
         bq, _ = best_block_sizes(
             "decode_attn", batch=b, m=h, n=page, k=r + q_rope.shape[-1],
-            w_fmt=kv_fmt or "bf16", a_fmt=None, group_size=page, m2=True,
+            w_fmt=fmt.name or "bf16", a_fmt=None, group_size=page, m2=True,
             lorc_rank=0,
         )
         return paged_mla_decode_attn_pallas(
             q_lat, q_rope, cp, rp, csm, csh, rsm, rsh, page_table, kv_lens,
-            scale, kv_fmt=kv_fmt, bq=bq, interpret=interpret_mode(),
+            scale, fmt=fmt, frozen=frozen, bq=bq,
+            interpret=interpret_mode(), **fz,
         )
     return _ref.paged_mla_decode_attn_ref(
         q_lat, q_rope, cp, rp, csm, csh, rsm, rsh, page_table, kv_lens,
-        scale, kv_fmt=kv_fmt,
+        scale, fmt=fmt, frozen=frozen, **fz,
     )
 
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.formats import FORMATS, fp_decode, pow2i, quantize_to_grid, unpack_nibbles
 from repro.core.quantize import quantize_act_tokenwise
-from .common import decode_fp8
+from .common import decode_fp8, page_format
 
 __all__ = ["act_quant_ref", "dequant_packed_ref", "w4a8_matmul_ref",
            "w4a8_batched_matmul_ref", "paged_decode_attn_ref",
@@ -102,34 +102,53 @@ def w4a8_batched_matmul_ref(x, codes, scale, lorc_a=None, lorc_b=None,
 
 
 def paged_decode_attn_ref(q, k_pages, v_pages, k_smax, k_shift, v_smax,
-                          v_shift, page_table, kv_lens, kv_fmt=None,
-                          window: int = 0):
+                          v_shift, page_table, kv_lens, fmt=None,
+                          window: int = 0, frozen=None,
+                          k_fz=None, v_fz=None, k_fz_smax=None,
+                          k_fz_shift=None, v_fz_smax=None, v_fz_shift=None):
     """Oracle for the paged decode-attention kernel.
 
-    q: (B, H, hd); k_pages/v_pages: (P+1, page, KV, hd) uint8 FP8 codes
-    (``kv_fmt`` set) or bf16 values (``kv_fmt`` None); k/v_smax: (P+1,) f32
+    q: (B, H, hd); k_pages/v_pages: (P+1, page, KV, hd) uint8 codes
+    (``fmt`` quantized) or bf16 values (``fmt`` None); k/v_smax: (P+1,) f32
     per-page full-precision scales; k/v_shift: (P+1, KV) int32 M2 exponent
     shifts; page_table: (B, PP) int32; kv_lens: (B,) valid token counts.
-    Returns (B, H, dv) f32 — the gathered-page, dequantized softmax
-    attention with per-row length masks (GQA repetition internal).
+    ``fmt``/``frozen`` take a PageFormat or format name (coerced via
+    ``page_format``); with ``frozen`` set the ``*_fz`` operands carry the
+    packed FP4 region and table entries >= P+1 are frozen logical ids —
+    gathered with clamped indices and selected per page by id class,
+    exactly the kernel's dataflow. Returns (B, H, dv) f32 — the
+    gathered-page, dequantized softmax attention with per-row length masks
+    (GQA repetition internal).
     """
+    fmt = page_format(fmt)
+    frozen = page_format(frozen) if frozen is not None else None
     b, h, hd = q.shape
-    _, page, kv, _ = k_pages.shape
+    base, page, kv, _ = k_pages.shape
     dv = v_pages.shape[-1]
     pp = page_table.shape[1]
     g = h // kv
 
-    def dq(pages, smax, shift):
-        gathered = pages[page_table]  # (B, PP, page, KV, d)
-        if kv_fmt is None:
+    def dq(pages, smax, shift, fpages, fsmax, fshift):
+        apt = (jnp.minimum(page_table, base - 1) if frozen is not None
+               else page_table)
+        gathered = pages[apt]  # (B, PP, page, KV, d)
+        if not fmt.quantized:
             return gathered.astype(jnp.float32).reshape(b, pp * page, kv, -1)
-        fmt = FORMATS[kv_fmt]
-        vals = decode_fp8(gathered, fmt, shift[page_table][:, :, None, :, None])
-        vals = vals * smax[page_table][:, :, None, None, None]
+        d = pages.shape[-1] * (2 if fmt.packed else 1)
+        vals = fmt.decode(gathered, shift[apt][:, :, None, :, None], d)
+        vals = vals * smax[apt][:, :, None, None, None]
+        if frozen is not None:
+            fpt = jnp.clip(page_table - base, 0, fpages.shape[0] - 1)
+            fvals = frozen.decode(fpages[fpt],
+                                  fshift[fpt][:, :, None, :, None],
+                                  pages.shape[-1])
+            fvals = fvals * fsmax[fpt][:, :, None, None, None]
+            mask = (page_table >= base)[:, :, None, None, None]
+            vals = jnp.where(mask, fvals, vals)
         return vals.reshape(b, pp * page, kv, -1)
 
-    kf = dq(k_pages, k_smax, k_shift)  # (B, T, KV, hd)
-    vf = dq(v_pages, v_smax, v_shift)  # (B, T, KV, dv)
+    kf = dq(k_pages, k_smax, k_shift, k_fz, k_fz_smax, k_fz_shift)
+    vf = dq(v_pages, v_smax, v_shift, v_fz, v_fz_smax, v_fz_shift)
     qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
     s = jnp.einsum("bkgd,btkd->bkgt", qg, kf) * (1.0 / float(hd) ** 0.5)
     t = pp * page
@@ -146,31 +165,49 @@ def paged_decode_attn_ref(q, k_pages, v_pages, k_smax, k_shift, v_smax,
 
 def paged_mla_decode_attn_ref(q_lat, q_rope, ckv_pages, krope_pages,
                               ckv_smax, ckv_shift, krope_smax, krope_shift,
-                              page_table, kv_lens, scale, kv_fmt=None):
+                              page_table, kv_lens, scale, fmt=None,
+                              frozen=None, ckv_fz=None, krope_fz=None,
+                              ckv_fz_smax=None, ckv_fz_shift=None,
+                              krope_fz_smax=None, krope_fz_shift=None):
     """Oracle for the MLA latent decode kernel.
 
     q_lat: (B, H, r) absorbed queries; q_rope: (B, H, dr); ckv_pages:
-    (P+1, page, r) / krope_pages: (P+1, page, dr) uint8 FP8 codes
-    (``kv_fmt`` set) or bf16; c/r smax: (P+1,) f32; c/r shift: (P+1, 1)
+    (P+1, page, r) / krope_pages: (P+1, page, dr) uint8 codes (``fmt``
+    quantized) or bf16; c/r smax: (P+1,) f32; c/r shift: (P+1, 1)
     int32 (the latent has a single scale "head"); page_table: (B, PP);
-    kv_lens: (B,). Scores are the k = concat(ckv, krope) contraction, v is
-    the ckv view. Returns the latent context (B, H, r) f32.
+    kv_lens: (B,). ``fmt``/``frozen`` as in ``paged_decode_attn_ref``; the
+    ``*_fz`` operands carry the packed FP4 latent region. Scores are the
+    k = concat(ckv, krope) contraction, v is the ckv view. Returns the
+    latent context (B, H, r) f32.
     """
+    fmt = page_format(fmt)
+    frozen = page_format(frozen) if frozen is not None else None
     b, h, r = q_lat.shape
-    _, page, _ = ckv_pages.shape
+    base, page, _ = ckv_pages.shape
     pp = page_table.shape[1]
 
-    def dq(pages, smax, shift):
-        gathered = pages[page_table]  # (B, PP, page, d)
-        if kv_fmt is None:
+    def dq(pages, smax, shift, fpages, fsmax, fshift):
+        apt = (jnp.minimum(page_table, base - 1) if frozen is not None
+               else page_table)
+        gathered = pages[apt]  # (B, PP, page, d)
+        if not fmt.quantized:
             return gathered.astype(jnp.float32).reshape(b, pp * page, -1)
-        fmt = FORMATS[kv_fmt]
-        vals = decode_fp8(gathered, fmt, shift[page_table][..., None])
-        vals = vals * smax[page_table][:, :, None, None]
+        d = pages.shape[-1] * (2 if fmt.packed else 1)
+        vals = fmt.decode(gathered, shift[apt][..., None], d)
+        vals = vals * smax[apt][:, :, None, None]
+        if frozen is not None:
+            fpt = jnp.clip(page_table - base, 0, fpages.shape[0] - 1)
+            fvals = frozen.decode(fpages[fpt], fshift[fpt][..., None],
+                                  pages.shape[-1])
+            fvals = fvals * fsmax[fpt][:, :, None, None]
+            mask = (page_table >= base)[:, :, None, None]
+            vals = jnp.where(mask, fvals, vals)
         return vals.reshape(b, pp * page, -1)
 
-    ckv = dq(ckv_pages, ckv_smax, ckv_shift)  # (B, T, r)
-    kr = dq(krope_pages, krope_smax, krope_shift)  # (B, T, dr)
+    ckv = dq(ckv_pages, ckv_smax, ckv_shift, ckv_fz, ckv_fz_smax,
+             ckv_fz_shift)
+    kr = dq(krope_pages, krope_smax, krope_shift, krope_fz, krope_fz_smax,
+            krope_fz_shift)
     s = (jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32), ckv)
          + jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), kr)) * scale
     t = pp * page

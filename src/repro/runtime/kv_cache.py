@@ -24,6 +24,16 @@ same logical page, so one host-side free list serves the whole stack. The
 last page id (index P) is a reserved null page — in-graph appends from
 inactive batch rows are redirected there instead of corrupting a live page.
 
+Mixed precision (``CachePolicy(frozen_fmt="fp4_e2m1")``): the pool grows a
+dedicated *frozen region* — half-width packed FP4 E2M1 stores (``k_fz`` et
+al., two codes per byte, own M2 scales) of ``n_frozen`` pages. Frozen
+logical page ids share the active id space above it: id ``(P+1) + fidx``
+addresses frozen row ``fidx`` (row ``n_frozen`` is a dummy for clamped
+gathers). A page enters the region exactly once, by ``transcode_page`` at
+the moment the prefix cache freezes it, and is read-only afterwards — the
+decode kernels select the per-page decode path from the id class.
+
+
 Write paths:
   * prefill splice (host-side, ``splice_prefill``): quantize the prompt's
     contiguous K/V page by page and scatter into the slot's allocated pages.
@@ -47,6 +57,7 @@ hack in the serving engine; models treat it as an opaque pytree.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import zlib
 from collections import OrderedDict
@@ -56,11 +67,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import FORMATS, fp_encode, quantize_to_grid
+from repro.core.formats import fp_encode, pack_nibbles, quantize_to_grid
 from repro.core.scales import constrain_scales_m2
-from repro.kernels.common import decode_fp8
+from repro.kernels.common import PageFormat, page_format
 
 __all__ = [
+    "CachePolicy",
     "PagedState",
     "PrefixCache",
     "page_key",
@@ -68,8 +80,12 @@ __all__ = [
     "init_mla_pool",
     "init_cross_pool",
     "pool_keys",
+    "pool_format",
+    "frozen_format",
+    "n_frozen_pages",
     "quantize_pages",
     "dequantize_pages",
+    "transcode_page",
     "splice_prefill",
     "append_prefill_chunk",
     "write_cross_pages",
@@ -80,10 +96,84 @@ __all__ = [
     "scatter_slabs",
     "pool_bytes_per_token",
     "bf16_bytes_per_token",
+    "page_bytes",
     "payload_checksum",
 ]
 
 _EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """The KV-cache precision policy — per page *class*, not one global knob.
+
+    Replaces the flat ``kv_fmt: Optional[str]`` string (still accepted
+    through a ``DeprecationWarning`` shim on ``ServerConfig``). Page classes:
+
+    * ``active_fmt`` — pages any write path can still touch: private prompt
+      pages, the decode-grown tail, the boundary page. Decode appends
+      requantize these in-graph, so the format must be writable:
+      ``None`` (bf16) or ``"fp8_e4m3"``.
+    * ``frozen_fmt`` — pages the prefix cache has registered: shared-frozen,
+      read-only for the rest of their lives. ``None`` inherits
+      ``active_fmt``; ``"fp4_e2m1"`` (requires FP8 active pages) transcodes
+      each page FP8 -> packed FP4 exactly once, at the freeze point —
+      requantize-error accumulation never applies to a page that is never
+      written again.
+    * ``cross_fmt`` — enc-dec cross-attention pages, write-once at encode
+      time (frozen from birth, so FP4 is safe here too). ``None`` inherits
+      ``active_fmt``.
+
+    ``frozen_pages`` sizes the dedicated frozen-page region when
+    ``frozen_fmt`` differs from ``active_fmt`` (``None``: match the active
+    pool size).
+    """
+
+    active_fmt: Optional[str] = None
+    frozen_fmt: Optional[str] = None  # None = inherit active_fmt
+    cross_fmt: Optional[str] = None  # None = inherit active_fmt
+    frozen_pages: Optional[int] = None
+
+    def __post_init__(self):
+        if self.active_fmt not in (None, "fp8_e4m3"):
+            raise ValueError(
+                f"active_fmt={self.active_fmt!r}: active pages are "
+                "requantized in-graph by decode appends, so only None (bf16) "
+                "or 'fp8_e4m3' are writable")
+        page_format(self.frozen_fmt)  # fail fast with the allowed set
+        page_format(self.cross_fmt)
+        if self.frozen_fmt is not None and self.frozen_fmt != self.active_fmt:
+            if (self.active_fmt, self.frozen_fmt) != ("fp8_e4m3", "fp4_e2m1"):
+                raise ValueError(
+                    f"unsupported transcode {self.active_fmt!r} -> "
+                    f"{self.frozen_fmt!r}: the only mixed-precision policy "
+                    "is FP8 active pages with 'fp4_e2m1' frozen pages")
+        if self.cross_fmt == "fp4_e2m1" and self.active_fmt != "fp8_e4m3":
+            raise ValueError(
+                "cross_fmt='fp4_e2m1' requires quantized (fp8_e4m3) active "
+                "pages — a bf16 engine has no quantization calibration path")
+        if self.frozen_pages is not None and self.frozen_pages < 1:
+            raise ValueError(f"frozen_pages={self.frozen_pages}: must be >= 1")
+
+    # -- resolved per-class formats (inheritance applied) --------------------
+    @property
+    def active(self) -> PageFormat:
+        return page_format(self.active_fmt)
+
+    @property
+    def frozen(self) -> PageFormat:
+        return page_format(self.frozen_fmt if self.frozen_fmt is not None
+                           else self.active_fmt)
+
+    @property
+    def cross(self) -> PageFormat:
+        return page_format(self.cross_fmt if self.cross_fmt is not None
+                           else self.active_fmt)
+
+    @property
+    def mixed(self) -> bool:
+        """True when frozen pages live in a separate (FP4) region."""
+        return self.frozen != self.active
 
 
 class PagedState(NamedTuple):
@@ -111,26 +201,53 @@ class PagedState(NamedTuple):
     slabs: Optional[jnp.ndarray] = None  # (B,) int32 state-slab ids
 
 
-def _is_fp8(pool: Dict) -> bool:
-    first = next(k for k in ("k", "ckv") if k in pool)
-    return pool[first].dtype == jnp.uint8
-
-
 def pool_keys(pool: Dict):
     """The value-bearing leaf names of a pool ('k'/'v' or 'ckv'/'krope')."""
     return ("k", "v") if "k" in pool else ("ckv", "krope")
 
 
+def pool_format(pool: Dict) -> PageFormat:
+    """The active-store PageFormat, recovered from the pool's leaves —
+    jit-safe: only dtypes and leaf *names* are inspected (the zero-size
+    ``_fp4`` marker leaf distinguishes packed FP4 from FP8, both uint8), so
+    the answer is a trace constant."""
+    first = pool[pool_keys(pool)[0]]
+    if first.dtype != jnp.uint8:
+        return page_format(None)
+    return page_format("fp4_e2m1" if "_fp4" in pool else "fp8_e4m3")
+
+
+def frozen_format(pool: Dict) -> Optional[PageFormat]:
+    """The frozen-region PageFormat, or None when the pool is homogeneous
+    (no dedicated ``*_fz`` store: frozen pages live in the active store)."""
+    if any(name.endswith("_fz") for name in pool):
+        return page_format("fp4_e2m1")
+    return None
+
+
+def n_frozen_pages(pool: Dict) -> int:
+    """Frozen-region page count (0 when homogeneous). Works on full pools
+    (leading layer dim) and per-layer slices alike — the value-leaf rank
+    tells them apart (GQA k_fz: 5-D full / 4-D per-layer; MLA ckv_fz:
+    4-D / 3-D)."""
+    full_rank = 5 if "k" in pool else 4
+    for name, leaf in pool.items():
+        if name.endswith("_fz"):
+            axis = 1 if leaf.ndim == full_rank else 0
+            return leaf.shape[axis] - 1
+    return 0
+
+
 # ---------------------------------------------------------------------------
 # Pool construction
 # ---------------------------------------------------------------------------
-def _init_store(n_layers, n_pages, page_size, n_kv, head_dim, fmt: Optional[str]):
+def _init_store(n_layers, n_pages, page_size, n_kv, head_dim, fmt: PageFormat):
     p1 = n_pages + 1  # + reserved null page
-    if fmt is None:
+    if not fmt.quantized:
         return {"_": jnp.zeros((n_layers, p1, page_size, n_kv, head_dim), jnp.bfloat16)}
-    assert fmt == "fp8_e4m3", fmt
+    width = fmt.width(head_dim)  # packed FP4 stores two codes per byte
     return {
-        "_": jnp.zeros((n_layers, p1, page_size, n_kv, head_dim), jnp.uint8),
+        "_": jnp.zeros((n_layers, p1, page_size, n_kv, width), jnp.uint8),
         "_smax": jnp.zeros((n_layers, p1), jnp.float32),
         "_shift": jnp.zeros((n_layers, p1, n_kv), jnp.int32),
     }
@@ -140,29 +257,85 @@ def _named(store, name):
     return {(name if k == "_" else name + k): v for k, v in store.items()}
 
 
+def _frozen_suffix(suffix: str) -> str:
+    # k -> k_fz, k_smax -> k_fz_smax: every frozen-store leaf name contains
+    # "_fz", which is what the engine's spill/scrub leaf filters key on
+    return "_fz" + suffix
+
+
+def _finish_pool(pool: Dict, fmt: PageFormat, frozen_fmt, n_frozen: int,
+                 mk_store) -> Dict:
+    """Attach the marker/frozen leaves shared by every pool constructor."""
+    if fmt.packed:
+        # zero-size marker: the jit-safe static channel that tells readers
+        # this uint8 store is packed FP4, not FP8 (see pool_format). Leading
+        # dim matches the stacked layers so the leaf rides the per-segment
+        # lax.scan (sliced to a per-layer (0,) that costs nothing).
+        n_layers = pool[pool_keys(pool)[0]].shape[0]
+        pool["_fp4"] = jnp.zeros((n_layers, 0), jnp.uint8)
+    frozen_fmt = page_format(frozen_fmt) if frozen_fmt is not None else None
+    if frozen_fmt is not None and frozen_fmt != fmt:
+        if (fmt.name, frozen_fmt.name) != ("fp8_e4m3", "fp4_e2m1"):
+            raise ValueError(
+                f"unsupported frozen store {frozen_fmt.name!r} behind "
+                f"{fmt.name!r} active pages (only fp4_e2m1 behind fp8_e4m3)")
+        if n_frozen < 1:
+            raise ValueError("a mixed-precision pool needs n_frozen >= 1")
+        pool.update(mk_store(frozen_fmt, n_frozen))
+    return pool
+
+
 def init_gqa_pool(n_layers, n_pages, page_size, n_kv, head_dim,
-                  fmt: Optional[str] = "fp8_e4m3") -> Dict:
+                  fmt=page_format("fp8_e4m3"), frozen_fmt=None,
+                  n_frozen: int = 0) -> Dict:
+    """``fmt``/``frozen_fmt`` take a PageFormat (format-name strings and
+    None are coerced through :func:`kernels.common.page_format`, which
+    fails fast on unknown names). A distinct ``frozen_fmt`` adds the
+    dedicated frozen-page region: half-width packed ``k_fz``/``v_fz``
+    stores of ``n_frozen`` pages (+1 dummy row for clamped gathers) that
+    frozen prefix pages are transcoded into (see ``transcode_page``)."""
+    fmt = page_format(fmt)
+
+    def mk(f, n):
+        out = {}
+        for name in ("k", "v"):
+            store = _init_store(n_layers, n, page_size, n_kv, head_dim, f)
+            out.update(_named({_frozen_suffix(k) if k != "_" else "_fz": v
+                               for k, v in store.items()}, name))
+        return out
+
     pool = {}
     for name in ("k", "v"):
         pool.update(_named(_init_store(n_layers, n_pages, page_size, n_kv,
                                        head_dim, fmt), name))
-    return pool
+    return _finish_pool(pool, fmt, frozen_fmt, n_frozen, mk)
 
 
 def init_mla_pool(n_layers, n_pages, page_size, kv_lora_rank, qk_rope_dim,
-                  fmt: Optional[str] = "fp8_e4m3") -> Dict:
+                  fmt=page_format("fp8_e4m3"), frozen_fmt=None,
+                  n_frozen: int = 0) -> Dict:
     """Latent pages: the compressed c_kv and the shared rope key, each with a
     single scale 'head' (squeezed out of the stored value leaves)."""
-    pool = {}
-    for name, dim in (("ckv", kv_lora_rank), ("krope", qk_rope_dim)):
-        store = _init_store(n_layers, n_pages, page_size, 1, dim, fmt)
-        store["_"] = store["_"][:, :, :, 0]  # (L, P+1, page, dim)
-        pool.update(_named(store, name))
-    return pool
+    fmt = page_format(fmt)
+
+    def build(f, n, frozen):
+        out = {}
+        for name, dim in (("ckv", kv_lora_rank), ("krope", qk_rope_dim)):
+            store = _init_store(n_layers, n, page_size, 1, dim, f)
+            store["_"] = store["_"][:, :, :, 0]  # (L, P+1, page, dim)
+            if frozen:
+                store = {_frozen_suffix(k) if k != "_" else "_fz": v
+                         for k, v in store.items()}
+            out.update(_named(store, name))
+        return out
+
+    pool = build(fmt, n_pages, frozen=False)
+    return _finish_pool(pool, fmt, frozen_fmt, n_frozen,
+                        lambda f, n: build(f, n, frozen=True))
 
 
 def init_cross_pool(n_layers, n_pages, page_size, n_kv, head_dim,
-                    fmt: Optional[str] = "fp8_e4m3") -> Dict:
+                    fmt=page_format("fp8_e4m3")) -> Dict:
     """Immutable cross-attention pages (enc-dec decoders).
 
     Same storage layout as a GQA pool — k/v codes + per-(page, head) M2
@@ -179,26 +352,70 @@ def init_cross_pool(n_layers, n_pages, page_size, n_kv, head_dim,
 # ---------------------------------------------------------------------------
 # Page quantization (the M2 machinery applied per (page, head))
 # ---------------------------------------------------------------------------
-def quantize_pages(vals, fmt_name: str = "fp8_e4m3"):
+def quantize_pages(vals, fmt="fp8_e4m3"):
     """vals: (..., page, KV, hd) f32 -> (codes uint8, s_max (...,), shifts
     (..., KV)). Scales are amax/fmt_max per (page, head), M2-constrained
-    across the page's heads: S_i = s_max * 2^-k_i."""
-    fmt = FORMATS[fmt_name]
+    across the page's heads: S_i = s_max * 2^-k_i. For a packed format
+    (fp4_e2m1) the returned codes hold two per byte on the last dim
+    (odd head dims pad one zero nibble)."""
+    pf = page_format(fmt)
+    grid = pf.fmt
     amax = jnp.max(jnp.abs(vals), axis=(-3, -1))  # (..., KV)
-    raw = jnp.maximum(amax * jnp.float32(1.0 / fmt.max_value), _EPS)
+    raw = jnp.maximum(amax * jnp.float32(1.0 / grid.max_value), _EPS)
     # floor-rounded ratios: S_hat >= raw scale, so page content never
     # saturates (FP grids keep the same relative step one binade up)
     m2 = constrain_scales_m2(raw, group_axis=-1, rounding="floor")
-    q = quantize_to_grid(vals / m2.scales[..., None, :, None], fmt)
-    return fp_encode(q, fmt), m2.s_max[..., 0], m2.shifts
+    q = quantize_to_grid(vals / m2.scales[..., None, :, None], grid)
+    codes = fp_encode(q, grid)
+    if pf.packed:
+        if codes.shape[-1] % 2:
+            codes = jnp.pad(codes, ((0, 0),) * (codes.ndim - 1) + ((0, 1),))
+        codes = pack_nibbles(codes)
+    return codes, m2.s_max[..., 0], m2.shifts
 
 
-def dequantize_pages(codes, s_max, shifts, fmt_name: str = "fp8_e4m3"):
+def dequantize_pages(codes, s_max, shifts, fmt="fp8_e4m3",
+                     d: Optional[int] = None):
     """Inverse: exponent-add shift apply + one s_max multiply per page.
-    codes (..., page, KV, hd); s_max (...,); shifts (..., KV) -> f32."""
-    fmt = FORMATS[fmt_name]
-    v = decode_fp8(codes, fmt, shifts[..., None, :, None])
+    codes (..., page, KV, width); s_max (...,); shifts (..., KV) -> f32.
+    ``d`` recovers the logical head dim after a packed nibble unpack
+    (required for packed formats when the head dim is odd)."""
+    pf = page_format(fmt)
+    if d is None:
+        d = codes.shape[-1] * (2 if pf.packed else 1)
+    v = pf.decode(codes, shifts[..., None, :, None], d)
     return v * s_max[..., None, None, None]
+
+
+def transcode_page(pool: Dict, src_pid: int, dst_fidx: int) -> Dict:
+    """Re-encode one active-store page into the frozen (packed FP4) store.
+
+    Runs host-side, exactly once per page, at the moment the prefix cache
+    freezes it: dequantize the FP8 page (all stacked layers at once),
+    requantize onto the FP4 E2M1 grid with fresh per-(page, head) M2 scales,
+    pack two codes per byte, and write frozen row ``dst_fidx``. The source
+    page is untouched (the caller releases it to the free list). Frozen
+    pages are read-only for the rest of their lives, so this is the only
+    writer of the ``*_fz`` leaves — requantize-error accumulation never
+    applies."""
+    fz = frozen_format(pool)
+    assert fz is not None, "transcode_page on a pool without a frozen store"
+    assert pool_format(pool).name == "fp8_e4m3", "transcode source must be FP8"
+    out = dict(pool)
+    for name in pool_keys(pool):
+        store = pool[name]
+        has_heads = store.ndim == 5  # (L, P+1, page, KV, hd) vs (L, P+1, page, d)
+        codes = _with_head_axis(store[:, src_pid], has_heads)  # (L, page, KV|1, hd)
+        smax = pool[name + "_smax"][:, src_pid]  # (L,)
+        shifts = pool[name + "_shift"][:, src_pid]  # (L, KV|1)
+        vals = dequantize_pages(codes, smax, shifts)
+        ncodes, nsmax, nshift = quantize_pages(vals, fz)
+        if not has_heads:
+            ncodes = ncodes[..., 0, :]
+        out[name + "_fz"] = out[name + "_fz"].at[:, dst_fidx].set(ncodes)
+        out[name + "_fz_smax"] = out[name + "_fz_smax"].at[:, dst_fidx].set(nsmax)
+        out[name + "_fz_shift"] = out[name + "_fz_shift"].at[:, dst_fidx].set(nshift)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +436,7 @@ def splice_prefill(pool: Dict, prefill_cache: Dict, page_ids: np.ndarray,
     at a time, so the f32 staging copy never exceeds one chunk (a long
     prompt no longer spikes a prompt-sized transient).
     """
-    fp8 = _is_fp8(pool)
+    pf = pool_format(pool)
     out = dict(pool)
     n_total = len(page_ids)
     for c0 in range(0, n_total, chunk_pages):
@@ -243,8 +460,8 @@ def splice_prefill(pool: Dict, prefill_cache: Dict, page_ids: np.ndarray,
             nl, kv, hd = src.shape[0], src.shape[-2], src.shape[-1]
             vals = src.reshape(nl, npg, page, kv, hd)
             ids = jnp.asarray(ids_np)
-            if fp8:
-                codes, smax, shifts = quantize_pages(vals)
+            if pf.quantized:
+                codes, smax, shifts = quantize_pages(vals, pf)
                 if not has_heads:
                     codes = codes[..., 0, :]
                 out[name] = out[name].at[:, ids].set(codes)
@@ -266,7 +483,12 @@ def append_paged(pool_layer: Dict, new_vals: Dict, state: PagedState) -> Dict:
     new_vals: {"k": (B, 1, KV, hd), "v": ...} or {"ckv": (B, 1, r), ...}.
     Rows with lengths == 0 (empty slots) are redirected to the null page.
     """
-    fp8 = _is_fp8(pool_layer)
+    pf = pool_format(pool_layer)
+    # the no-write-to-FP4 invariant, enforced at trace time: a packed page
+    # is frozen by definition (transcoded exactly once, read-only after),
+    # and requantizing through the 3-bit E2M1 grid would compound error
+    assert not pf.packed, \
+        "decode append must never target packed FP4 pages (frozen pages are read-only)"
     b = state.lengths.shape[0]
     out = dict(pool_layer)
     rows = jnp.arange(b)
@@ -279,13 +501,16 @@ def append_paged(pool_layer: Dict, new_vals: Dict, state: PagedState) -> Dict:
         off = state.lengths % page
         pid = jnp.take_along_axis(state.page_table, slot[:, None], axis=1)[:, 0]
         pid = jnp.where(state.lengths > 0, pid, null).astype(jnp.int32)
+        # a row's tail page is always private (boundary pages never freeze),
+        # so pid is always an active-store id even in a mixed-format pool;
+        # clamp anyway so a violation cannot index out of bounds in-graph
+        pid = jnp.minimum(pid, null)
         new = new_vals[name].astype(jnp.float32)[:, 0]  # (B, KV, hd) | (B, dim)
         new = _with_head_axis(new, has_heads)  # (B, KV|1, hd)
-        if not fp8:
+        if not pf.quantized:
             val = new if has_heads else new[:, 0]
             out[name] = store.at[pid, off].set(val.astype(store.dtype))
             continue
-        fmt = FORMATS["fp8_e4m3"]
         codes = _with_head_axis(store[pid], has_heads)  # (B, page, KV|1, hd)
         smax = pool_layer[name + "_smax"][pid]  # (B,)
         shifts = pool_layer[name + "_shift"][pid]  # (B, KV|1)
@@ -327,7 +552,7 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
     so they cannot leak into the page amax (and so the scales). Pages the
     pad region overhangs must point at the null page in ``page_table``.
     """
-    fp8 = _is_fp8(pool_layer)
+    pf = pool_format(pool_layer)
     out = dict(pool_layer)
     start = state.lengths[0]
     for name in pool_keys(pool_layer):
@@ -347,8 +572,13 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
         vals = new.reshape(npg, page, new.shape[-2], new.shape[-1])
         pid = jax.lax.dynamic_slice_in_dim(
             state.page_table[0], start // page, npg)
-        if fp8:
-            codes, smax, shifts = quantize_pages(vals)
+        # prefill writes only ever target private (active-class) pages; in
+        # a mixed pool any frozen id here would be a bug — clamp to the
+        # null page so it cannot index out of bounds in-graph (the engine's
+        # assert_unfrozen catches the bug host-side)
+        pid = jnp.minimum(pid, store.shape[0] - 1)
+        if pf.quantized:
+            codes, smax, shifts = quantize_pages(vals, pf)
             if not has_heads:
                 codes = codes[..., 0, :]
             out[name] = store.at[pid].set(codes)
@@ -403,20 +633,44 @@ def scatter_slabs(pool_layer, slab_ids, new_rows):
 
 def gather_pages(pool_layer: Dict, name: str, state: PagedState):
     """Dequantized gather for the jnp paths: (B, PP * page, KV, hd) f32 for
-    GQA leaves, (B, PP * page, dim) for MLA leaves."""
+    GQA leaves, (B, PP * page, dim) for MLA leaves.
+
+    Mixed-format pools: table entries ``>= P+1`` are frozen-region logical
+    ids (``base + fidx``). Both regions are gathered with clamped indices
+    (frozen ids clamp to the null page in the active store and vice versa)
+    and the per-page format select is a ``where`` on the id class — the same
+    dataflow the Pallas kernels implement with a prefetched frozen mask."""
     store = pool_layer[name]
+    pf = pool_format(pool_layer)
+    fz = frozen_format(pool_layer)
     has_heads = store.ndim == 4
     page = store.shape[1]
     b, pp = state.page_table.shape
-    pages = store[state.page_table]  # (B, PP, page, ...)
-    if _is_fp8(pool_layer):
-        smax = pool_layer[name + "_smax"][state.page_table]  # (B, PP)
-        shifts = pool_layer[name + "_shift"][state.page_table]  # (B, PP, KV|1)
-        vals = dequantize_pages(_with_head_axis(pages, has_heads), smax, shifts)
+    pt = state.page_table
+    base = store.shape[0]  # P+1: first frozen logical id
+    apt = jnp.minimum(pt, base - 1) if fz is not None else pt
+    pages = store[apt]  # (B, PP, page, ...)
+    if pf.quantized:
+        smax = pool_layer[name + "_smax"][apt]  # (B, PP)
+        shifts = pool_layer[name + "_shift"][apt]  # (B, PP, KV|1)
+        d = store.shape[-1] * (2 if pf.packed else 1)
+        vals = dequantize_pages(_with_head_axis(pages, has_heads), smax,
+                                shifts, pf, d=d)
         if not has_heads:
             vals = vals[..., 0, :]
     else:
         vals = pages.astype(jnp.float32)
+    if fz is not None:
+        fstore = pool_layer[name + "_fz"]
+        fpt = jnp.clip(pt - base, 0, fstore.shape[0] - 1)
+        fsmax = pool_layer[name + "_fz_smax"][fpt]
+        fshift = pool_layer[name + "_fz_shift"][fpt]
+        fvals = dequantize_pages(_with_head_axis(fstore[fpt], has_heads),
+                                 fsmax, fshift, fz, d=store.shape[-1])
+        if not has_heads:
+            fvals = fvals[..., 0, :]
+        frozen = (pt >= base).reshape(b, pp, *([1] * (vals.ndim - 2)))
+        vals = jnp.where(frozen, fvals, vals)
     return vals.reshape(b, pp * page, *vals.shape[3:])
 
 
@@ -587,16 +841,29 @@ class PrefixCache:
         self.reclaims += 1
         return pid
 
-    def assert_unfrozen(self, page_ids: Iterable[int]):
+    def assert_unfrozen(self, page_ids: Iterable[int],
+                        frozen_base: Optional[int] = None):
         """Frozen-page invariant: a registered page is shared-frozen —
         content-addressed and possibly mapped by several slots — so no
         write path (prefill chunk, decode append, spill restore) may ever
         target it. The serving engine checks every write set against this
-        before issuing the write."""
+        before issuing the write.
+
+        ``frozen_base`` extends the check to the page *format*: in a
+        mixed-precision pool every id >= base addresses the packed FP4
+        frozen region, whose pages are read-only from the moment they are
+        transcoded — a write there is a format violation even if the index
+        entry has since been reclaimed."""
         for pid in page_ids:
-            if int(pid) in self._by_pid:
+            pid = int(pid)
+            if frozen_base is not None and pid >= frozen_base:
                 raise AssertionError(
-                    f"write targets shared-frozen page {int(pid)}: frozen "
+                    f"write targets frozen FP4 page {pid} (>= frozen base "
+                    f"{frozen_base}): packed FP4 pages are transcoded once "
+                    "at freeze time and never written again")
+            if pid in self._by_pid:
+                raise AssertionError(
+                    f"write targets shared-frozen page {pid}: frozen "
                     "pages are immutable (copy-on-write means the boundary "
                     "page must be private)")
 
@@ -605,13 +872,18 @@ class PrefixCache:
 # Accounting
 # ---------------------------------------------------------------------------
 def pool_bytes_per_token(pool: Dict) -> float:
-    """Bytes of pool storage per token slot (all value + scale leaves,
-    across the stacked layers), excluding the reserved null page."""
+    """Bytes of *active-store* storage per token slot (all value + scale
+    leaves, across the stacked layers), excluding the reserved null page.
+    The dedicated frozen region (``*_fz`` leaves) is a separate residency
+    pool with its own page count — see ``page_bytes`` for the per-class
+    figure the engine's residency accounting is built on."""
     first = pool[pool_keys(pool)[0]]
     n_layers, p1, page = first.shape[:3]
     tokens = (p1 - 1) * page
     total = 0
-    for leaf in pool.values():
+    for name, leaf in pool.items():
+        if "_fz" in name or leaf.size == 0:
+            continue
         frac = (leaf.shape[1] - 1) / leaf.shape[1]
         total += leaf.size * leaf.dtype.itemsize * frac
     return total / tokens
@@ -626,6 +898,22 @@ def bf16_bytes_per_token(pool: Dict) -> float:
         per_tok = int(np.prod(leaf.shape[3:])) * leaf.shape[0]  # feat x layers
         total += per_tok * 2
     return float(total)
+
+
+def page_bytes(pool: Dict, frozen: bool = False) -> float:
+    """Bytes one page costs across the stacked layers (values + scales) in
+    the requested class: the active store (``frozen=False``) or the packed
+    frozen region (``frozen=True``, 0.0 when the pool is homogeneous). The
+    building block of the engine's residency accounting — a mixed pool's
+    live bytes are ``n_active_live * page_bytes(pool) + n_frozen_live *
+    page_bytes(pool, frozen=True)``."""
+    total = 0.0
+    for name, leaf in pool.items():
+        if leaf.size == 0 or ("_fz" in name) != frozen:
+            continue
+        axis = 1 if leaf.ndim >= 2 else 0
+        total += leaf.size * leaf.dtype.itemsize / leaf.shape[axis]
+    return total
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:

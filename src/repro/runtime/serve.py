@@ -60,11 +60,20 @@ compiles O(log max_seq) prefill programs instead of one per distinct
 (chunk_len, table_width) pair. Families with recurrent state stream exact
 chunks instead (pad tokens cannot be masked out of a recurrence's carry).
 
-``kv_fmt`` selects the page payload: ``"fp8_e4m3"`` stores packed FP8 codes
-with per-(page, head) M2 scales (~0.52x the bytes of bf16 -> ~2x the slot
-pool per HBM byte), ``None`` keeps bf16 pages as the fallback path. Both
-run the same paged decode attention with per-slot *true* lengths — rows
-carry their own positions and length masks end to end.
+``ServerConfig.cache`` (a :class:`runtime.kv_cache.CachePolicy`) selects
+the page payload *per page class*: ``active_fmt`` for every page a write
+path can still touch ("fp8_e4m3" packed FP8 codes with per-(page, head) M2
+scales ~0.52x the bytes of bf16, or None for bf16 pages), ``frozen_fmt``
+for prefix-cache-registered pages (``"fp4_e2m1"`` transcodes each page
+FP8 -> packed FP4 exactly once at the freeze point, halving frozen-page
+bytes again), and ``cross_fmt`` for write-once enc-dec cross pages. The
+flat ``kv_fmt`` string knob still maps onto
+``CachePolicy(active_fmt=...)`` through a DeprecationWarning shim. Every
+format runs the same paged decode attention with per-slot *true*
+lengths — rows carry their own positions and length masks end to end;
+in a mixed-precision pool, page-table entries ``>= n_pages + 1`` address
+the packed FP4 frozen region and the kernels select the decode format
+per page by id class.
 
 Page ownership is **refcounted**, and full scale-frozen prompt pages are
 **content-addressable** (``prefix_cache=True``, pure page families only):
@@ -104,11 +113,13 @@ from repro.runtime import kv_cache as kvc
 from repro.runtime import sampling as smp
 from repro.runtime.faults import (FaultPlan, PoolCorruptionError,
                                   ServingError)
+from repro.runtime.kv_cache import CachePolicy
 from repro.runtime.sampling import SamplingParams
 
 __all__ = ["Request", "RequestResult", "TokenEvent", "Server",
-           "ServerConfig", "SchedulerConfig", "SamplingParams", "FaultPlan",
-           "PoolCorruptionError", "ServingError"]
+           "ServerConfig", "SchedulerConfig", "CachePolicy",
+           "SamplingParams", "FaultPlan", "PoolCorruptionError",
+           "ServingError"]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
@@ -222,9 +233,20 @@ class ServerConfig:
     page-gather kernels; 'ref' forces the jnp oracles; None keeps the
     process-wide setting.
 
-    ``kv_fmt``: KV page payload — 'fp8_e4m3' (packed codes +
-    per-(page, head) M2 scales) or None (bf16 pages, fallback path).
-    Recurrent state slabs always hold exact f32 state regardless.
+    ``cache``: a :class:`runtime.kv_cache.CachePolicy` — the KV-cache
+    precision policy, per page class: ``active_fmt`` for writable pages
+    ('fp8_e4m3' packed codes + per-(page, head) M2 scales, or None for
+    bf16), ``frozen_fmt`` for prefix-cache-registered pages
+    ('fp4_e2m1' transcodes each page to packed FP4 exactly once at
+    freeze time), ``cross_fmt`` for write-once enc-dec cross pages and
+    ``frozen_pages`` sizing the dedicated frozen region. Recurrent
+    state slabs always hold exact f32 state regardless.
+
+    ``kv_fmt``: DEPRECATED — the old flat payload string. Still
+    accepted (with a ``DeprecationWarning``) and normalized onto
+    ``cache=CachePolicy(active_fmt=kv_fmt)``; mixing it with an
+    explicit non-default ``cache`` raises ``TypeError``.
+
     ``page_size``: tokens per page. ``pool_pages``: pool capacity in
     pages (default: full backing — slots * pages per slot, plus the
     encoder pages for enc-dec). ``pool_slabs``: state slabs for
@@ -254,7 +276,8 @@ class ServerConfig:
     max_seq: int = 512
     a_fmt: Optional[str] = "fp8_e4m3"
     kernel_backend: Optional[str] = None
-    kv_fmt: Optional[str] = None
+    cache: CachePolicy = CachePolicy()
+    kv_fmt: Optional[str] = None  # deprecated -> cache=CachePolicy(active_fmt=)
     page_size: int = 64
     pool_pages: Optional[int] = None
     pool_slabs: Optional[int] = None
@@ -262,6 +285,24 @@ class ServerConfig:
     prefix_cache: bool = True
     strict: bool = True
     audit_every: int = 0
+
+    def __post_init__(self):
+        if self.kv_fmt is None:
+            return
+        if self.cache != CachePolicy():
+            raise TypeError(
+                "pass either cache=CachePolicy(...) or the deprecated "
+                "kv_fmt=..., not both")
+        warnings.warn(
+            "ServerConfig(kv_fmt=...) is deprecated; pass "
+            "ServerConfig(cache=CachePolicy(active_fmt=...))",
+            DeprecationWarning, stacklevel=3)
+        # normalize so ServerConfig(kv_fmt=f) == ServerConfig(
+        # cache=CachePolicy(active_fmt=f)) — the shimmed spelling is
+        # indistinguishable downstream (token-identical serving)
+        object.__setattr__(self, "cache",
+                           CachePolicy(active_fmt=self.kv_fmt))
+        object.__setattr__(self, "kv_fmt", None)
 
 
 # legacy flat-kwarg -> config-field mapping for the deprecation shim
@@ -284,6 +325,11 @@ def _config_from_legacy(kwargs: Dict) -> ServerConfig:
     if kwargs:
         raise TypeError(
             f"Server() got unexpected keyword argument(s) {sorted(kwargs)}")
+    if "kv_fmt" in top:
+        # map straight onto the policy here so the flat-kwarg call warns
+        # exactly once (the shim in ServerConfig.__post_init__ would warn
+        # a second time for the same call site)
+        top["cache"] = CachePolicy(active_fmt=top.pop("kv_fmt"))
     return ServerConfig(scheduler=SchedulerConfig(**sched), **top)
 
 
@@ -449,7 +495,7 @@ class Server:
             raise ValueError(f"unknown scheduler policy {sched.policy!r}")
         self.config = config
         slots, max_seq = config.slots, config.max_seq
-        kv_fmt, page_size = config.kv_fmt, config.page_size
+        policy, page_size = config.cache, config.page_size
         pool_pages, pool_slabs = config.pool_pages, config.pool_slabs
         a_fmt, prefix_cache = config.a_fmt, config.prefix_cache
         self.kernel_backend = config.kernel_backend
@@ -458,7 +504,8 @@ class Server:
         self.slots = slots
         self.max_seq = max_seq
         self.a_fmt = a_fmt
-        self.kv_fmt = kv_fmt
+        self.policy = policy
+        self.kv_fmt = policy.active_fmt  # legacy read-side alias
         self.scheduler = sched.policy
         self.headroom_pages = sched.headroom_pages
         self.low_watermark = sched.low_watermark
@@ -480,6 +527,7 @@ class Server:
             "prefix_hit_pages": 0, "prefix_hit_tokens": 0,
             "prefix_reclaims": 0, "resume_fallbacks": 0,
             "failed": 0, "spill_integrity_failures": 0,
+            "fp4_frozen_pages": 0,  # cumulative freeze-time transcodes
         }
         self._step_no = 0
         # engine tick: advances every step() *call*, decoded or not — the
@@ -515,6 +563,23 @@ class Server:
         n_pages = pool_pages or slots * (self.pages_per_slot
                                          + (self._cross_pp if self._encdec
                                             else 0))
+        # mixed-precision frozen pages exist only where the prefix cache
+        # does: the FP4 region is written exclusively by the freeze-time
+        # transcode, so a family that can never freeze a page (enc-dec,
+        # recurrent/hybrid state, prefix_cache=False) has no use for it
+        supports_prefix = (prefix_cache and not self._encdec
+                           and not self._hybrid and cfg.ssm is None
+                           and all(seg.mixer in ("gqa", "mla")
+                                   for seg in segments_for(cfg)))
+        if policy.mixed and not supports_prefix:
+            raise ValueError(
+                "CachePolicy(frozen_fmt=...) needs an active prefix cache: "
+                "frozen FP4 pages hold only content-shared prefix pages, "
+                "which exist for pure page families with prefix_cache=True")
+        self._mixed = policy.mixed
+        self._n_frozen = ((policy.frozen_pages or n_pages)
+                          if self._mixed else 0)
+        frozen_fmt = policy.frozen if self._mixed else None
         if self._hybrid:
             from repro.models.hybrid import n_attn_invocations
             from repro.models.ssm import init_mamba2_cache
@@ -527,7 +592,7 @@ class Server:
             n_inv = n_attn_invocations(cfg)
             if n_inv:
                 self.pools["shared_kv"] = kvc.init_gqa_pool(
-                    n_inv, n_pages, page_size, kv_n, hd, kv_fmt)
+                    n_inv, n_pages, page_size, kv_n, hd, policy.active)
                 self._units.append((("shared_kv",), "kv"))
         else:
             self.pools = []
@@ -535,16 +600,20 @@ class Server:
                 seg_pools = {}
                 if seg.mixer == "gqa":
                     seg_pools["kv"] = kvc.init_gqa_pool(
-                        seg.count, n_pages, page_size, kv_n, hd, kv_fmt)
+                        seg.count, n_pages, page_size, kv_n, hd,
+                        policy.active, frozen_fmt=frozen_fmt,
+                        n_frozen=self._n_frozen)
                     self._units.append(((i, "kv"), "kv"))
                     if seg.cross:
                         seg_pools["cross"] = kvc.init_cross_pool(
-                            seg.count, n_pages, page_size, kv_n, hd, kv_fmt)
+                            seg.count, n_pages, page_size, kv_n, hd,
+                            policy.cross)
                         self._units.append(((i, "cross"), "cross"))
                 elif seg.mixer == "mla":
                     seg_pools["kv"] = kvc.init_mla_pool(
                         seg.count, n_pages, page_size, cfg.mla.kv_lora_rank,
-                        cfg.mla.qk_rope_dim, kv_fmt)
+                        cfg.mla.qk_rope_dim, policy.active,
+                        frozen_fmt=frozen_fmt, n_frozen=self._n_frozen)
                     self._units.append(((i, "kv"), "kv"))
                 elif seg.mixer == "xlstm_pair":
                     from repro.models.xlstm import (init_mlstm_cache,
@@ -582,18 +651,28 @@ class Server:
             for ui, (path, kind) in enumerate(self._units) if kind == "slab"
         }
         # (recurrent-only families hold exact f32 state slabs: there is no
-        # page payload for kv_fmt to select, and the knob is simply unused)
+        # page payload for the cache policy to select, and it goes unused)
         self._n_pages = n_pages if self._has_pages else 0
         # recurrent state cannot mask pad tokens out of its carry, so
         # slab-holding families stream exact chunk lengths instead
         self._bucket_prefill = not self._has_slabs
 
         self.free_pages: List[int] = list(range(self._n_pages))
+        # frozen-region allocator (mixed-precision pools only): frozen
+        # pages live in a unified *logical* id space behind the active
+        # pool — id = _frozen_base + row index into the *_fz stores — so
+        # page tables, refcounts and the prefix index need no second
+        # namespace. The region's only writer is the freeze-time transcode.
+        self.free_frozen: List[int] = [self._frozen_base + i
+                                       for i in range(self._n_frozen)]
         # refcounted ownership: page_refs[pid] = number of slots mapping the
         # page right now. Private pages have refcount 1; content-shared
         # prefix pages can be mapped by many slots at once; refcount-0
-        # registered pages park in the prefix cache's reusable LRU.
-        self.page_refs = np.zeros(self._n_pages, np.int32)
+        # registered pages park in the prefix cache's reusable LRU. Indexed
+        # by logical id, so it spans the active pool, the (never-mapped)
+        # null page, and the frozen region.
+        self.page_refs = np.zeros(self._n_pages + 1 + self._n_frozen,
+                                  np.int32)
         self.slot_pages: List[List[int]] = [[] for _ in range(slots)]
         # leading run of content-shared (frozen, registered) pages per slot;
         # everything past it in slot_pages is private (refcount 1, writable
@@ -636,6 +715,14 @@ class Server:
         """The reserved null page id (index P of every page pool)."""
         return getattr(self, "_n_pages", 0)
 
+    @property
+    def _frozen_base(self) -> int:
+        """First frozen-region logical id: table entries >= this address
+        the packed FP4 frozen stores (row ``pid - base``). Equals the
+        active store's row count (P+1), matching the kernels' id-class
+        select."""
+        return self._null_page + 1
+
     def _unit(self, path):
         node = self.pools
         for p in path:
@@ -659,50 +746,73 @@ class Server:
             self.page_size) + self._cross_pp
 
     def _free_capacity(self) -> int:
-        """Pages allocatable right now: the free list plus the prefix
-        cache's refcount-0 reusable LRU — reclaimed (blanked) before any
-        live request is ever stolen from."""
+        """Active-class pages allocatable right now: the free list plus the
+        prefix cache's refcount-0 reusable LRU — reclaimed (blanked) before
+        any live request is ever stolen from. In a mixed-precision pool
+        every registered (and so every parked) page is frozen-class, which
+        a private allocation can never use: only the free list counts."""
         if self._alloc_faulted:
             # injected transient exhaustion: the allocator reports dry for
             # this tick, so admission defers and growth falls back to the
             # normal steal response — exactly what a real stall triggers
             return 0
         n = len(self.free_pages)
-        if self._prefix is not None:
+        if self._prefix is not None and not self._mixed:
             n += self._prefix.n_reusable
         return n
 
     def _take_page(self) -> int:
-        """One blank page for a new private allocation: the free list
-        first, then reclaim the LRU refcount-0 cached page (dropping its
-        content from the prefix index)."""
+        """One blank active-class page for a new private allocation: the
+        free list first, then reclaim the LRU refcount-0 cached page
+        (dropping its content from the prefix index). A mixed pool never
+        reclaims here — its parked pages are frozen-class and would hand
+        the allocator an id no write path may target."""
         if self.free_pages:
             return self.free_pages.pop(0)
+        assert not self._mixed, "allocator called with zero free capacity"
         pid = self._prefix.reclaim()
         assert pid is not None, "allocator called with zero free capacity"
         self.stats["prefix_reclaims"] += 1
         return pid
 
+    def _take_frozen(self) -> Optional[int]:
+        """One blank frozen-region logical id for a freeze-time transcode:
+        the frozen free list first, then reclaim the LRU parked page (in a
+        mixed pool every registered page is frozen-class, so reclaim always
+        yields a frozen id here). None when the region is fully live —
+        the caller stops registering and leaves the tail private FP8."""
+        if self.free_frozen:
+            return self.free_frozen.pop(0)
+        pid = self._prefix.reclaim()
+        if pid is not None:
+            self.stats["prefix_reclaims"] += 1
+        return pid
+
     def _release_page(self, pid: int):
         """Drop one mapping of ``pid``. At refcount 0 a registered page
         parks in the prefix cache's reusable LRU (still bit-reusable by a
-        future identical prefix); an unregistered page returns to the free
-        list."""
+        future identical prefix); an unregistered page returns to its
+        class's free list (frozen logical ids >= _frozen_base go back to
+        the frozen region's list)."""
         self.page_refs[pid] -= 1
         assert self.page_refs[pid] >= 0, f"double-free of page {pid}"
         if self.page_refs[pid] > 0:
             return
         if self._prefix is not None and self._prefix.registered(pid):
             self._prefix.park(pid)
+        elif pid >= self._frozen_base:
+            self.free_frozen.append(pid)
         else:
             self.free_pages.append(pid)
 
     def _parked_among(self, pids: List[int]) -> int:
         """How many of these prefix hits sit in the reusable LRU (refcount
-        0). They count as allocatable capacity until the admission maps
-        them, at which point they are spoken for — admission feasibility
-        must charge them against the free pool."""
-        return sum(1 for pid in pids if self.page_refs[pid] == 0)
+        0) *and* count as active-class allocatable capacity. They stop
+        being allocatable the moment the admission maps them — feasibility
+        must charge them against the free pool. Frozen-class hits never
+        counted in ``_free_capacity`` to begin with, so they charge 0."""
+        return sum(1 for pid in pids
+                   if pid < self._n_pages and self.page_refs[pid] == 0)
 
     def _map_shared(self, slot: int, pids: List[int]):
         """Map content-shared prefix pages into an empty slot (refcount++;
@@ -1018,9 +1128,11 @@ class Server:
         start = int(self.lengths[slot])  # > 0: shared prefix already mapped
         if self._prefix is not None:
             # the stream writes pages [start/page, ceil(n/page)) — none of
-            # them may be shared-frozen (boundary pages stay private)
+            # them may be shared-frozen (boundary pages stay private), and
+            # in a mixed pool none may be a packed FP4 logical id
             self._prefix.assert_unfrozen(
-                own[start // page: kvc.pages_needed(n, page)])
+                own[start // page: kvc.pages_needed(n, page)],
+                frozen_base=self._frozen_base)
         # the final chunk's in-graph sample seeds the stream (emitted-token
         # index = len(out): 0 for a fresh prefill; a resume re-prefill
         # discards the draw, so the index is never consumed twice)
@@ -1091,24 +1203,65 @@ class Server:
         not. If another slot registered the same chain first (e.g. the
         walk was capped short of an exactly-page-aligned prompt), adopt the
         canonical page and release our duplicate — dedup keeps the shared
-        pages one contiguous leading run."""
+        pages one contiguous leading run.
+
+        Mixed-precision policy (``CachePolicy.frozen_fmt="fp4_e2m1"``):
+        registration IS the freeze point, so this is where each page is
+        transcoded FP8 -> packed FP4, exactly once — the frozen region's
+        only write. Per newly-full prompt page: adopt the already-frozen
+        canonical if the chain exists, else allocate a frozen logical id,
+        ``kv_cache.transcode_page`` the FP8 page into it, remap the slot to
+        the frozen id and release the FP8 source back to the free list.
+        When the frozen region runs dry the loop stops gracefully — the
+        remaining prompt pages simply stay private FP8 (unshared but
+        correct), keeping the shared run contiguous."""
         page = self.page_size
         n_full = len(req.prompt) // page
         shared = self.slot_shared[slot]
         if n_full <= shared:
             return  # nothing new beyond the already-mapped prefix
         own = self.slot_pages[slot]
-        canon = self._prefix.insert(req.prompt[:n_full * page], own[:n_full])
+        if not self._mixed:
+            canon = self._prefix.insert(req.prompt[:n_full * page],
+                                        own[:n_full])
+            for i in range(shared, n_full):
+                if canon[i] != own[i]:  # duplicate content: adopt canonical
+                    dup = own[i]
+                    if self.page_refs[canon[i]] == 0:
+                        self._prefix.unpark(canon[i])
+                    self.page_refs[canon[i]] += 1
+                    own[i] = canon[i]
+                    self.page_table[slot, i] = canon[i]
+                    self._release_page(dup)  # private, refcount 1 -> free
+            self.slot_shared[slot] = n_full
+            return
+        # mixed: every registered page lives in the packed FP4 region
+        canon = self._prefix.walk(req.prompt, max_pages=n_full)
+        end = shared
         for i in range(shared, n_full):
-            if canon[i] != own[i]:  # duplicate content: adopt the canonical
-                dup = own[i]
-                if self.page_refs[canon[i]] == 0:
-                    self._prefix.unpark(canon[i])
-                self.page_refs[canon[i]] += 1
-                own[i] = canon[i]
-                self.page_table[slot, i] = canon[i]
-                self._release_page(dup)  # private, refcount 1 -> free list
-        self.slot_shared[slot] = n_full
+            src = own[i]
+            if i < len(canon):  # identical prefix already frozen: adopt it
+                fid = canon[i]
+                if self.page_refs[fid] == 0:
+                    self._prefix.unpark(fid)
+            else:
+                fid = self._take_frozen()
+                if fid is None:
+                    break  # frozen region fully live: tail stays private
+                for path, kind in self._units:
+                    if kind == "kv":
+                        self._set_unit(path, kvc.transcode_page(
+                            self._unit(path), src,
+                            fid - self._frozen_base))
+                self.stats["fp4_frozen_pages"] += 1
+            self.page_refs[fid] += 1
+            own[i] = fid
+            self.page_table[slot, i] = fid
+            self._release_page(src)  # the FP8 source, refcount 1 -> free
+            end = i + 1
+        if end > shared:
+            self._prefix.insert(req.prompt[:end * page], own[:end])
+        self.slot_shared[slot] = end
 
     # -- preemption by page steal ----------------------------------------------
     def _preempt(self, slot: int):
@@ -1133,8 +1286,12 @@ class Server:
                 ids = jnp.asarray(self.slot_cross[slot], jnp.int32)
             else:  # slab
                 ids = jnp.asarray([self.slot_slab[slot]], jnp.int32)
+            # only private pages spill, and those are always active-class:
+            # the frozen-region ``*_fz`` leaves (different row count, ids
+            # are logical) and the zero-size format marker never ride along
             part = {name: np.asarray(leaf[:, ids])
-                    for name, leaf in pool.items()}
+                    for name, leaf in pool.items()
+                    if "_fz" not in name and leaf.size}
             nbytes += sum(a.nbytes for a in part.values())
             payload.append(part)
         # integrity checksum over the pristine bytes; the fault hook runs
@@ -1228,8 +1385,9 @@ class Server:
             if shared_pids:
                 self._map_shared(slot, shared_pids)
             new_kv = self._alloc(slot, need_kv)
-            if self._prefix is not None:
-                self._prefix.assert_unfrozen(new_kv)  # restore targets
+            if self._prefix is not None:  # restore targets must be writable
+                self._prefix.assert_unfrozen(new_kv,
+                                             frozen_base=self._frozen_base)
             if self._encdec:
                 new_cross = self._alloc_cross(slot)
                 self.enc_lengths[slot] = self.cfg.encoder_seq
@@ -1374,6 +1532,11 @@ class Server:
                 continue
             pool = self._unit(path)
             for name in pool:
+                # scrub only the active-class stores: a quarantined row can
+                # never have written the frozen region (transcode is its
+                # only writer), and the ids here would misindex its rows
+                if "_fz" in name or not pool[name].size:
+                    continue
                 pool[name] = pool[name].at[:, ids].set(0)
             self._set_unit(path, pool)
 
@@ -1463,8 +1626,9 @@ class Server:
             # requantize (its boundary page) must be private — a shared
             # frozen page in that position would corrupt every other owner
             self._prefix.assert_unfrozen(
-                self.slot_pages[s][int(self.lengths[s]) // self.page_size]
-                for s, r in enumerate(self.active) if r is not None)
+                (self.slot_pages[s][int(self.lengths[s]) // self.page_size]
+                 for s, r in enumerate(self.active) if r is not None),
+                frozen_base=self._frozen_base)
         tok = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:
@@ -1587,28 +1751,34 @@ class Server:
         from collections import Counter
 
         v: List[str] = []
+        base = self._frozen_base
+        all_ids = (list(range(self._n_pages))
+                   + list(range(base, base + self._n_frozen)))
         mapped = Counter()
         for ids in self.slot_pages:
             mapped.update(ids)
         for ids in self.slot_cross:
             mapped.update(ids)
-        for pid in range(self._n_pages):
+        for pid in all_ids:
             if self.page_refs[pid] != mapped.get(pid, 0):
                 v.append(f"page {pid}: refcount {int(self.page_refs[pid])} "
                          f"!= {mapped.get(pid, 0)} table mappings")
-        free, parked = self.free_pages, self.reusable_pages
+        free = self.free_pages + self.free_frozen
+        parked = self.reusable_pages
         if len(free) != len(set(free)):
-            v.append(f"double-freed pages in the free list: {free}")
+            v.append(f"double-freed pages in the free lists: {free}")
+        if any(pid >= base for pid in self.free_pages) or \
+                any(pid < base for pid in self.free_frozen):
+            v.append(f"free-list class mixup: active {self.free_pages} / "
+                     f"frozen {self.free_frozen} (frozen base {base})")
         for kind_a, kind_b, inter in (
                 ("mapped", "free", set(mapped) & set(free)),
                 ("mapped", "parked", set(mapped) & set(parked)),
                 ("free", "parked", set(free) & set(parked))):
             if inter:
                 v.append(f"pages both {kind_a} and {kind_b}: {sorted(inter)}")
-        if sorted(set(mapped) | set(free) | set(parked)) != \
-                list(range(self._n_pages)):
-            lost = (set(range(self._n_pages))
-                    - set(mapped) - set(free) - set(parked))
+        if sorted(set(mapped) | set(free) | set(parked)) != sorted(all_ids):
+            lost = set(all_ids) - set(mapped) - set(free) - set(parked)
             v.append(f"pages leaked from the pool: {sorted(lost)}")
         for slot, ids in enumerate(self.slot_pages):
             if not np.array_equal(self.page_table[slot, :len(ids)], ids):
@@ -1621,6 +1791,10 @@ class Server:
                             not self._prefix.registered(pid):
                         v.append(f"slot {slot}: shared page {pid} not "
                                  "registered in the prefix index")
+                    if self._mixed and pid < base:
+                        v.append(f"slot {slot}: shared page {pid} is "
+                                 "active-class in a mixed-precision pool "
+                                 "(freeze-time transcode missed it)")
                 else:
                     if self.page_refs[pid] != 1:
                         v.append(f"slot {slot}: private page {pid} has "
@@ -1631,6 +1805,16 @@ class Server:
                         v.append(f"slot {slot}: private page {pid} is "
                                  "registered (would be written while "
                                  "shared-frozen)")
+                    if pid >= base:
+                        v.append(f"slot {slot}: private page {pid} is a "
+                                 "frozen FP4 logical id — no write path "
+                                 "may own a packed page")
+        for slot, ids in enumerate(self.slot_cross):
+            for pid in ids:
+                if pid >= base:
+                    v.append(f"slot {slot}: cross page {pid} is a frozen "
+                             "FP4 logical id (cross pages live in their "
+                             "own write-once pool)")
         if self._prefix is not None:
             for s, req in enumerate(self.active):
                 if req is None:
@@ -1660,6 +1844,7 @@ class Server:
                 "slot_cross": [list(p) for p in self.slot_cross],
                 "slot_shared": list(self.slot_shared),
                 "free_pages": list(self.free_pages),
+                "free_frozen": list(self.free_frozen),
                 "parked_pages": list(parked),
                 "slot_slab": list(self.slot_slab),
                 "free_slabs": list(self.free_slabs),
@@ -1671,6 +1856,8 @@ class Server:
         return {"step": self._step_no,
                 "pages_mapped": len(mapped), "pages_free": len(free),
                 "pages_parked": len(parked),
+                "frozen_mapped": sum(1 for pid in mapped if pid >= base),
+                "frozen_free": len(self.free_frozen),
                 "slabs_owned": len(owned),
                 "slabs_free": len(self.free_slabs),
                 "active": sum(r is not None for r in self.active),
@@ -1705,3 +1892,35 @@ class Server:
     def kv_bf16_bytes_per_token(self) -> float:
         return sum(kvc.bf16_bytes_per_token(self._unit(path))
                    for path, kind in self._units if kind in ("kv", "cross"))
+
+    def cache_residency(self) -> Dict:
+        """Per-class residency accounting for the mixed-precision cache:
+        how many pages of each class hold live (mapped or parked-reusable)
+        content, what they cost per token, and the blended bytes-per-token
+        across everything resident. ``frozen_bytes_per_token`` /
+        ``active_bytes_per_token`` is the page-class density ratio the
+        serving bench gates (<= 0.55 for packed FP4 behind FP8)."""
+        kv_units = [path for path, kind in self._units
+                    if kind in ("kv", "cross")]
+        page = self.page_size
+        active_pb = sum(kvc.page_bytes(self._unit(p)) for p in kv_units)
+        frozen_pb = sum(kvc.page_bytes(self._unit(p), frozen=True)
+                        for p in kv_units)
+        parked = set(self.reusable_pages)
+        base = self._frozen_base
+        n_active = sum(1 for pid in range(self._n_pages)
+                       if self.page_refs[pid] > 0 or pid in parked)
+        n_frozen = sum(1 for pid in range(base, base + self._n_frozen)
+                       if self.page_refs[pid] > 0 or pid in parked)
+        live_bytes = n_active * active_pb + n_frozen * frozen_pb
+        tokens = (n_active + n_frozen) * page
+        return {
+            "n_active_live": int(n_active),
+            "n_frozen_live": int(n_frozen),
+            "active_bytes_per_token": active_pb / page if page else 0.0,
+            "frozen_bytes_per_token": (frozen_pb / page
+                                       if self._mixed else 0.0),
+            "live_bytes": float(live_bytes),
+            "resident_tokens": int(tokens),
+            "bytes_per_token": float(live_bytes / tokens) if tokens else 0.0,
+        }
