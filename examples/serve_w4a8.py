@@ -36,6 +36,12 @@ end ``status='failed'``, the tampered spill is caught by its CRC and
 re-prefilled, and everything else finishes untouched. ``--audit-every N``
 runs the pool-ownership auditor every N decode steps; the drain always
 ends with an audit, so a broken pool invariant fails loudly.
+
+``--mesh N`` serves through a ``(data=1, model=N)`` device mesh (simulated
+host devices on CPU): KV pages, their scales and the decode attention are
+sharded by head across the N model shards while the host scheduler stays
+a single brain. Greedy tokens are identical to ``--mesh 1`` and the drain
+prints per-shard page residency next to the per-format residency stats.
 """
 import argparse
 import os
@@ -45,13 +51,20 @@ from collections import Counter
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+# --mesh N shards the engine over N simulated host devices; the XLA flag
+# must be set before the backend initializes, and the repro imports below
+# pull in jax — so pre-scan argv here, ahead of argparse
+if any(a == "--mesh" or a.startswith("--mesh=") for a in sys.argv[1:]):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
 import numpy as np
 
 from repro import models
 from repro.core.policy import QuantPolicy
 from repro.core.ptq import quantize_tree
 from repro.kernels import ops
-from repro.runtime.serve import (CachePolicy, FaultPlan, Request,
+from repro.runtime.serve import (CachePolicy, FaultPlan, MeshPlan, Request,
                                  SamplingParams, SchedulerConfig, Server,
                                  ServerConfig)
 
@@ -213,6 +226,12 @@ def main():
                     help="run the pool-ownership auditor every N decode "
                          "steps (raises PoolCorruptionError with a state "
                          "dump on any broken invariant; 0 = off)")
+    ap.add_argument("--mesh", type=int, default=1, metavar="N",
+                    help="shard the engine over a (1, N) device mesh: KV "
+                         "pages + decode attention split by head across N "
+                         "model-axis shards (simulated host devices on "
+                         "CPU); greedy tokens stay identical to --mesh 1 "
+                         "and the drain prints per-shard page residency")
     args = ap.parse_args()
 
     if args.families:
@@ -257,6 +276,7 @@ def main():
               f"NaN rows at {plan.nan_logits}, corrupt spill ordinals "
               f"{plan.corrupt_spills}, allocator blanked on ticks "
               f"{plan.alloc_fail_ticks}")
+    mesh_plan = MeshPlan(data=1, model=args.mesh) if args.mesh > 1 else None
     server = Server(packed, BENCH_CFG,
                     ServerConfig(slots=args.slots, max_seq=96,
                                  kernel_backend=args.backend, cache=cache,
@@ -264,13 +284,16 @@ def main():
                                  pool_pages=args.pool_pages or None,
                                  prefix_cache=not args.no_prefix_cache,
                                  strict=False, audit_every=args.audit_every,
-                                 scheduler=SchedulerConfig(policy=args.scheduler)),
+                                 scheduler=SchedulerConfig(policy=args.scheduler),
+                                 mesh=mesh_plan),
                     faults=plan)
     frozen_note = (f" + frozen {args.frozen_kv_fmt}" if frozen_fmt else "")
+    mesh_note = (f"; mesh=(1, {args.mesh}) — KV heads split over "
+                 f"{args.mesh} model shards" if mesh_plan else "")
     print(f"kv cache: paged {args.kv_fmt}{frozen_note}, "
           f"{server.kv_bytes_per_token():.0f} B/token "
           f"(bf16 baseline {server.kv_bf16_bytes_per_token():.0f} B/token); "
-          f"scheduler={args.scheduler}")
+          f"scheduler={args.scheduler}{mesh_note}")
     shared = (rng.integers(1, BENCH_CFG.vocab_size,
                            size=args.shared_prefix).tolist()
               if args.shared_prefix else [])
@@ -345,6 +368,11 @@ def main():
         print(f"  {server.stats['fp4_frozen_pages']} pages transcoded "
               f"FP8 -> packed FP4 at freeze; frozen/active page density "
               f"{ratio:.2f}x")
+    if mesh_plan is not None:
+        per = server.shard_residency()
+        detail = ", ".join(f"{dev}: {b / 2**10:.1f} KiB"
+                           for dev, b in per.items())
+        print(f"per-shard page residency ({len(per)} devices): {detail}")
     for r in reqs[:3]:
         tag = " [truncated]" if r.truncated else ""
         print(f"  req {r.rid}: {r.prompt} -> {r.out}{tag}")

@@ -31,6 +31,16 @@ tiling — the autotuner's block size for this kernel). Rows past a slot's
 true length are masked by position, so per-slot lengths need no host-side
 synchronization (this is what retires the engine's max-length hack).
 
+On a serving mesh the kernel is *oblivious* to tensor parallelism: the
+engine's shard_map wrapper (kernels.ops.paged_decode_attn) hands each
+model-axis shard a contiguous KV-head block of the pool (codes and their
+per-(page, head) shift scales co-sharded on the head dim; per-page s_max
+replicated) plus the matching contiguous q-head block — GQA's g = H/KV
+grouping is preserved locally because both head counts divide the axis —
+so the kernel body, grid and index maps are identical per shard, just with
+KV/m heads. MLA's latent pages have no head axis and stay replicated; its
+wrapper shards the absorbed q heads only.
+
 The jnp oracle is kernels.ref.paged_decode_attn_ref; interpret-mode parity
 is asserted by tests/test_kv_cache.py (FP8 tier) and tests/test_fp4_cache.py
 (packed FP4 tier).

@@ -29,6 +29,11 @@ from . import ref as _ref
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
 
+# Mesh the paged decode-attention wrappers shard over (None = single-device,
+# today's exact dataflow). Scoped by the serving engine around every trace —
+# a module global like _BACKEND, read at trace time.
+_DECODE_MESH = [None]
+
 
 def set_backend(name: str):
     global _BACKEND
@@ -38,6 +43,18 @@ def set_backend(name: str):
 
 def get_backend() -> str:
     return _BACKEND
+
+
+def set_decode_mesh(mesh):
+    """Install (or clear, with None) the mesh the paged decode-attention
+    entry points shard_map over. Head-sharded decode is only taken when the
+    KV-head dim divides the 'model' axis; otherwise the call falls through
+    to the unsharded dataflow and GSPMD handles placement."""
+    _DECODE_MESH[0] = mesh
+
+
+def get_decode_mesh():
+    return _DECODE_MESH[0]
 
 
 def interpret_mode() -> bool:
@@ -150,6 +167,22 @@ def _fz_operands(pool_layer, names):
     return out
 
 
+def _pool_shard_spec(name: str, leaf, msize: int):
+    """PartitionSpec for one per-layer pool-slice leaf under head-sharded
+    decode: 4-D ``(pages, page, KV, hd)`` code stores shard their head dim,
+    per-(page, head) ``*_shift`` scales co-shard with them, and everything
+    else (per-page smax, MLA latents, zero-size format markers) replicates.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if leaf.ndim == 4 and leaf.size and leaf.shape[2] % msize == 0:
+        return P(None, None, "model", None)
+    if leaf.ndim == 2 and name.endswith("_shift") and \
+            leaf.shape[1] % msize == 0:
+        return P(None, "model")
+    return P()
+
+
 def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
     """Paged decode attention over one layer's quantized KV pool slice.
 
@@ -160,11 +193,39 @@ def paged_decode_attn(q, pool_layer, page_table, kv_lens, window: int = 0):
     kv_lens: (B,) int32 valid token counts; ``window``: sliding-window size
     (0 = full history). Returns (B, H, dv) f32.
 
-    Pallas backend: the flash-decoding kernel gathers pages through the
-    page table in its BlockSpec index maps and dequantizes FP8/FP4 in VMEM
-    (exponent-add scale apply, per-page format select by id class). Ref:
-    gathered-page jnp oracle.
+    With a decode mesh installed (``set_decode_mesh``) and the KV-head dim
+    divisible by the 'model' axis, the whole dataflow runs under
+    ``shard_map`` with pages/scales head-sharded: each shard attends its
+    own KV-head group against its slice of every page — queries arrive
+    head-sharded, no collectives, outputs stay head-sharded. Non-divisible
+    head counts fall through to the unsharded call (GSPMD places it).
     """
+    mesh = _DECODE_MESH[0]
+    if mesh is not None:
+        msize = mesh.shape.get("model", 1)
+        kvh, h = pool_layer["k"].shape[2], q.shape[1]
+        if msize > 1 and kvh % msize == 0 and h % msize == 0:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            specs = {n: _pool_shard_spec(n, l, msize)
+                     for n, l in pool_layer.items()}
+            hspec = P(None, "model", None)
+            fn = shard_map(
+                lambda qv, pl, pt, kl: _paged_decode_attn_impl(
+                    qv, pl, pt, kl, window=window),
+                mesh=mesh, in_specs=(hspec, specs, P(), P()),
+                out_specs=hspec, check_rep=False)
+            return fn(q, pool_layer, page_table, kv_lens)
+    return _paged_decode_attn_impl(q, pool_layer, page_table, kv_lens,
+                                   window=window)
+
+
+def _paged_decode_attn_impl(q, pool_layer, page_table, kv_lens,
+                            window: int = 0):
+    """Single-shard paged decode attention (backend dispatch unchanged —
+    this is exactly the pre-mesh dataflow; under shard_map every shape
+    below is the per-shard local shape)."""
     kp, vp = pool_layer["k"], pool_layer["v"]
     fmt, frozen = _layer_formats(pool_layer, "k")
     if fmt.quantized:
@@ -210,7 +271,35 @@ def paged_mla_decode_attn(q_lat, q_rope, pool_layer, page_table, kv_lens,
     Pallas backend: the latent flash-decoding kernel gathers pages through
     the scalar-prefetched page table and dequantizes FP8 in VMEM. Ref: the
     gathered-page jnp oracle.
+
+    With a decode mesh installed, the absorbed query heads shard along
+    'model' while the latent pool (no head axis) replicates — each shard
+    runs its head group against the full latent pages, so the contraction
+    is local and the (B, H, r) context comes back head-sharded.
     """
+    mesh = _DECODE_MESH[0]
+    if mesh is not None:
+        msize = mesh.shape.get("model", 1)
+        if msize > 1 and q_lat.shape[1] % msize == 0:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            specs = {n: P() for n in pool_layer}  # latents: no head axis
+            hspec = P(None, "model", None)
+            fn = shard_map(
+                lambda ql, qr, pl, pt, kl: _paged_mla_decode_attn_impl(
+                    ql, qr, pl, pt, kl, scale=scale),
+                mesh=mesh, in_specs=(hspec, hspec, specs, P(), P()),
+                out_specs=hspec, check_rep=False)
+            return fn(q_lat, q_rope, pool_layer, page_table, kv_lens)
+    return _paged_mla_decode_attn_impl(q_lat, q_rope, pool_layer, page_table,
+                                       kv_lens, scale=scale)
+
+
+def _paged_mla_decode_attn_impl(q_lat, q_rope, pool_layer, page_table,
+                                kv_lens, scale: float):
+    """Single-shard MLA absorbed decode (the pre-mesh dataflow; under
+    shard_map the head dim below is the per-shard local head count)."""
     cp, rp = pool_layer["ckv"], pool_layer["krope"]
     fmt, frozen = _layer_formats(pool_layer, "ckv")
     if fmt.quantized:

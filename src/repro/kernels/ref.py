@@ -119,6 +119,12 @@ def paged_decode_attn_ref(q, k_pages, v_pages, k_smax, k_shift, v_smax,
     exactly the kernel's dataflow. Returns (B, H, dv) f32 — the
     gathered-page, dequantized softmax attention with per-row length masks
     (GQA repetition internal).
+
+    Shape-polymorphic in H and KV (only g = H/KV is load-bearing), so the
+    serving mesh's shard_map wrapper runs this same oracle per model-axis
+    shard on its contiguous head block — H/m query heads against KV/m
+    kv heads with the co-sharded ``*_shift`` rows — with no sharded
+    variant needed.
     """
     fmt = page_format(fmt)
     frozen = page_format(frozen) if frozen is not None else None

@@ -36,6 +36,8 @@ __all__ = [
     "batch_pspecs",
     "cache_pspecs",
     "residual_spec",
+    "serve_pool_pspecs",
+    "serve_param_shardings",
 ]
 
 BIG_PARAMS = 16e9  # above this, ZeRO-3 param sharding
@@ -182,3 +184,93 @@ def _cache_leaf_spec(shape, mesh) -> P:
 
 def cache_pspecs(cache_shape_tree, mesh):
     return jax.tree.map(lambda s: _cache_leaf_spec(s.shape, mesh), cache_shape_tree)
+
+
+# ---------------------------------------------------------------------------
+# Serving pool / param layouts (paged engine on a mesh)
+# ---------------------------------------------------------------------------
+def _pool_leaf_spec(name: str, shape, mesh) -> P:
+    """Per-mesh-axis layout for one paged-pool leaf (runtime/kv_cache.py
+    layout conventions):
+
+      * GQA/cross K/V stores ``(L, P+1, page, KV, hd)`` — the KV-head dim
+        (index 3) shards along 'model' when divisible; layers, page ids and
+        the in-page token dim stay replicated (page identity is host-global).
+      * per-(page, head) ``*_shift`` scales ``(L, P+1, KV)`` co-shard their
+        head dim with the codes; per-page ``*_smax`` ``(L, P+1)`` replicate
+        (one scalar per page, shared by every head shard).
+      * MLA latent stores ``(L, P+1, r)``-shaped leaves have no head axis —
+        they replicate (the absorbed heads shard on the query side), and
+        their single-"head" shifts ``(L, P+1, 1)`` fall out replicated via
+        the same divisibility test.
+      * frozen ``*_fz`` leaves mirror the active layout (same head dim
+        index), zero-size format markers and recurrent slabs replicate.
+    """
+    msize = mesh.shape.get("model", 1)
+    nd = len(shape)
+    if msize <= 1 or 0 in shape:
+        return P(*([None] * nd))
+    if nd == 5 and shape[3] % msize == 0:  # (L, pages, page, KV, hd) codes
+        return P(None, None, None, "model", None)
+    if nd == 3 and name.endswith("_shift") and shape[2] % msize == 0:
+        return P(None, None, "model")  # co-sharded with the code head dim
+    return P(*([None] * nd))
+
+
+def serve_pool_pspecs(pool, mesh):
+    """PartitionSpec per paged-pool leaf, keyed by leaf name + shape (only
+    ``mesh.shape`` is read, so a stub mesh works for spec-shape tests)."""
+    return {name: _pool_leaf_spec(name, leaf.shape, mesh)
+            for name, leaf in pool.items()}
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def serve_param_shardings(cfg, params, mesh):
+    """NamedSharding tree for a *serving* param tree (dense or W4A8-packed)
+    under ``serve_rules``. The logical->axis specs come from the model's
+    ParamDef tree; packed ``PackedLinear`` leaves (codes/scales/s_max/
+    shifts/lorc_a, whose dim0 is the def leaf's dim0) inherit the def
+    spec's dim0 entry. Anything unmatched or non-divisible replicates —
+    placement is an optimization, GSPMD owns correctness."""
+    from repro.models.api import build_def
+
+    spec_tree = pspec_tree(build_def(cfg), serve_rules(cfg, mesh), mesh)
+    flat_specs, _ = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    by_path = {tuple(_key_str(k) for k in path): spec
+               for path, spec in flat_specs}
+    replicated = NamedSharding(mesh, P())
+
+    def leaf_sharding(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        spec = by_path.get(keys)
+        if spec is None and len(keys) > 1:
+            # PackedLinear field under a def leaf: apply the def dim0 axis
+            # to the field's dim0 (out-features / expert stack), except the
+            # 2-D lorc_b whose dim0 is the LoRC rank, not the def dim0
+            base = by_path.get(keys[:-1])
+            field = keys[-1]
+            if base is not None and getattr(leaf, "ndim", 0) >= 1 and not (
+                    field == "lorc_b" and leaf.ndim == 2):
+                ax = base[0] if len(base) else None
+                if ax is not None:
+                    asize = int(np.prod([mesh.shape[a] for a in
+                                         ((ax,) if isinstance(ax, str)
+                                          else tuple(ax))]))
+                    if asize and leaf.shape[0] % asize == 0:
+                        spec = P(ax, *([None] * (leaf.ndim - 1)))
+        if spec is None:
+            return replicated
+        if len(spec) > getattr(leaf, "ndim", 0):
+            return replicated  # shape drifted from the def tree: replicate
+        return NamedSharding(mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_sharding(path, leaf) for path, leaf in flat])

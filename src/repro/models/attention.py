@@ -176,9 +176,12 @@ def attention(
     b, s, _ = x.shape
 
     xq = quant_act(x, a_fmt)
+    # head-dim layout hint (no-op off-mesh): in SP training this keeps the
+    # seq-sharded residual from gathering early; on a serving mesh it pins
+    # decode's (B, 1, H, hd) q to the same head partitioning the sharded
+    # paged-attention shard_map consumes, avoiding a resharding round-trip
     q = linear(p["wq"], xq, p.get("bq")).reshape(b, s, h, hd)
-    if s > 1:
-        q = shard_heads(q)
+    q = shard_heads(q)
     if cfg.pos_embedding == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
 

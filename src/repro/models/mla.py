@@ -176,6 +176,11 @@ def mla_attention(
             # semantics) — no dequantized (B, T, r) latent gather in HBM
             from repro.kernels import ops
 
+            # absorbed heads shard over 'model' on a serving mesh (the
+            # latent pages themselves replicate — no head axis); these
+            # hints are no-ops off-mesh
+            q_lat = shard_heads(q_lat)
+            q_rope = shard_heads(q_rope)
             ctx_lat = ops.paged_mla_decode_attn(
                 q_lat[:, 0], q_rope[:, 0], new_cache,
                 cache_index.page_table, cache_index.lengths + 1,

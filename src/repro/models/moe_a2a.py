@@ -33,11 +33,12 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from .layers import activation, mlp, quant_act
+from .layers import activation, batched_linear, linear, mlp, quant_act
+from .moe import _dispatch_masks
 
-__all__ = ["set_moe_impl", "get_moe_impl", "moe_layer_a2a"]
+__all__ = ["set_moe_impl", "get_moe_impl", "moe_layer_a2a", "moe_decode_ep"]
 
-_MOE_IMPL = [("einsum", None)]  # ('einsum'|'a2a', mesh)
+_MOE_IMPL = [("einsum", None)]  # ('einsum'|'a2a'|'ep_decode', mesh)
 
 
 def set_moe_impl(kind: str, mesh=None):
@@ -113,6 +114,109 @@ def _expert_ffn(recv, wu, wg, wd, act_kind, a_fmt, e_loc, capacity):
     # inverse regroup: (E_loc, P*C, d) -> (P, E_loc*C, d)
     out = out.reshape(e_loc, p, capacity, d).swapaxes(0, 1).reshape(p, e_loc * capacity, d)
     return out
+
+
+def _ep_axes(mesh, n_experts: int):
+    """EP axes for the expert stack, mirroring the placement rule in
+    launch.sharding.serve_rules: the whole mesh when the expert count
+    divides it, else the ('data', 'model') subset, else None (no EP)."""
+    total = 1
+    for a in mesh.shape:
+        total *= mesh.shape[a]
+    if n_experts % total == 0:
+        return tuple(mesh.shape.keys())
+    dm = tuple(a for a in ("data", "model") if a in mesh.shape)
+    size = 1
+    for a in dm:
+        size *= mesh.shape[a]
+    if dm and n_experts % size == 0:
+        return dm
+    return None
+
+
+def moe_decode_ep(p, x, cfg, mesh, a_fmt: Optional[str] = None,
+                  group_size: int = 1024):
+    """Expert-parallel MoE for the *paged decode/prefill* path (serving on
+    a mesh). x: (B, S, d) replicated -> (out (B, S, d), aux scalar).
+
+    Routing, capacity math and the dispatch/combine einsums are the exact
+    einsum-path code from models/moe.moe_layer — replicated on every rank,
+    so token->expert assignment is identical to the single-device engine by
+    construction. Only the three expert FFN GEMMs run inside a shard_map
+    over the expert stack (the layout serve_rules already placed the W4A8
+    expert weights in: dim0 over the EP axes, fully local — no weight
+    gather). The combine einsum contracts the expert dim *outside* the
+    shard_map, so GSPMD inserts the one all-reduce this layer needs — the
+    same collective class as the TP MLP.
+
+    Unlike moe_layer_a2a this has no sequence-divisibility constraint
+    (decode steps are (B, 1, d)): tokens stay replicated, experts move
+    nothing. Weights whose leading dim is not the expert count (e.g. a
+    shared LoRC factor) force the replicated fallback."""
+    m = cfg.moe
+    e = m.n_experts
+    axes = _ep_axes(mesh, e)
+    stacked = {k: p[k] for k in ("wu", "wg", "wd") if k in p}
+    if axes is None or any(
+            getattr(l, "ndim", 0) < 1 or l.shape[0] != e
+            for l in jax.tree.leaves(stacked)):
+        from .moe import moe_layer
+
+        return moe_layer(p, x, cfg, a_fmt=a_fmt, group_size=group_size)
+
+    # -- replicated dispatch: verbatim moe_layer math ----------------------
+    b, s, d = x.shape
+    n = b * s
+    g = max(n // group_size, 1)
+    sg = -(-n // g)
+    pad = g * sg - n
+    capacity = max(int(sg * m.top_k / e * m.capacity_factor), 1)
+
+    xf = x.reshape(n, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xf = xf.reshape(g, sg, d)
+    logits = linear(p["router"], xf.astype(jnp.float32))  # router in f32
+    dispatch, combine, probs = _dispatch_masks(logits, m.top_k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(jnp.float32)
+
+    xq = quant_act(xf, a_fmt)
+    ex_in = jnp.einsum("gsec,gsd->gecd", dispatch, xq)
+    xe = jnp.moveaxis(ex_in, 1, 0).reshape(e, g * capacity, d)
+
+    # -- expert FFNs: local shard of the expert stack ----------------------
+    def ffn(xe_l, w):
+        up = batched_linear(w["wu"], xe_l)
+        if "wg" in w:
+            h = activation(batched_linear(w["wg"], xe_l), cfg.act_kind) * up
+        else:
+            h = activation(up, cfg.act_kind)
+        hq = quant_act(h, a_fmt)
+        return batched_linear(w["wd"], hq)
+
+    espec = jax.tree.map(
+        lambda l: P(axes, *([None] * (l.ndim - 1))), stacked)
+    eo = shard_map(ffn, mesh=mesh,
+                   in_specs=(P(axes, None, None), espec),
+                   out_specs=P(axes, None, None),
+                   check_rep=False)(xe, stacked)
+
+    ex_out = jnp.moveaxis(eo.reshape(e, g, capacity, d), 0, 1)
+    out = jnp.einsum("gsec,gecd->gsd", combine, ex_out.astype(jnp.float32))
+    out = out.reshape(g * sg, d)
+    if pad:
+        out = out[:n]
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    if m.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg, a_fmt=a_fmt)
+
+    frac_tokens = jnp.mean(
+        jnp.sum(dispatch, axis=-1).astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
 
 
 def moe_layer_a2a(p, x, cfg, mesh, a_fmt: Optional[str] = None):

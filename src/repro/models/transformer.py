@@ -238,7 +238,7 @@ def block_apply(
         if seg.ffn == "mlp":
             x = x + mlp(pf["mlp"], norm(pf["ln"], x, nk, cfg.norm_eps), cfg, a_fmt=a_fmt)
         else:
-            from .moe_a2a import get_moe_impl, moe_layer_a2a
+            from .moe_a2a import get_moe_impl, moe_decode_ep, moe_layer_a2a
 
             kind, mesh = get_moe_impl()
             x_ln = norm(pf["ln"], x, nk, cfg.norm_eps)
@@ -249,6 +249,11 @@ def block_apply(
             )
             if ok_a2a:  # MTP's S-1 path etc. fall back to einsum dispatch
                 h, aux = moe_layer_a2a(pf["moe"], x_ln, cfg, mesh, a_fmt=a_fmt)
+            elif kind == "ep_decode" and mesh is not None:
+                # serving on a mesh: replicated einsum dispatch (token-
+                # identical routing), expert FFNs sharded over the stack
+                h, aux = moe_decode_ep(pf["moe"], x_ln, cfg, mesh,
+                                       a_fmt=a_fmt)
             else:
                 h, aux = moe_layer(pf["moe"], x_ln, cfg, a_fmt=a_fmt)
             x = x + h

@@ -68,22 +68,25 @@ class AsyncServer:
     async def generate(self, prompt: List[int], max_new: int = 16,
                        sampling: SamplingParams = SamplingParams(),
                        rid: Optional[int] = None, priority: int = 0,
+                       frames=None,
                        ) -> AsyncIterator[TokenEvent]:
         """Submit one request and stream its TokenEvents as decoded.
 
         Yields one event per token (``event.token``) and finally the
         terminal event (``event.finished``; its ``status`` is the
         request's outcome — after iteration ``result(rid)`` returns the
-        frozen ``RequestResult``). Submission raises the same fail-fast
-        ValueErrors as ``Server.submit``. A failed request ends its
-        stream with a ``status="failed"`` terminal event rather than an
-        exception; an engine-wide strict starvation raises
+        frozen ``RequestResult``). ``frames`` carries the encoder input
+        for enc-dec engines (forwarded to ``Request.frames``; the prefix
+        cache keys shared pages on its content digest). Submission raises
+        the same fail-fast ValueErrors as ``Server.submit``. A failed
+        request ends its stream with a ``status="failed"`` terminal event
+        rather than an exception; an engine-wide strict starvation raises
         ``ServingError`` into every open stream."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
         req = Request(rid=rid, prompt=list(prompt), max_new=max_new,
-                      sampling=sampling, priority=priority)
+                      sampling=sampling, priority=priority, frames=frames)
         self.server.submit(req)  # validates; raises before any stream state
         q: asyncio.Queue = asyncio.Queue()
         self._queues[rid] = q  # no await between submit and registration,

@@ -752,7 +752,25 @@ class PrefixCache:
         # refcount-0 registered pages, oldest-parked first
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self._next_node = 0
+        # conditioning-digest -> synthetic root node id. Requests whose KV
+        # depends on more than the token ids (enc-dec: cross-attention makes
+        # decoder K/V a function of the *encoder frames* too) chain off a
+        # per-digest root instead of _PREFIX_ROOT, so identical decoder
+        # prompts under different audio never alias (node ids are unique)
+        self._roots: Dict[str, int] = {}
         self.reclaims = 0
+
+    def root_for(self, digest: str) -> int:
+        """Radix root node for an extra conditioning digest (e.g. a hash of
+        the encoder frames). Monotonic node ids, memoized per digest —
+        walks/inserts under the same digest share a chain, different
+        digests get disjoint chains by construction."""
+        root = self._roots.get(digest)
+        if root is None:
+            root = self._next_node
+            self._next_node += 1
+            self._roots[digest] = root
+        return root
 
     def __len__(self) -> int:
         return len(self._by_key)
@@ -769,10 +787,11 @@ class PrefixCache:
     def registered(self, pid: int) -> bool:
         return int(pid) in self._by_pid
 
-    def walk(self, tokens: Sequence[int], max_pages: Optional[int] = None
-             ) -> List[int]:
+    def walk(self, tokens: Sequence[int], max_pages: Optional[int] = None,
+             root: int = _PREFIX_ROOT) -> List[int]:
         """Longest chain of consecutive full-page hits for this token
-        prefix, from the root: returns the page ids holding
+        prefix, from ``root`` (the global root, or a ``root_for`` node for
+        digest-conditioned requests): returns the page ids holding
         ``tokens[:len(hits) * page_size]``. ``max_pages`` caps the walk
         (the engine always leaves at least the last context token to the
         prefill stream, so admission caps at ``(len - 1) // page_size``)."""
@@ -781,7 +800,7 @@ class PrefixCache:
         if max_pages is not None:
             limit = min(limit, max_pages)
         pids: List[int] = []
-        parent = _PREFIX_ROOT
+        parent = root
         for i in range(limit):
             key = page_key(parent, tokens[i * page: (i + 1) * page])
             hit = self._by_key.get(key)
@@ -791,16 +810,18 @@ class PrefixCache:
             parent = hit[1]
         return pids
 
-    def insert(self, tokens: Sequence[int], pids: Sequence[int]) -> List[int]:
+    def insert(self, tokens: Sequence[int], pids: Sequence[int],
+               root: int = _PREFIX_ROOT) -> List[int]:
         """Register the full pages covering ``tokens[:len(pids) * page]``
-        (``pids[i]`` holds page ``i``'s frozen content). Returns the
-        *canonical* pid per page: where the chain key already exists (an
-        identical prefix was registered first), the existing page wins and
-        the caller is expected to adopt it — releasing its duplicate —
-        which keeps every slot's shared pages one contiguous leading run."""
+        (``pids[i]`` holds page ``i``'s frozen content), chained off
+        ``root``. Returns the *canonical* pid per page: where the chain key
+        already exists (an identical prefix was registered first), the
+        existing page wins and the caller is expected to adopt it —
+        releasing its duplicate — which keeps every slot's shared pages one
+        contiguous leading run."""
         page = self.page_size
         out: List[int] = []
-        parent = _PREFIX_ROOT
+        parent = root
         for i, pid in enumerate(pids):
             pid = int(pid)
             key = page_key(parent, tokens[i * page: (i + 1) * page])

@@ -98,6 +98,7 @@ import bisect
 import contextlib
 import dataclasses
 import functools
+import hashlib
 import math
 import time
 import warnings
@@ -106,6 +107,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro import models
 from repro.models.transformer import segments_for
@@ -117,18 +120,24 @@ from repro.runtime.kv_cache import CachePolicy
 from repro.runtime.sampling import SamplingParams
 
 __all__ = ["Request", "RequestResult", "TokenEvent", "Server",
-           "ServerConfig", "SchedulerConfig", "CachePolicy",
+           "ServerConfig", "SchedulerConfig", "MeshPlan", "CachePolicy",
            "SamplingParams", "FaultPlan", "PoolCorruptionError",
            "ServingError"]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
-def _decode_step_jit(params, caches, tokens, cache_index, poison, samp,
-                     cfg, a_fmt):
-    """Module-level jitted engine step: ``cfg`` is a frozen (hashable)
-    ArchConfig, so the compiled program cache is shared across Server
-    instances — a restarted or side-by-side server reuses every
-    prefill-chunk and decode executable instead of recompiling.
+def _decode_step(params, caches, tokens, cache_index, poison, samp,
+                 cfg, a_fmt):
+    """The engine step, as a plain traceable function. ``_decode_step_jit``
+    below is the shared single-device jit of it; a mesh-driving Server
+    jits the SAME function with ``out_shardings`` pinning the cache
+    outputs to its canonical per-mesh-axis pool layouts (placement can
+    never drift step to step, so the fixed-trace property holds on a
+    mesh exactly as it does on one device).
+
+    ``cfg`` is a frozen (hashable) ArchConfig, so the compiled program
+    cache is shared across Server instances — a restarted or side-by-side
+    server reuses every prefill-chunk and decode executable instead of
+    recompiling.
 
     Returns ``(nxt, row_ok, caches)``: ``nxt`` is the per-row next token
     — sampled in-graph from the logits by ``samp``, a 5-tuple of per-row
@@ -149,6 +158,9 @@ def _decode_step_jit(params, caches, tokens, cache_index, poison, samp,
     row_ok = jnp.all(jnp.isfinite(logits), axis=-1)
     nxt = smp.sample_tokens(logits, *samp)
     return nxt, row_ok, caches
+
+
+_decode_step_jit = jax.jit(_decode_step, static_argnames=("cfg", "a_fmt"))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "a_fmt"))
@@ -174,6 +186,19 @@ def _backend_scope(name: Optional[str]):
         yield
     finally:
         _kops.set_backend(prev)
+
+
+def _migrate_legacy_kwarg(message: str, *, conflict: Optional[str] = None,
+                          stacklevel: int = 3):
+    """One shim for every legacy->current config-migration spelling
+    (``kv_fmt`` -> ``CachePolicy``, flat ``Server(...)`` kwargs ->
+    ``ServerConfig``): raise ``TypeError`` with ``conflict`` when the
+    caller mixed the old and new spellings, else emit the
+    ``DeprecationWarning`` and let the caller normalize the value.
+    ``stacklevel`` points the warning at the deprecated call site."""
+    if conflict is not None:
+        raise TypeError(conflict)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
 
 def _next_pow2(n: int) -> int:
@@ -222,6 +247,59 @@ class SchedulerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Device-mesh layout for one serving engine: a ('data', 'model')
+    ``jax.sharding.Mesh`` over ``data * model`` local devices, plus the
+    per-mesh-axis layout every pool leaf and weight shard follows:
+
+      * GQA KV pages, their per-(page, head) scales and the decode
+        attention shard by KV head along 'model' (head counts are
+        asserted divisible at Server construction);
+      * MLA latent pages replicate (no head axis) while the absorbed
+        query heads shard along 'model';
+      * MoE decode routes expert-parallel (expert-stacked W4A8 weights
+        sharded over the mesh, partial outputs all-reduced);
+      * W4A8 weight shards are placed by ``launch.sharding.serve_rules``.
+
+    The host-side scheduler stays a single brain above all of it: page
+    tables, refcounts, the prefix radix index, spill CRCs and ``audit()``
+    are host-global, and spill/restore gathers/scatters per shard
+    implicitly (``np.asarray`` of a sharded leaf is the global array).
+
+    ``total == 1`` (the default, and ``ServerConfig.mesh=None``) keeps
+    the single-device engine byte-for-byte: no Mesh is ever built and
+    every code path is exactly the pre-mesh one (asserted by tests)."""
+
+    data: int = 1
+    model: int = 1
+
+    def __post_init__(self):
+        if self.data < 1 or self.model < 1:
+            raise ValueError(
+                f"MeshPlan axes must be >= 1, got data={self.data} "
+                f"model={self.model}")
+
+    @property
+    def total(self) -> int:
+        return self.data * self.model
+
+    def build(self):
+        """Build the ('data', 'model') Mesh over the first ``total``
+        local devices (CPU CI simulates them via
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+        from repro.launch.mesh import make_mesh
+
+        ndev = len(jax.devices())
+        if self.total > ndev:
+            raise ValueError(
+                f"MeshPlan(data={self.data}, model={self.model}) needs "
+                f"{self.total} devices but only {ndev} are visible (set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "before importing jax to simulate a CPU mesh)")
+        return make_mesh((self.data, self.model), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
 class ServerConfig:
     """Frozen Server construction spec (replaces the old 19-kwarg flat
     ``Server.__init__``; those kwargs still map here through a
@@ -254,6 +332,14 @@ class ServerConfig:
 
     ``scheduler``: a nested :class:`SchedulerConfig`.
 
+    ``mesh``: a nested :class:`MeshPlan` — None (or a 1-device plan)
+    keeps today's single-device engine byte-for-byte; a larger plan
+    makes this Server drive a ('data', 'model') device mesh with KV
+    pages/decode attention sharded by head, MLA latents replicated,
+    MoE decode expert-parallel and weights placed by ``serve_rules``
+    (pure page families only: GQA/MLA decoders, no enc-dec cross pages
+    or recurrent state slabs).
+
     ``prefix_cache``: content-addressed sharing of full, scale-frozen
     prompt pages across requests (refcounted pages + host-side radix
     index; see the module docstring). Active only for pure page
@@ -282,6 +368,7 @@ class ServerConfig:
     pool_pages: Optional[int] = None
     pool_slabs: Optional[int] = None
     scheduler: SchedulerConfig = SchedulerConfig()
+    mesh: Optional[MeshPlan] = None
     prefix_cache: bool = True
     strict: bool = True
     audit_every: int = 0
@@ -289,14 +376,13 @@ class ServerConfig:
     def __post_init__(self):
         if self.kv_fmt is None:
             return
-        if self.cache != CachePolicy():
-            raise TypeError(
-                "pass either cache=CachePolicy(...) or the deprecated "
-                "kv_fmt=..., not both")
-        warnings.warn(
+        _migrate_legacy_kwarg(
             "ServerConfig(kv_fmt=...) is deprecated; pass "
             "ServerConfig(cache=CachePolicy(active_fmt=...))",
-            DeprecationWarning, stacklevel=3)
+            conflict=("pass either cache=CachePolicy(...) or the "
+                      "deprecated kv_fmt=..., not both")
+            if self.cache != CachePolicy() else None,
+            stacklevel=4)
         # normalize so ServerConfig(kv_fmt=f) == ServerConfig(
         # cache=CachePolicy(active_fmt=f)) — the shimmed spelling is
         # indistinguishable downstream (token-identical serving)
@@ -415,6 +501,22 @@ class Request:
     seq: int = 0  # server-managed: global arrival sequence (tie-break)
     t_submit: float = 0.0  # server-managed: perf_counter at submit()
     token_times: list = dataclasses.field(default_factory=list)
+    _frames_digest: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def frames_digest(self) -> str:
+        """Content digest of the encoder frames (enc-dec requests only),
+        computed once per request. The prefix cache chains this request's
+        radix root on it: decoder K/V depends on the frames through
+        cross-attention, so identical token prefixes under different
+        frames must never share pages — and under *identical* frames they
+        safely can (sha256 over the exact frame bytes: no float tolerance,
+        bit-equality or nothing)."""
+        if self._frames_digest is None:
+            assert self.frames is not None
+            self._frames_digest = hashlib.sha256(
+                np.ascontiguousarray(self.frames).tobytes()).hexdigest()
+        return self._frames_digest
 
     @property
     def truncated(self) -> bool:
@@ -478,15 +580,15 @@ class Server:
         ``ServerConfig`` — but cannot be mixed with an explicit
         ``config``."""
         if legacy:
-            if config is not None:
-                raise TypeError(
-                    "pass either a ServerConfig or legacy flat kwargs, "
-                    f"not both (got config= and {sorted(legacy)})")
-            warnings.warn(
+            _migrate_legacy_kwarg(
                 "flat Server(...) kwargs are deprecated; pass "
                 "Server(params, cfg, ServerConfig(...)) — scheduler knobs "
                 "nest under ServerConfig(scheduler=SchedulerConfig(...))",
-                DeprecationWarning, stacklevel=2)
+                conflict=("pass either a ServerConfig or legacy flat "
+                          f"kwargs, not both (got config= and "
+                          f"{sorted(legacy)})")
+                if config is not None else None,
+                stacklevel=3)
             config = _config_from_legacy(legacy)
         if config is None:
             config = ServerConfig()
@@ -548,8 +650,42 @@ class Server:
         self.pages_per_slot = math.ceil(max_seq / page_size)
         self._cross_pp = (kvc.pages_needed(cfg.encoder_seq, page_size)
                           if self._encdec else 0)
-        self._decode = functools.partial(_decode_step_jit, cfg=cfg,
-                                         a_fmt=a_fmt)
+
+        # ---- device mesh (MeshPlan) --------------------------------------
+        # total == 1 (or mesh=None) never builds a Mesh: the engine runs
+        # today's exact single-device code path, bit-for-bit
+        self._mesh = None
+        self._heads_sharding = None
+        self._pool_shardings = None
+        plan = config.mesh
+        if plan is not None and plan.total > 1:
+            if self._encdec or self._hybrid or cfg.ssm is not None or any(
+                    seg.mixer not in ("gqa", "mla")
+                    for seg in segments_for(cfg)):
+                raise ValueError(
+                    "MeshPlan(total>1) serves pure page families only "
+                    "(GQA/MLA decoders); enc-dec cross pages and recurrent "
+                    "state slabs are single-device")
+            if cfg.n_heads % plan.model:
+                raise ValueError(
+                    f"n_heads={cfg.n_heads} must be divisible by "
+                    f"MeshPlan.model={plan.model} (decode attention "
+                    "shards by head)")
+            if any(seg.mixer == "gqa" for seg in segments_for(cfg)) \
+                    and cfg.n_kv_heads % plan.model:
+                raise ValueError(
+                    f"n_kv_heads={cfg.n_kv_heads} must be divisible by "
+                    f"MeshPlan.model={plan.model} (KV pages and their "
+                    "scales co-shard by KV head)")
+            self._mesh = plan.build()
+            self._heads_sharding = NamedSharding(
+                self._mesh, P(None, None, "model", None))
+        if self._mesh is None:
+            self._decode = functools.partial(_decode_step_jit, cfg=cfg,
+                                             a_fmt=a_fmt)
+        # mesh > 1: the per-server jit of the SAME trace function is
+        # installed by _shard_state() once the pools exist (it pins the
+        # cache outputs to the canonical pool shardings)
 
         # ---- pools: one unit per (path into the cache tree, kind) --------
         # every unit's leaves are (lead, pool_size + 1, ...): lead = stacked
@@ -565,9 +701,12 @@ class Server:
                                             else 0))
         # mixed-precision frozen pages exist only where the prefix cache
         # does: the FP4 region is written exclusively by the freeze-time
-        # transcode, so a family that can never freeze a page (enc-dec,
-        # recurrent/hybrid state, prefix_cache=False) has no use for it
-        supports_prefix = (prefix_cache and not self._encdec
+        # transcode, so a family that can never freeze a page (recurrent/
+        # hybrid state, prefix_cache=False) has no use for it. Enc-dec
+        # decoders DO freeze pages: their radix chains hang off a
+        # per-frames-digest root (Request.frames_digest), so sharing is
+        # conditioned on the encoder input, not just the token prefix
+        supports_prefix = (prefix_cache
                            and not self._hybrid and cfg.ssm is None
                            and all(seg.mixer in ("gqa", "mla")
                                    for seg in segments_for(cfg)))
@@ -656,6 +795,8 @@ class Server:
         # recurrent state cannot mask pad tokens out of its carry, so
         # slab-holding families stream exact chunk lengths instead
         self._bucket_prefill = not self._has_slabs
+        if self._mesh is not None:
+            self._shard_state(cfg, a_fmt)
 
         self.free_pages: List[int] = list(range(self._n_pages))
         # frozen-region allocator (mixed-precision pools only): frozen
@@ -680,8 +821,8 @@ class Server:
         self.slot_shared: List[int] = [0] * slots
         self._prefix: Optional[kvc.PrefixCache] = (
             kvc.PrefixCache(page_size)
-            if (prefix_cache and self._has_pages and not self._has_slabs
-                and not self._encdec) else None)
+            if (prefix_cache and self._has_pages and not self._has_slabs)
+            else None)
         self.page_table = np.full(
             (slots, max(1, self.pages_per_slot if self._has_pages else 1)),
             self._null_page, np.int32)
@@ -734,6 +875,98 @@ class Server:
         for p in path[:-1]:
             node = node[p]
         node[path[-1]] = value
+
+    # -- mesh placement --------------------------------------------------------
+    def _shard_state(self, cfg, a_fmt):
+        """Place the engine's device state on the mesh and install the
+        per-server decode jit. Params follow ``serve_rules`` (heads/ffn/
+        vocab TP over 'model', experts EP over the whole mesh); every pool
+        leaf follows its per-mesh-axis layout from ``serve_pool_pspecs``
+        (GQA codes + shifts sharded by KV head, smax and MLA latents
+        replicated). The recorded sharding tree doubles as the decode
+        jit's cache ``out_shardings`` — placement is pinned, so the step
+        compiles exactly once per input signature (fixed trace) — and as
+        the re-pin target after host-driven pool writes."""
+        from repro.launch import sharding as shardlib
+
+        mesh = self._mesh
+        self.params = jax.device_put(
+            self.params,
+            shardlib.serve_param_shardings(cfg, self.params, mesh))
+        self._pool_shardings = [
+            {key: {name: NamedSharding(
+                mesh, shardlib.serve_pool_pspecs(pool, mesh)[name])
+                for name in pool}
+             for key, pool in seg_pools.items()}
+            for seg_pools in self.pools]
+        self.pools = jax.tree.map(
+            lambda leaf, s: jax.device_put(leaf, s),
+            self.pools, self._pool_shardings)
+        repl = NamedSharding(mesh, P())
+        self._decode = functools.partial(
+            jax.jit(_decode_step, static_argnames=("cfg", "a_fmt"),
+                    out_shardings=(repl, repl, self._pool_shardings)),
+            cfg=cfg, a_fmt=a_fmt)
+
+    def _pin_pools(self):
+        """Re-place every pool leaf on its canonical mesh sharding after a
+        host-driven scatter (spill restore, quarantine scrub, freeze-time
+        transcode): eager ``.at[].set`` updates follow their operands, so
+        this keeps the layout byte-identical to what the decode jit's
+        ``out_shardings`` pin — a no-op when already placed, and a no-op
+        entirely off-mesh."""
+        if self._mesh is None:
+            return
+        self.pools = jax.tree.map(
+            lambda leaf, s: jax.device_put(leaf, s),
+            self.pools, self._pool_shardings)
+
+    def shard_residency(self) -> Dict[str, int]:
+        """Resident pool bytes per device — the per-shard page residency
+        the sharded serving bench and ``examples/serve_w4a8.py --mesh``
+        report. Off-mesh this is the single default device's total."""
+        per: Dict[str, int] = {}
+        for path, _ in self._units:
+            for leaf in self._unit(path).values():
+                shards = getattr(leaf, "addressable_shards", None)
+                if shards is None:  # non-jax leaf (tests with np stubs)
+                    continue
+                for sh in shards:
+                    key = str(sh.device)
+                    per[key] = per.get(key, 0) + int(sh.data.nbytes)
+        return dict(sorted(per.items()))
+
+    @contextlib.contextmanager
+    def _trace_scope(self):
+        """Every engine trace (encoder run, prefill chunk, decode step)
+        enters through here: the Server's kernel backend, plus — on a
+        mesh — the trace-time sharding globals: the decode-attention
+        shard_map mesh (kernels.ops), the expert-parallel MoE decode impl
+        (models.moe_a2a) and the head-sharding hint (models.layers). All
+        are restored on exit, so side-by-side servers (or a train step in
+        the same process) never see another engine's placement."""
+        with _backend_scope(self.kernel_backend):
+            if self._mesh is None:
+                yield
+                return
+            from repro.kernels import ops as _kops
+            from repro.models import layers as _layers
+            from repro.models import moe_a2a as _moe
+
+            prev_mesh = _kops.get_decode_mesh()
+            prev_impl = _moe.get_moe_impl()
+            prev_res = _layers._RESIDUAL_SHARDING[0]
+            prev_heads = _layers._HEADS_SHARDING[0]
+            _kops.set_decode_mesh(self._mesh)
+            if self.cfg.moe is not None:
+                _moe.set_moe_impl("ep_decode", self._mesh)
+            _layers.set_residual_sharding(prev_res, self._heads_sharding)
+            try:
+                yield
+            finally:
+                _kops.set_decode_mesh(prev_mesh)
+                _moe.set_moe_impl(*prev_impl)
+                _layers.set_residual_sharding(prev_res, prev_heads)
 
     # -- page accounting -------------------------------------------------------
     def _worst_case_pages(self, req: Request) -> int:
@@ -813,6 +1046,18 @@ class Server:
         counted in ``_free_capacity`` to begin with, so they charge 0."""
         return sum(1 for pid in pids
                    if pid < self._n_pages and self.page_refs[pid] == 0)
+
+    def _prefix_root(self, req: Request) -> int:
+        """Radix-chain root for this request's prefix walks/inserts.
+        Pure-token families share the global root; enc-dec requests chain
+        off a per-frames-digest root node (decoder K/V depends on the
+        encoder frames through cross-attention, so a token prefix is only
+        shareable *under the same frames* — different frames get disjoint
+        chains by construction, collision-safe with zero probability
+        argument: the root node id differs)."""
+        if not self._encdec:
+            return kvc._PREFIX_ROOT
+        return self._prefix.root_for(req.frames_digest())
 
     def _map_shared(self, slot: int, pids: List[int]):
         """Map content-shared prefix pages into an empty slot (refcount++;
@@ -993,8 +1238,9 @@ class Server:
             shared_pids: List[int] = []
             if spill.shared_pages:
                 ctx = list(req.prompt) + list(req.out[:-1])
-                shared_pids = self._prefix.walk(ctx,
-                                                max_pages=spill.shared_pages)
+                shared_pids = self._prefix.walk(
+                    ctx, max_pages=spill.shared_pages,
+                    root=self._prefix_root(req))
                 if len(shared_pids) < spill.shared_pages:
                     # part of the shared prefix was reclaimed while this
                     # request sat spilled: the private payload no longer
@@ -1042,8 +1288,9 @@ class Server:
             # the last context token always streams through the prefill
             # (its logits seed decode), so cap the walk one token short —
             # this also keeps the boundary page private by construction
-            hits = self._prefix.walk(ctx,
-                                     max_pages=(ctx_len - 1) // self.page_size)
+            hits = self._prefix.walk(
+                ctx, max_pages=(ctx_len - 1) // self.page_size,
+                root=self._prefix_root(req))
         need = 0
         if self._has_pages:
             free -= self._parked_among(hits)  # mapping a parked hit uses it
@@ -1117,7 +1364,7 @@ class Server:
         if self._encdec:
             frames = jnp.asarray(req.frames, jnp.float32)[None]
             table = jnp.asarray(self.cross_table[slot:slot + 1])
-            with _backend_scope(self.kernel_backend):
+            with self._trace_scope():
                 self.pools = _encode_cross_jit(self.params, frames,
                                                self.pools, table,
                                                cfg=self.cfg, a_fmt=self.a_fmt)
@@ -1167,7 +1414,7 @@ class Server:
             state = self._state_for(slice(slot, slot + 1),
                                     np.asarray([pos], np.int32), chunk_len)
             state = state._replace(page_table=jnp.asarray(table))
-            with _backend_scope(self.kernel_backend):
+            with self._trace_scope():
                 nxt, row_ok, pools = self._decode(
                     self.params, self.pools, jnp.asarray([toks], jnp.int32),
                     state, self._no_poison1, samp1)
@@ -1223,7 +1470,8 @@ class Server:
         own = self.slot_pages[slot]
         if not self._mixed:
             canon = self._prefix.insert(req.prompt[:n_full * page],
-                                        own[:n_full])
+                                        own[:n_full],
+                                        root=self._prefix_root(req))
             for i in range(shared, n_full):
                 if canon[i] != own[i]:  # duplicate content: adopt canonical
                     dup = own[i]
@@ -1236,7 +1484,8 @@ class Server:
             self.slot_shared[slot] = n_full
             return
         # mixed: every registered page lives in the packed FP4 region
-        canon = self._prefix.walk(req.prompt, max_pages=n_full)
+        canon = self._prefix.walk(req.prompt, max_pages=n_full,
+                                  root=self._prefix_root(req))
         end = shared
         for i in range(shared, n_full):
             src = own[i]
@@ -1259,8 +1508,10 @@ class Server:
             self.page_table[slot, i] = fid
             self._release_page(src)  # the FP8 source, refcount 1 -> free
             end = i + 1
+        self._pin_pools()  # freeze-time transcodes wrote the fz region
         if end > shared:
-            self._prefix.insert(req.prompt[:end * page], own[:end])
+            self._prefix.insert(req.prompt[:end * page], own[:end],
+                                root=self._prefix_root(req))
         self.slot_shared[slot] = end
 
     # -- preemption by page steal ----------------------------------------------
@@ -1406,6 +1657,7 @@ class Server:
             for name, arr in part.items():
                 pool[name] = pool[name].at[:, ids].set(jnp.asarray(arr))
             self._set_unit(path, pool)
+        self._pin_pools()  # host scatter -> back onto the canonical layout
         self.lengths[slot] = spill.ctx_len
         # RNG continuity: the spill carries the request's complete sampling
         # state (seed + emitted count). The key for the next draw is
@@ -1539,6 +1791,7 @@ class Server:
                     continue
                 pool[name] = pool[name].at[:, ids].set(0)
             self._set_unit(path, pool)
+        self._pin_pools()  # host scatter -> back onto the canonical layout
 
     def _fail_slot(self, slot: int, req: Request, error: str,
                    scrub_null: bool = False):
@@ -1645,7 +1898,7 @@ class Server:
         poison = (jnp.asarray(pmask) if pmask is not None and pmask.any()
                   else self._no_poison)
         state = self._state_for(slice(None), self.lengths)
-        with _backend_scope(self.kernel_backend):
+        with self._trace_scope():
             nxt_dev, row_ok, self.pools = self._decode(
                 self.params, self.pools, jnp.asarray(tok), state, poison,
                 smp.as_tuple(self._samp))

@@ -539,10 +539,55 @@ class TestServerEncDec:
                      ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
                                   page_size=8, a_fmt=None))
         # decoder K/V depends on the encoder frames, not just the token
-        # prefix: content-addressing by token ids alone would be wrong
-        assert srv._prefix is None
+        # prefix — the prefix cache stays ON (radix chains hang off a
+        # per-frames-digest root, see test_encdec_prefix_cache), but a
+        # request without frames still fails fast at submit
+        assert srv._prefix is not None
         with pytest.raises(ValueError, match="frames"):
             srv.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+
+    def test_encdec_prefix_cache_parity_and_collision_safety(
+            self, trained_tiny_encdec):
+        """Enc-dec prefix sharing keys pages on (frames digest, token
+        prefix): two requests with the same prompt and the SAME frames hit
+        the cache (second serve pays no prefill for the shared pages) and
+        stay token-identical to a cold run; the same prompt under
+        DIFFERENT frames must never share pages — decoder K/V depends on
+        the frames through cross-attention — and each still decodes
+        exactly its own cold-run tokens."""
+        cfg, params = trained_tiny_encdec
+        rng = np.random.default_rng(9)
+        prompt = rng.integers(1, cfg.vocab_size, size=17).tolist()
+        f_a = rng.normal(size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+        f_b = rng.normal(size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+
+        def cold(frames):
+            out, _ = self._serve(params, cfg, "fp8_e4m3", [prompt], [frames])
+            return out[0]
+
+        ref_a, ref_b = cold(f_a), cold(f_b)
+        # digests are bit-exact content hashes: distinct frames -> distinct
+        # radix roots (collision safety does not depend on output deltas)
+        assert (Request(rid=98, prompt=[1], frames=f_a).frames_digest()
+                != Request(rid=97, prompt=[1], frames=f_b).frames_digest())
+
+        # same frames twice, then the same prompt under different frames
+        srv = Server(params, cfg,
+                     ServerConfig(slots=1, max_seq=64, kv_fmt="fp8_e4m3",
+                                  page_size=8, a_fmt=None))
+        outs = {}
+        for rid, frames in ((0, f_a), (1, f_a), (2, f_b)):
+            r = Request(rid=rid, prompt=list(prompt), max_new=6, frames=frames)
+            srv.submit(r)
+            srv.run_until_drained()
+            outs[rid] = list(r.out)
+        assert outs[0] == ref_a and outs[1] == ref_a  # parity + hit path
+        assert outs[2] == ref_b  # no cross-frames aliasing
+        # the repeat under identical frames mapped the frozen pages
+        # ((17 - 1) // 8 = 2 full pages); the f_b request walked a disjoint
+        # radix chain and hit nothing
+        assert srv.stats["prefix_hit_pages"] == 2
+        assert srv.audit()["violations"] == 0
 
     def test_cross_pages_survive_steal_resume(self, trained_tiny_encdec):
         """Preemption spills cross pages with the rest of the payload:

@@ -293,6 +293,73 @@ class TestServerConfigAPI:
                                              page_size=8, a_fmt=None))
 
 
+def _shim_kv_fmt(mode):
+    from repro.runtime.kv_cache import CachePolicy
+
+    if mode == "legacy":
+        return ServerConfig(kv_fmt="fp8_e4m3")
+    if mode == "conflict":
+        return ServerConfig(kv_fmt="fp8_e4m3",
+                            cache=CachePolicy(active_fmt="fp8_e4m3"))
+    return ServerConfig(cache=CachePolicy(active_fmt="fp8_e4m3"))
+
+
+def _shim_flat_kwargs(mode, params, cfg):
+    if mode == "legacy":
+        return Server(params, cfg, slots=1, max_seq=32, page_size=8,
+                      a_fmt=None)
+    if mode == "conflict":
+        return Server(params, cfg, ServerConfig(), slots=2)
+    return Server(params, cfg, ServerConfig(slots=1, max_seq=32,
+                                            page_size=8, a_fmt=None))
+
+
+class TestLegacyShimMatrix:
+    """Both deprecation shims (kv_fmt -> CachePolicy, flat Server kwargs
+    -> ServerConfig) route through the one _migrate_legacy_kwarg helper;
+    this matrix pins the shared contract: legacy spelling warns (and maps),
+    legacy + modern together is a TypeError naming 'not both', the modern
+    spelling alone is silent."""
+
+    @pytest.fixture(scope="class")
+    def ctx(self):
+        from conftest import tiny_lm_cfg
+        from repro import models
+
+        cfg = tiny_lm_cfg()
+        return models.init_params(cfg, jax.random.PRNGKey(0)), cfg
+
+    def _call(self, shim, mode, ctx):
+        if shim == "kv_fmt":
+            return _shim_kv_fmt(mode)
+        return _shim_flat_kwargs(mode, *ctx)
+
+    @pytest.mark.parametrize("shim,match", [("kv_fmt", "kv_fmt"),
+                                            ("flat", "ServerConfig")])
+    def test_legacy_spelling_warns(self, ctx, shim, match):
+        with pytest.warns(DeprecationWarning, match=match):
+            self._call(shim, "legacy", ctx)
+
+    @pytest.mark.parametrize("shim", ["kv_fmt", "flat"])
+    def test_legacy_plus_modern_is_type_error(self, ctx, shim):
+        with pytest.raises(TypeError, match="not both"):
+            self._call(shim, "conflict", ctx)
+
+    @pytest.mark.parametrize("shim", ["kv_fmt", "flat"])
+    def test_modern_spelling_is_silent(self, ctx, shim):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            self._call(shim, "modern", ctx)
+
+    def test_conflict_leaves_no_partial_state(self, ctx):
+        # the conflict raises from inside _migrate_legacy_kwarg before any
+        # engine state exists; a retry with the modern spelling succeeds
+        with pytest.raises(TypeError):
+            self._call("flat", "conflict", ctx)
+        srv = self._call("flat", "modern", ctx)
+        assert srv.config.slots == 1
+
+
 class TestRequestResultAPI:
     def test_drained_results_are_frozen_snapshots(self, trained_tiny):
         cfg, params = trained_tiny

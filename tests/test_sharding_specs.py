@@ -1,0 +1,226 @@
+"""Direct unit tests for launch/sharding.py's serving-facing spec
+builders: serve_rules expert placement, _cache_leaf_spec heuristics
+(1-tuple batch axis, model-only mesh, kv-head and sequence dims),
+serve_pool_pspecs / _pool_leaf_spec per paged-pool-leaf layouts, and
+serve_param_shardings on a real 1-device mesh.
+
+The spec builders read only ``mesh.shape``, so stub meshes stand in for
+2- and 8-device topologies without simulated devices.
+"""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from conftest import tiny_lm_cfg
+
+from repro import models
+from repro.configs import get_smoke
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import (_cache_leaf_spec, _pool_leaf_spec,
+                                   cache_pspecs, serve_param_shardings,
+                                   serve_pool_pspecs, serve_rules)
+from repro.models.params import DEFAULT_RULES
+
+
+class _StubMesh:
+    """Only ``.shape`` (an ordered axis->size dict) is read by the spec
+    builders under test."""
+
+    def __init__(self, **shape):
+        self.shape = dict(shape)
+
+
+MESH_1 = _StubMesh(data=1, model=1)
+MESH_2 = _StubMesh(data=1, model=2)
+MESH_8 = _StubMesh(data=4, model=2)
+MESH_MODEL_ONLY = _StubMesh(model=2)
+
+
+class TestServeRules:
+    def test_dense_config_keeps_default_rules(self):
+        for mesh in (MESH_1, MESH_2, MESH_8):
+            assert serve_rules(tiny_lm_cfg(), mesh) == DEFAULT_RULES
+
+    def test_moe_experts_ep_whole_mesh_when_divisible(self):
+        cfg = get_smoke("olmoe-1b-7b")  # 8 experts
+        assert serve_rules(cfg, MESH_2)["expert"] == ("data", "model")
+        assert serve_rules(cfg, MESH_8)["expert"] == ("data", "model")
+        pod = _StubMesh(pod=2, data=2, model=2)
+        assert serve_rules(cfg, pod)["expert"] == ("pod", "data", "model")
+
+    def test_moe_experts_fall_back_to_data_model_subset(self):
+        cfg = get_smoke("olmoe-1b-7b")  # 8 % 16 != 0, 8 % (2*4) == 0
+        mesh = _StubMesh(pod=2, data=2, model=4)
+        assert serve_rules(cfg, mesh)["expert"] == ("data", "model")
+
+    def test_moe_experts_replicate_when_indivisible(self):
+        cfg = get_smoke("olmoe-1b-7b")  # 8 % 3 != 0
+        mesh = _StubMesh(data=1, model=3)
+        assert serve_rules(cfg, mesh)["expert"] == DEFAULT_RULES["expert"]
+
+
+class TestCacheLeafSpec:
+    def test_batch_dim_single_axis_is_bare(self):
+        # one dp axis goes in bare ("data"), not as a 1-tuple (("data",)):
+        # downstream introspection compares entries to axis names
+        spec = _cache_leaf_spec((2, 4, 128, 2, 16), MESH_8)
+        assert spec[1] == "data"
+        assert not isinstance(spec[1], tuple)
+
+    def test_kv_head_dim_5d_shards_model(self):
+        spec = _cache_leaf_spec((2, 4, 128, 2, 16), MESH_8)
+        assert spec == P(None, "data", None, "model", None)
+
+    def test_model_only_mesh_leaves_batch_replicated(self):
+        spec = _cache_leaf_spec((2, 4, 128, 2, 16), MESH_MODEL_ONLY)
+        assert spec == P(None, None, None, "model", None)
+
+    def test_indivisible_dims_replicate(self):
+        # batch 3 % 4 != 0, kv-heads 3 % 2 != 0, dim2 127 % 2 != 0
+        spec = _cache_leaf_spec((2, 3, 127, 3, 16), MESH_8)
+        assert spec == P(None, None, None, None, None)
+
+    def test_ssm_state_heads_heuristic(self):
+        # 5D with an indivisible dim3: small-ish dim2 (<= 1024) is treated
+        # as the ssm head dim and shards over model
+        spec = _cache_leaf_spec((2, 4, 128, 3, 16), MESH_8)
+        assert spec == P(None, "data", "model", None, None)
+
+    def test_long_sequence_takes_remaining_axes(self):
+        # 3D (L, B, S): batch takes data, seq >= 4096 takes model
+        spec = _cache_leaf_spec((2, 4, 8192), MESH_8)
+        assert spec == P(None, "data", "model")
+
+    def test_cache_pspecs_maps_tree(self):
+        class _S:  # shape-only stand-in (jax.ShapeDtypeStruct-alike)
+            def __init__(self, shape):
+                self.shape = shape
+
+        tree = {"kv": _S((2, 4, 128, 2, 16)), "x": _S((2, 3, 7))}
+        specs = cache_pspecs(tree, MESH_8)
+        assert specs["kv"] == P(None, "data", None, "model", None)
+        assert specs["x"] == P(None, None, None)
+
+
+class TestPoolLeafSpec:
+    """Paged-pool leaves (runtime/kv_cache.py layouts): GQA codes shard
+    the KV-head dim, *_shift scales co-shard, everything else replicates.
+    """
+
+    GQA_POOL = {  # (L, P+1, page, KV, hd) + scale/marker leaves
+        "k": np.zeros((2, 9, 8, 2, 16), np.uint8),
+        "v": np.zeros((2, 9, 8, 2, 16), np.uint8),
+        "k_shift": np.zeros((2, 9, 2), np.int32),
+        "v_shift": np.zeros((2, 9, 2), np.int32),
+        "k_smax": np.zeros((2, 9), np.float32),
+        "v_smax": np.zeros((2, 9), np.float32),
+    }
+    MLA_POOL = {  # latent (L, P+1, page, r): no head axis
+        "ckv": np.zeros((2, 9, 8, 16), np.uint8),
+        "krope": np.zeros((2, 9, 8, 8), np.uint8),
+        "ckv_shift": np.zeros((2, 9, 1), np.int32),
+        "ckv_smax": np.zeros((2, 9), np.float32),
+    }
+
+    def test_gqa_codes_and_scales_co_shard(self):
+        specs = serve_pool_pspecs(self.GQA_POOL, MESH_2)
+        assert specs["k"] == P(None, None, None, "model", None)
+        assert specs["v"] == P(None, None, None, "model", None)
+        assert specs["k_shift"] == P(None, None, "model")
+        assert specs["v_shift"] == P(None, None, "model")
+        # one scalar per page, shared by every head shard: replicated
+        assert not any(a is not None for a in specs["k_smax"])
+        assert not any(a is not None for a in specs["v_smax"])
+
+    def test_mla_latents_replicate(self):
+        for mesh in (MESH_2, MESH_8):
+            specs = serve_pool_pspecs(self.MLA_POOL, mesh)
+            assert all(not any(a is not None for a in s)
+                       for s in specs.values())
+
+    def test_mesh_1_replicates_everything(self):
+        specs = serve_pool_pspecs(self.GQA_POOL, MESH_1)
+        assert all(not any(a is not None for a in s)
+                   for s in specs.values())
+
+    def test_indivisible_kv_heads_replicate(self):
+        mesh = _StubMesh(data=1, model=4)  # 2 kv heads % 4 != 0
+        specs = serve_pool_pspecs(self.GQA_POOL, mesh)
+        assert not any(a is not None for a in specs["k"])
+        assert not any(a is not None for a in specs["k_shift"])
+
+    def test_zero_size_markers_replicate(self):
+        pool = dict(self.GQA_POOL,
+                    k_fz=np.zeros((2, 0, 8, 2, 16), np.uint8),
+                    _fp4=np.zeros((0,), np.uint8))
+        specs = serve_pool_pspecs(pool, MESH_2)
+        assert not any(a is not None for a in specs["k_fz"])
+        assert not any(a is not None for a in specs["_fp4"])
+
+    def test_frozen_region_mirrors_active_layout(self):
+        pool = {"k_fz": np.zeros((2, 4, 8, 2, 16), np.uint8),
+                "k_fz_shift": np.zeros((2, 4, 2), np.int32)}
+        specs = serve_pool_pspecs(pool, MESH_2)
+        assert specs["k_fz"] == P(None, None, None, "model", None)
+        assert specs["k_fz_shift"] == P(None, None, "model")
+
+
+class TestServeParamShardings:
+    def test_one_device_mesh_full_tree(self):
+        """On a real 1-device mesh every leaf gets a NamedSharding and
+        device_put round-trips the whole tree (the divisibility fallback
+        can never fire at size 1)."""
+        cfg = tiny_lm_cfg()
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_mesh((1, 1), ("data", "model"))
+        sh = serve_param_shardings(cfg, params, mesh)
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+        assert len(flat_p) == len(flat_s)
+        assert all(isinstance(s, NamedSharding) for s in flat_s)
+        placed = jax.device_put(params, sh)
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(placed)[0]), np.asarray(flat_p[0]))
+
+    def test_moe_expert_stack_spec(self):
+        """MoE expert stacks carry the serve_rules EP axes on dim0 (the
+        spec is mesh-shape-arithmetic, so a 1-device mesh would replicate;
+        assert on the generated pspec via a stub-shaped real mesh)."""
+        cfg = get_smoke("olmoe-1b-7b")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_mesh((1, 1), ("data", "model"))
+        sh = serve_param_shardings(cfg, params, mesh)
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+        hits = [s for path, s in flat if any("wu" in str(k) for k in path)]
+        assert hits, "no MoE wu leaf found in the sharding tree"
+        for s in hits:
+            # def leaves stack layers at dim0: (L, E, ff, d) — the expert
+            # dim (1) carries the serve_rules EP axes, layers replicate
+            assert s.spec[0] is None
+            assert s.spec[1] == ("data", "model")
+
+
+def test_pool_leaf_spec_matches_engine_pools():
+    """End-to-end: specs generated for a REAL Server pool (tiny GQA,
+    fp8) pick the head dim the engine actually lays out."""
+    from repro.runtime.serve import Request, Server, ServerConfig
+
+    cfg = tiny_lm_cfg()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Server(params, cfg,
+                 ServerConfig(slots=1, max_seq=32, kv_fmt="fp8_e4m3",
+                              page_size=8, a_fmt=None))
+    pool = srv._unit((0, "kv"))
+    specs = serve_pool_pspecs(pool, MESH_2)
+    for name, leaf in pool.items():
+        spec = specs[name]
+        if leaf.ndim == 5 and leaf.size:
+            assert leaf.shape[3] == cfg.n_kv_heads
+            assert spec == P(None, None, None, "model", None), name
+        sharded = [a for a in spec if a is not None]
+        assert sharded in ([], ["model"]), name
