@@ -639,6 +639,59 @@ def serving_bench(tiny: bool = False):
           f"{sp['tps']:7.1f} tok/s | {sampled_ratio:.2f}x greedy")
     assert sampled_ratio >= 0.9, sampled_ratio
 
+    # ---- mixed-engine leg: long prompts, short decodes --------------------
+    # The chunked-prefill piggyback's target workload: prompts several
+    # pages long, a handful of decode tokens each. The alternating engine
+    # burns whole programs on prefill chunks while every decode row
+    # waits; the mixed engine carries the chunk on the decode step, so
+    # its decoded-tokens-per-program-slot (``Server.engine_utilization``)
+    # must be strictly higher — the CI-gated claim
+    # (``serving/mixed/engine_utilization`` >
+    # ``serving/alternating/engine_utilization``). Greedy tokens are
+    # asserted bit-identical: the fused step changes scheduling, never
+    # numerics.
+    mprompts = [rng.integers(1, cfg.vocab_size, size=int(t)).tolist()
+                for t in rng.integers(20, 33, size=(8 if tiny else 12))]
+
+    def run_engine(engine):
+        srv = Server(params, cfg,
+                     ServerConfig(slots=slots, max_seq=max_seq,
+                                  cache=CachePolicy(active_fmt="fp8_e4m3"),
+                                  page_size=page, a_fmt=None,
+                                  scheduler=SchedulerConfig(
+                                      policy="token_budget", engine=engine,
+                                      prefill_token_budget=2 * page)))
+        assert srv.engine == engine
+        reqs = [Request(rid=i, prompt=list(p), max_new=4)
+                for i, p in enumerate(mprompts)]
+        for r in reqs:
+            srv.submit(r)
+        t0 = time.perf_counter()
+        done = srv.run_until_drained()
+        dt = time.perf_counter() - t0
+        assert len(done) == len(reqs)
+        toks = sum(len(r.out) for r in reqs)
+        return {"sec": dt, "tps": toks / dt,
+                "eu": srv.engine_utilization(),
+                "programs": srv.stats["programs"],
+                "prefill_tokens": srv.stats["prefill_tokens"],
+                "outs": {r.rid: tuple(r.out) for r in reqs}}
+
+    run_engine("alternating")  # warmup: dedicated chunk + decode programs
+    run_engine("mixed")        # warmup: the fused chunk+decode family
+    ea, eb = run_engine("alternating"), run_engine("alternating")
+    alt = ea if ea["tps"] >= eb["tps"] else eb
+    ma, mb = run_engine("mixed"), run_engine("mixed")
+    mx = ma if ma["tps"] >= mb["tps"] else mb
+    assert mx["outs"] == alt["outs"], \
+        "mixed engine must produce bit-identical greedy tokens"
+    assert mx["prefill_tokens"] == alt["prefill_tokens"]
+    for name, r in (("alternating", alt), ("mixed", mx)):
+        print(f"{'engine_' + name:14s} {r['sec']:.2f}s = {r['tps']:7.1f} "
+              f"tok/s | {r['programs']} programs | engine util "
+              f"{r['eu']:.3f}")
+    assert mx["eu"] > alt["eu"], (mx["eu"], alt["eu"])
+
     # ---- Poisson-arrival leg: TTFT / inter-token latency ------------------
     # The drained legs measure throughput with every request queued up
     # front; real traffic arrives over time and cares about time-to-first-
@@ -646,14 +699,16 @@ def serving_bench(tiny: bool = False):
     # scheduler through the asyncio front-end with exponential
     # inter-arrival gaps (deterministic seed), and every token's host
     # timestamp comes from the engine's decode loop (RequestResult
-    # token_times -> ttft/itl). p50/p95 land in BENCH_serving.json; CI
-    # gates presence, not values — wall-clock latency on a shared runner
-    # is not a stable regression signal, but the keys vanishing is.
+    # token_times -> ttft/itl). p50/p95 land in BENCH_serving.json for
+    # BOTH engines (``serving/poisson/*`` is the mixed default,
+    # ``serving/poisson_alternating/*`` the baseline); CI gates
+    # presence, not values — wall-clock latency on a shared runner is
+    # not a stable regression signal, but the keys vanishing is.
     import asyncio
 
     from repro.runtime.frontend import AsyncServer
 
-    def run_poisson():
+    def run_poisson(engine):
         starts = np.cumsum(np.random.default_rng(7).exponential(
             scale=0.01, size=n_req))
 
@@ -673,7 +728,8 @@ def serving_bench(tiny: bool = False):
                                       cache=CachePolicy(active_fmt="fp8_e4m3"), page_size=page,
                                       pool_pages=pool_pages, a_fmt=None,
                                       scheduler=SchedulerConfig(
-                                          policy="token_budget")))
+                                          policy="token_budget",
+                                          engine=engine)))
             front = AsyncServer(srv)
             t0 = time.perf_counter()
             results = await asyncio.gather(*[
@@ -693,12 +749,18 @@ def serving_bench(tiny: bool = False):
                 "itl_ms_p50": float(np.percentile(itl, 50)),
                 "itl_ms_p95": float(np.percentile(itl, 95))}
 
-    run_poisson()  # warmup: first async run pays any residual compiles
-    poa, pob = run_poisson(), run_poisson()
+    run_poisson("mixed")  # warmup: first async run pays residual compiles
+    poa, pob = run_poisson("mixed"), run_poisson("mixed")
     po = poa if poa["tps"] >= pob["tps"] else pob
-    print(f"{'poisson':14s} {po['sec']:.2f}s = {po['tps']:7.1f} tok/s | "
-          f"TTFT p50 {po['ttft_ms_p50']:.1f}ms p95 {po['ttft_ms_p95']:.1f}ms"
-          f" | ITL p50 {po['itl_ms_p50']:.1f}ms p95 {po['itl_ms_p95']:.1f}ms")
+    run_poisson("alternating")
+    ala, alb = run_poisson("alternating"), run_poisson("alternating")
+    poalt = ala if ala["tps"] >= alb["tps"] else alb
+    for name, r in (("poisson", po), ("poisson_alt", poalt)):
+        print(f"{name:14s} {r['sec']:.2f}s = {r['tps']:7.1f} tok/s | "
+              f"TTFT p50 {r['ttft_ms_p50']:.1f}ms "
+              f"p95 {r['ttft_ms_p95']:.1f}ms"
+              f" | ITL p50 {r['itl_ms_p50']:.1f}ms "
+              f"p95 {r['itl_ms_p95']:.1f}ms")
 
     payload = {
         "serving/tokens_per_sec/reserve": rv["tps"],
@@ -733,6 +795,17 @@ def serving_bench(tiny: bool = False):
         "serving/poisson/ttft_ms_p95": po["ttft_ms_p95"],
         "serving/poisson/itl_ms_p50": po["itl_ms_p50"],
         "serving/poisson/itl_ms_p95": po["itl_ms_p95"],
+        "serving/poisson_alternating/tokens_per_sec": poalt["tps"],
+        "serving/poisson_alternating/ttft_ms_p50": poalt["ttft_ms_p50"],
+        "serving/poisson_alternating/ttft_ms_p95": poalt["ttft_ms_p95"],
+        "serving/poisson_alternating/itl_ms_p50": poalt["itl_ms_p50"],
+        "serving/poisson_alternating/itl_ms_p95": poalt["itl_ms_p95"],
+        "serving/mixed/engine_utilization": mx["eu"],
+        "serving/alternating/engine_utilization": alt["eu"],
+        "serving/mixed/tokens_per_sec": mx["tps"],
+        "serving/alternating/tokens_per_sec": alt["tps"],
+        "serving/mixed/programs": float(mx["programs"]),
+        "serving/alternating/programs": float(alt["programs"]),
     }
     out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
     with open(out_path, "w") as f:
@@ -745,6 +818,8 @@ def serving_bench(tiny: bool = False):
         ("serving/prefix_cold", cold["sec"] * 1e6, cold["tps"]),
         ("serving/prefix_warm", warm["sec"] * 1e6, warm["tps"]),
         ("serving/prefix_warm_fp4", warm4["sec"] * 1e6, warm4["tps"]),
+        ("serving/engine_mixed", mx["sec"] * 1e6, mx["tps"]),
+        ("serving/engine_alternating", alt["sec"] * 1e6, alt["tps"]),
     ]
     # the paper-level claim this PR gates in CI: on-demand paging converts
     # FP8's bytes-per-token win into strictly more concurrent work

@@ -1,0 +1,161 @@
+"""Declared key schemas for the benchmark JSON snapshots.
+
+The bench scripts emit ``BENCH_serving.json`` / ``BENCH_kernels.json``
+as flat ``{key: float}`` dicts, and the CI gate steps read specific
+keys back out. A renamed or silently-dropped key used to fail only at
+whichever gate happened to read it (or worse, a presence-only gate kept
+passing while the metric vanished). This module is the single declared
+contract: every key each bench section emits, checked both ways —
+missing declared keys fail, undeclared stray keys fail, and every value
+must be a finite number.
+
+    python -m benchmarks.schema BENCH_serving.json serving
+    python -m benchmarks.schema BENCH_serving.json serving sharded
+    python -m benchmarks.schema BENCH_kernels.json kernels
+
+Sections name the bench entrypoints (``benchmarks.run --only <name>``)
+whose keys the file is expected to hold. ``sharded`` merges into the
+serving snapshot rather than owning a file, so the committed repo state
+validates as ``serving sharded`` while the serving-smoke CI job (which
+regenerates the file from scratch) validates as ``serving`` alone.
+Stdlib-only on purpose: the bench-schema CI job runs it without jax.
+"""
+import json
+import math
+import sys
+
+# serving_bench (benchmarks.run --only serving)
+SERVING_KEYS = frozenset({
+    "prefix_cache/hit_rate",
+    "prefix_cache/prefill_tokens_saved",
+    "serving/alternating/engine_utilization",
+    "serving/alternating/programs",
+    "serving/alternating/tokens_per_sec",
+    "serving/degraded/failed",
+    "serving/degraded/injected_faults",
+    "serving/degraded/spill_integrity_failures",
+    "serving/degraded/survivor_tps_ratio",
+    "serving/failed/clean",
+    "serving/fp4/bytes_per_token_ratio",
+    "serving/fp4/frozen_pages_transcoded",
+    "serving/fp4/greedy_agreement",
+    "serving/fp4/resident_tokens_ratio",
+    "serving/fp4/warm_tps",
+    "serving/mixed/engine_utilization",
+    "serving/mixed/programs",
+    "serving/mixed/tokens_per_sec",
+    "serving/poisson/itl_ms_p50",
+    "serving/poisson/itl_ms_p95",
+    "serving/poisson/tokens_per_sec",
+    "serving/poisson/ttft_ms_p50",
+    "serving/poisson/ttft_ms_p95",
+    "serving/poisson_alternating/itl_ms_p50",
+    "serving/poisson_alternating/itl_ms_p95",
+    "serving/poisson_alternating/tokens_per_sec",
+    "serving/poisson_alternating/ttft_ms_p50",
+    "serving/poisson_alternating/ttft_ms_p95",
+    "serving/preemptions/token_budget",
+    "serving/resumes/token_budget",
+    "serving/sampling/tps_ratio_vs_greedy",
+    "serving/steps/reserve",
+    "serving/steps/token_budget",
+    "serving/tokens_per_sec/prefix_cold",
+    "serving/tokens_per_sec/prefix_warm",
+    "serving/tokens_per_sec/reserve",
+    "serving/tokens_per_sec/sampled",
+    "serving/tokens_per_sec/token_budget",
+    "speedup/prefix_cache_tokens_per_sec",
+    "speedup/serving_tokens_per_sec",
+    "utilization/reserve_worst_case",
+    "utilization/token_budget",
+})
+
+# sharded_serving_bench (--only sharded); merged into BENCH_serving.json
+SHARDED_KEYS = frozenset({
+    "serving/sharded/devices",
+    "serving/sharded/greedy_agreement",
+    "serving/sharded/residency_devices",
+    "serving/sharded/residency_max_bytes",
+    "serving/sharded/residency_min_bytes",
+    "serving/sharded/tokens_per_sec",
+    "serving/sharded/tokens_per_sec_single",
+    "serving/sharded/tps_ratio_vs_single",
+})
+
+# kernel_microbench (--only kernels) -> BENCH_kernels.json
+KERNEL_KEYS = frozenset({
+    "kernel/act_quant_pallas_interp",
+    "kernel/act_quant_ref",
+    "kernel/mla_materialized_decode",
+    "kernel/mla_paged_decode",
+    "kernel/mono_decode_max_seq",
+    "kernel/paged_decode_attn_pallas_interp",
+    "kernel/paged_decode_attn_ref",
+    "kernel/paged_decode_true_ctx",
+    "kernel/w4a8_fused_decode64",
+    "kernel/w4a8_fused_lorc16",
+    "kernel/w4a8_fused_m256",
+    "kernel/w4a8_matmul_pallas_interp",
+    "kernel/w4a8_matmul_ref",
+    "kernel/w4a8_split_decode64",
+    "kernel/w4a8_split_lorc16",
+    "kernel/w4a8_split_m256",
+    "speedup/mla_paged_decode",
+    "speedup/paged_decode_true_ctx",
+    "speedup/w4a8_fused_decode64",
+    "speedup/w4a8_fused_lorc16",
+    "speedup/w4a8_fused_m256",
+})
+
+SECTIONS = {
+    "serving": SERVING_KEYS,
+    "sharded": SHARDED_KEYS,
+    "kernels": KERNEL_KEYS,
+}
+
+
+def validate(payload, sections):
+    """Return a list of violation strings (empty = the file conforms)."""
+    unknown = [s for s in sections if s not in SECTIONS]
+    if unknown:
+        return [f"unknown section(s) {unknown}; declared: "
+                f"{sorted(SECTIONS)}"]
+    declared = frozenset().union(*(SECTIONS[s] for s in sections))
+    got = set(payload)
+    bad = []
+    for k in sorted(declared - got):
+        bad.append(f"missing declared key: {k}")
+    for k in sorted(got - declared):
+        bad.append(f"undeclared key (add it to benchmarks/schema.py or "
+                   f"stop emitting it): {k}")
+    for k in sorted(got & declared):
+        v = payload[k]
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            bad.append(f"non-numeric value for {k}: {v!r}")
+        elif not math.isfinite(v):
+            bad.append(f"non-finite value for {k}: {v!r}")
+    return bad
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    path, sections = argv[0], argv[1:]
+    with open(path) as f:
+        payload = json.load(f)
+    bad = validate(payload, sections)
+    if bad:
+        print(f"{path} violates the declared bench schema "
+              f"({'+'.join(sections)}):", file=sys.stderr)
+        for line in bad:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"{path}: {len(payload)} keys conform to the declared "
+          f"{'+'.join(sections)} schema")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -181,6 +181,19 @@ def main():
                     help="admission policy: reserve-on-admit (worst-case "
                          "pages up front) or token-budget (prompt pages + "
                          "headroom, on-demand growth, page-steal preemption)")
+    ap.add_argument("--engine", default="mixed",
+                    choices=["mixed", "alternating"],
+                    help="engine step shape: 'mixed' piggybacks one "
+                         "request's next prefill chunk onto every decode "
+                         "step (one fused program, decode rows never "
+                         "stall); 'alternating' runs dedicated prefill "
+                         "and decode programs (the legacy baseline)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="max prompt tokens piggybacked per mixed step "
+                         "(rounded down to a page multiple; 0 = the "
+                         "prefill-chunk default). Smaller = smoother "
+                         "decode latency, larger = faster prompt "
+                         "ingestion")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax, the "
@@ -284,7 +297,11 @@ def main():
                                  pool_pages=args.pool_pages or None,
                                  prefix_cache=not args.no_prefix_cache,
                                  strict=False, audit_every=args.audit_every,
-                                 scheduler=SchedulerConfig(policy=args.scheduler),
+                                 scheduler=SchedulerConfig(
+                                     policy=args.scheduler,
+                                     engine=args.engine,
+                                     prefill_token_budget=(
+                                         args.prefill_token_budget or None)),
                                  mesh=mesh_plan),
                     faults=plan)
     frozen_note = (f" + frozen {args.frozen_kv_fmt}" if frozen_fmt else "")
@@ -332,6 +349,14 @@ def main():
     status = ", ".join(f"{n} {s}" for s, n in sorted(by_status.items()))
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in {dt:.1f}s "
           f"({steps} engine steps, backend={args.backend}; {status})")
+    st = server.stats
+    n_steps = max(st["steps"], 1)
+    print(f"engine={server.engine}: {st['prefill_tokens']} prefill + "
+          f"{st['decoded_tokens']} decode tokens across {st['programs']} "
+          f"jitted programs; per-step mix "
+          f"{st['prefill_tokens'] / n_steps:.1f} prefill / "
+          f"{st['decoded_tokens'] / n_steps:.1f} decode tokens, "
+          f"engine utilization {server.engine_utilization():.3f}")
     print(f"slot utilization {server.utilization():.3f}, "
           f"{server.stats['preemptions']} preemptions / "
           f"{server.stats['resumes']} resumes "

@@ -43,13 +43,16 @@ from repro.runtime.serve import (CachePolicy, SchedulerConfig, Server,
 async def stream_completion(host, port, name, payload):
     """POST /v1/completions with stream:true, print chunks as they land,
     return the token list. Pure stdlib: reads SSE lines off the socket."""
+    import time
+
     reader, writer = await asyncio.open_connection(host, port)
     body = json.dumps(payload).encode()
+    t_post = time.perf_counter()
     writer.write(b"POST /v1/completions HTTP/1.1\r\nHost: demo\r\n"
                  b"Content-Type: application/json\r\n"
                  + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
     await writer.drain()
-    toks, finish = [], None
+    toks, finish, ttft = [], None, None
     while True:
         line = (await reader.readline()).decode().rstrip("\r\n")
         if line == "data: [DONE]":
@@ -60,12 +63,16 @@ async def stream_completion(host, port, name, payload):
         if choice["finish_reason"] is not None:
             finish = choice["finish_reason"]
         elif choice.get("token") is not None:
+            if ttft is None:
+                ttft = time.perf_counter() - t_post
             toks.append(choice["token"])
             print(f"  [{name}] token #{choice['index_in_stream']}: "
                   f"{choice['token']}")
     writer.close()
     await writer.wait_closed()
-    print(f"  [{name}] done ({finish}): {toks}")
+    ttft_ms = f"{ttft * 1e3:.1f} ms" if ttft is not None else "n/a"
+    print(f"  [{name}] done ({finish}), time-to-first-token {ttft_ms}: "
+          f"{toks}")
     return toks
 
 

@@ -145,7 +145,10 @@ def decode_step(params, cfg, tokens, caches, cache_index, a_fmt=None):
     (paged pool: per-row true lengths + page table — each row gets its own
     positions and length masks). A PagedState with ``chunk_len`` set is a
     bucketed streaming-prefill chunk: positions past chunk_len are pad, so
-    the logits row is the last *true* token, not the last row."""
+    the logits row is the last *true* token, not the last row. A PagedState
+    with ``prefill`` set is a *mixed* engine step — tokens is the fused
+    (1, slots + chunk) row and the logits come back (slots + 1, V): one row
+    per decode slot plus the chunk's last true token."""
     from repro.runtime.kv_cache import PagedState
 
     batch = {"tokens": tokens}
@@ -155,7 +158,11 @@ def decode_step(params, cfg, tokens, caches, cache_index, a_fmt=None):
         hidden, caches, _ = forward_hidden(
             params, cfg, batch, a_fmt=a_fmt, caches=caches, cache_index=cache_index
         )
-    if isinstance(cache_index, PagedState) and cache_index.chunk_len is not None:
+    if isinstance(cache_index, PagedState) and cache_index.prefill is not None:
+        nd = cache_index.lengths.shape[0]
+        h_pre = hidden[0, nd + cache_index.prefill.chunk_len[0] - 1]
+        h_last = jnp.concatenate([hidden[0, :nd], h_pre[None]], axis=0)
+    elif isinstance(cache_index, PagedState) and cache_index.chunk_len is not None:
         h_last = hidden[:, cache_index.chunk_len[0] - 1]
     else:
         h_last = hidden[:, -1]

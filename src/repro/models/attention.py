@@ -144,6 +144,42 @@ def _sdpa_chunked(q, k, v, causal, window, q_chunk, kv_chunk, q_offset=0):
     return outs[:, :s]
 
 
+def _paged_chunk_attn(q, k, v, pool_layer, state, g: int, window: int):
+    """Attention for one (batch-1) streaming-prefill chunk over the paged
+    pool: gathered history pages + the chunk's own exact K/V inline (the
+    chunk never round-trips the FP8 grid early). Shared by the pure chunk
+    branch and the mixed step's prefill rows — the mask/gather math must
+    stay identical so the two engines are bit-identical.
+
+    q/k/v: (1, S, ·, hd) — the chunk's queries and fresh K/V, rope applied.
+    ``state`` is the batch-1 chunk PagedState (lengths[0] = chunk start,
+    page-aligned). Gathered columns at or past the start — the chunk's own
+    just-written pages, or null-page fill from bucketing — are masked; only
+    true history is read from pages.
+    """
+    s = q.shape[1]
+    hist, hist_len = gather_history(pool_layer, state, s)
+    start = state.lengths[0]
+    kc, vc = k, v
+    if hist_len:
+        kc = jnp.concatenate([hist["k"].astype(k.dtype), k], 1)
+        vc = jnp.concatenate([hist["v"].astype(v.dtype), v], 1)
+    kf, vf = _repeat_kv(kc, g), _repeat_kv(vc, g)
+    # within the chunk the mask is plain tril (a bucketed chunk's pad
+    # columns are only visible to pad rows, whose outputs are discarded);
+    # history columns are visible iff truly history
+    ok = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(hist_len)[None, :] < start,
+                          (s, hist_len)),
+         jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
+    if window:
+        qi = start + jnp.arange(s)
+        ki = jnp.concatenate([jnp.arange(hist_len), qi])
+        ok &= ki[None, :] > qi[:, None] - window
+    return _sdpa_full(q, kf, vf,
+                      jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32))
+
+
 def attention(
     p,
     x,
@@ -201,6 +237,40 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     if isinstance(cache_index, PagedState):
+        if cache_index.prefill is not None:
+            # mixed engine step: one fused (batch-1) token row carrying one
+            # decode token per slot followed by one request's bucketed
+            # prefill chunk. The first ``nd`` positions split out into the
+            # s == 1 decode path (slot batch restored on axis 0), the tail
+            # runs the streaming-chunk path — both appends commit to
+            # disjoint pages inside this same program (decode rows only
+            # touch their private boundary pages, the chunk only its own
+            # table; mid-prefill slots ride along with lengths zeroed, so
+            # their decode append null-redirects).
+            from repro.kernels import ops
+
+            assert causal, "mixed step assumes causal decode LMs"
+            assert b == 1, "mixed step is one fused token row (batch 1)"
+            pre = cache_index.prefill
+            dec = cache_index._replace(prefill=None)
+            nd = dec.lengths.shape[0]
+            k_dec = jnp.swapaxes(k[:, :nd], 0, 1)  # (nd, 1, KV, hd)
+            v_dec = jnp.swapaxes(v[:, :nd], 0, 1)
+            cache1 = append_paged(kv_cache, {"k": k_dec, "v": v_dec}, dec)
+            new_cache = append_prefill_chunk(
+                cache1, {"k": k[:, nd:], "v": v[:, nd:]}, pre)
+            q_dec = jnp.swapaxes(q[:, :nd], 0, 1)
+            o_dec = ops.paged_decode_attn(
+                q_dec[:, 0], new_cache, dec.page_table, dec.lengths + 1,
+                window=cfg.window,
+            )
+            o_pre = _paged_chunk_attn(q[:, nd:], k[:, nd:], v[:, nd:],
+                                      new_cache, pre, g, cfg.window)
+            o = jnp.concatenate(
+                [jnp.swapaxes(o_dec[:, None], 0, 1).astype(x.dtype),
+                 o_pre.astype(x.dtype)], axis=1)  # (1, nd + S, H, hd)
+            o = o.reshape(b, s, h * hd)
+            return linear(p["wo"], quant_act(o, a_fmt), p.get("bo")), new_cache
         # chunk_len distinguishes a (possibly length-1) streaming-prefill
         # chunk from a decode step: decode's append redirects lengths == 0
         # rows to the null page, which would silently drop a prompt's
@@ -233,26 +303,8 @@ def attention(
             assert b == 1, "streaming paged prefill is row-wise (batch 1)"
             new_cache = append_prefill_chunk(kv_cache, {"k": k, "v": v},
                                              cache_index)
-            hist, hist_len = gather_history(new_cache, cache_index, s)
-            start = cache_index.lengths[0]
-            kc, vc = k, v
-            if hist_len:
-                kc = jnp.concatenate([hist["k"].astype(k.dtype), k], 1)
-                vc = jnp.concatenate([hist["v"].astype(v.dtype), v], 1)
-            kf, vf = _repeat_kv(kc, g), _repeat_kv(vc, g)
-            # within the chunk the mask is plain tril (a bucketed chunk's
-            # pad columns are only visible to pad rows, whose outputs are
-            # discarded); history columns are visible iff truly history
-            ok = jnp.concatenate(
-                [jnp.broadcast_to(jnp.arange(hist_len)[None, :] < start,
-                                  (s, hist_len)),
-                 jnp.tril(jnp.ones((s, s), jnp.bool_))], axis=1)
-            if cfg.window:
-                qi = start + jnp.arange(s)
-                ki = jnp.concatenate([jnp.arange(hist_len), qi])
-                ok &= ki[None, :] > qi[:, None] - cfg.window
-            o = _sdpa_full(q, kf, vf,
-                           jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32))
+            o = _paged_chunk_attn(q, k, v, new_cache, cache_index, g,
+                                  cfg.window)
         o = o.reshape(b, s, h * hd)
         out = linear(p["wo"], quant_act(o, a_fmt), p.get("bo"))
         return out, new_cache

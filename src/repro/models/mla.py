@@ -106,7 +106,39 @@ def mla_attention(
         # inside the latent flash-decoding kernel (ops.paged_mla_decode_attn
         # — KV = 1 head, k = concat(ckv, krope), v = the ckv view); the
         # chunk path attends the dequantized page gather in jnp.
-        if s == 1 and cache_index.chunk_len is None:
+        if cache_index.prefill is not None:
+            # mixed engine step: the fused batch-1 row is [one decode token
+            # per slot | one request's bucketed prefill chunk]. Decode
+            # latents split out onto axis 0 and append at each slot's true
+            # position (mid-prefill slots have lengths zeroed, so their
+            # append null-redirects); the chunk tail appends page-aligned.
+            # The appends target disjoint pages, so committing both in one
+            # program preserves every pool invariant.
+            pre = cache_index.prefill
+            nd = cache_index.lengths.shape[0]
+            dec = cache_index._replace(prefill=None)
+            ckv_dec = jnp.swapaxes(c_kv[:, :nd], 0, 1)  # (nd, 1, r)
+            kr_dec = jnp.swapaxes(k_rope[:, :nd], 0, 1)
+            cache1 = append_paged(
+                kv_cache, {"ckv": ckv_dec, "krope": kr_dec}, dec)
+            new_cache = append_prefill_chunk(
+                cache1, {"ckv": c_kv[:, nd:], "krope": k_rope[:, nd:]}, pre)
+            sc = s - nd
+            hist, hist_len = gather_history(new_cache, pre, sc)
+            start = pre.lengths[0]
+            ckv = c_kv[:, nd:].astype(jnp.bfloat16)
+            krope = k_rope[:, nd:].astype(jnp.bfloat16)
+            if hist_len:
+                ckv = jnp.concatenate(
+                    [hist["ckv"].astype(jnp.bfloat16), ckv], axis=1)
+                krope = jnp.concatenate(
+                    [hist["krope"].astype(jnp.bfloat16), krope], axis=1)
+            ok = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(hist_len)[None, :] < start,
+                                  (sc, hist_len)),
+                 jnp.tril(jnp.ones((sc, sc), jnp.bool_))], axis=1)
+            pmsk4 = jnp.where(ok, 0.0, -1e30)[None, None].astype(jnp.float32)
+        elif s == 1 and cache_index.chunk_len is None:
             new_cache = append_paged(
                 kv_cache, {"ckv": c_kv, "krope": k_rope}, cache_index
             )
@@ -169,7 +201,35 @@ def mla_attention(
                 jnp.einsum("bshn,hnr->hbsr", q_nope, wk_b,
                            preferred_element_type=accum_dtype()), 0, 2
             ).astype(x.dtype)
-        if paged and s == 1 and cache_index.chunk_len is None:
+        if paged and cache_index.prefill is not None:
+            # mixed step: decode rows run the latent flash-decoding kernel
+            # exactly as a pure decode step (same shapes, same inputs — the
+            # token streams stay bit-identical), the chunk tail runs the
+            # masked einsum over the gathered history built above
+            from repro.kernels import ops
+
+            q_lat_d = shard_heads(jnp.swapaxes(q_lat[:, :nd], 0, 1))
+            q_rope_d = shard_heads(jnp.swapaxes(q_rope[:, :nd], 0, 1))
+            ctx_dec = ops.paged_mla_decode_attn(
+                q_lat_d[:, 0], q_rope_d[:, 0], new_cache,
+                dec.page_table, dec.lengths + 1,
+                scale=1.0 / float(scale_dim) ** 0.5,
+            )  # (nd, H, r)
+            s_lat = jnp.einsum(
+                "bshr,btr->bhst", q_lat[:, nd:], ckv,
+                preferred_element_type=accum_dtype()).astype(jnp.float32)
+            s_rope = jnp.einsum(
+                "bshr,btr->bhst", q_rope[:, nd:], krope.astype(q_rope.dtype),
+                preferred_element_type=accum_dtype()).astype(jnp.float32)
+            att = jax.nn.softmax(
+                (s_lat + s_rope) / jnp.sqrt(scale_dim) + pmsk4, axis=-1)
+            ctx_pre = jnp.moveaxis(
+                jnp.einsum("bhst,btr->bhsr", att.astype(ckv.dtype), ckv,
+                           preferred_element_type=accum_dtype()), 1, 2)
+            ctx_lat = jnp.concatenate(
+                [jnp.swapaxes(ctx_dec[:, None], 0, 1).astype(x.dtype),
+                 ctx_pre.astype(x.dtype)], axis=1)  # (1, nd + S, H, r)
+        elif paged and s == 1 and cache_index.chunk_len is None:
             # latent flash decoding over the page pool: the gather, FP8
             # dequant, score concat and online softmax all happen inside
             # the kernel (ref backend: the jnp oracle with identical

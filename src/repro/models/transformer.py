@@ -242,8 +242,18 @@ def block_apply(
 
             kind, mesh = get_moe_impl()
             x_ln = norm(pf["ln"], x, nk, cfg.norm_eps)
+            # Serving (paged) routes per-token: group_size=1 puts every
+            # token in its own dispatch group, so capacity never drops an
+            # assignment and each token's experts depend only on its own
+            # hidden state. Batch composition — which rows share the
+            # program, decode lanes vs a piggybacked prefill chunk, chunk
+            # bucketing — can then never change a token's routing, which
+            # is what makes serving outputs independent of batchmates and
+            # the mixed engine bit-identical to the alternating one.
+            # Training keeps the capacity-bounded grouped dispatch.
+            gs = 1 if paged else 1024
             ok_a2a = (
-                kind == "a2a" and mesh is not None
+                kind == "a2a" and mesh is not None and not paged
                 and x.shape[1] % mesh.shape.get("model", 1) == 0
                 and x.shape[0] % mesh.shape.get("data", 1) == 0
             )
@@ -253,9 +263,10 @@ def block_apply(
                 # serving on a mesh: replicated einsum dispatch (token-
                 # identical routing), expert FFNs sharded over the stack
                 h, aux = moe_decode_ep(pf["moe"], x_ln, cfg, mesh,
-                                       a_fmt=a_fmt)
+                                       a_fmt=a_fmt, group_size=gs)
             else:
-                h, aux = moe_layer(pf["moe"], x_ln, cfg, a_fmt=a_fmt)
+                h, aux = moe_layer(pf["moe"], x_ln, cfg, a_fmt=a_fmt,
+                                   group_size=gs)
             x = x + h
     return x, new_cache, aux
 
@@ -363,7 +374,16 @@ def lm_forward(
     b, s = x.shape[:2]
     paged = isinstance(cache_index, PagedState)
     if positions is None:
-        if paged:  # per-row true lengths -> (B, S) positions (rope
+        if paged and cache_index.prefill is not None:
+            # mixed step: one fused batch-1 row = [one decode token per
+            # slot | one bucketed prefill chunk]; positions follow suit —
+            # each decode token sits at its slot's true length, chunk
+            # token j at (chunk start + j)
+            nd = cache_index.lengths.shape[0]
+            positions = jnp.concatenate(
+                [cache_index.lengths,
+                 cache_index.prefill.lengths[0] + jnp.arange(s - nd)])[None]
+        elif paged:  # per-row true lengths -> (B, S) positions (rope
             # broadcasts them; the synchronized-offset hack is gone)
             positions = cache_index.lengths[:, None] + jnp.arange(s)[None]
         else:

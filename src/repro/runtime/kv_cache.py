@@ -190,6 +190,12 @@ class PagedState(NamedTuple):
       * ``slabs`` — recurrent families (SSM/xLSTM): per-row state-slab ids
         into the fixed-size slab pool (the last slab id is the reserved
         null slab, like the null page).
+      * ``prefill`` — the *mixed engine step*: a nested batch-1 chunk state
+        (page_table/lengths/chunk_len of one streaming-prefill chunk) that
+        piggybacks on a decode step. The outer state indexes the decode
+        rows; the fused token row is ``[decode tokens | chunk tokens]`` and
+        the models split it at ``lengths.shape[0]``. The nested state never
+        nests again (``prefill.prefill`` is always None).
     Unused fields stay ``None``; models treat the tuple as an opaque pytree.
     """
 
@@ -199,6 +205,7 @@ class PagedState(NamedTuple):
     cross_table: Optional[jnp.ndarray] = None  # (B, cross_pp) int32 page ids
     enc_lengths: Optional[jnp.ndarray] = None  # (B,) int32 encoder lengths
     slabs: Optional[jnp.ndarray] = None  # (B,) int32 state-slab ids
+    prefill: Optional["PagedState"] = None  # mixed step: nested chunk state
 
 
 def pool_keys(pool: Dict):
@@ -518,9 +525,11 @@ def append_paged(pool_layer: Dict, new_vals: Dict, state: PagedState) -> Dict:
         vals = vals.at[rows, off].set(new)
         # zero page slots past this row's position: a recycled page may
         # carry a previous owner's stale codes, which must not leak into
-        # the page amax (and so the scales) of its new owner
+        # the page amax (and so the scales) of its new owner. where(), not
+        # multiply: 0 * NaN = NaN, and a stale non-finite code must not
+        # survive the zeroing
         live = jnp.arange(page)[None, :] <= off[:, None]
-        vals = vals * live[:, :, None, None].astype(vals.dtype)
+        vals = jnp.where(live[:, :, None, None], vals, 0.0)
         ncodes, nsmax, nshift = quantize_pages(vals)
         if not has_heads:
             ncodes = ncodes[..., 0, :]
@@ -562,8 +571,15 @@ def append_prefill_chunk(pool_layer: Dict, new_vals: Dict,
         new = new_vals[name].astype(jnp.float32)[0]  # (S, KV, hd) | (S, dim)
         s = new.shape[0]
         if state.chunk_len is not None:  # zero the pad tail of a bucketed chunk
-            live = (jnp.arange(s) < state.chunk_len[0]).astype(jnp.float32)
-            new = new * live.reshape((s,) + (1,) * (new.ndim - 1))
+            # where(), not multiply: pad-position K/V sits downstream of the
+            # real chunk through attention, so a non-finite activation in
+            # the chunk makes the pad values NaN — and 0 * NaN = NaN. The
+            # pad tail overhangs into the shared null page, which the mixed
+            # engine's decode lanes read in the same fused program; the
+            # zeroing must hold even for non-finite input
+            live = jnp.arange(s) < state.chunk_len[0]
+            new = jnp.where(live.reshape((s,) + (1,) * (new.ndim - 1)),
+                            new, 0.0)
         npg = -(-s // page)
         pad = npg * page - s
         if pad:

@@ -235,7 +235,25 @@ class SchedulerConfig:
         for a full re-prefill (None = unbounded).
     Both watermarks are bypassed when nothing is running — the pool is
     then fully available, so progress is always made when physically
-    possible."""
+    possible.
+
+    ``engine`` selects the step architecture (orthogonal to ``policy``):
+      * ``"mixed"`` (default) — every ``Server.step()`` carries all
+        active decode rows *plus* up to ``prefill_token_budget`` tokens
+        of one request's next prefill chunk, fused into a single jitted
+        program: decode never stalls while a prompt streams in.
+        Families the fusion does not apply to (recurrent/slab, enc-dec,
+        multi-device meshes) fall back to alternating automatically —
+        ``Server.engine`` reports the resolved choice.
+      * ``"alternating"`` — the legacy shape: whole prompts stream at
+        admission (serial chunk steps), decode steps carry decode rows
+        only. Kept as the bench baseline and the fallback target.
+    ``prefill_token_budget`` is the per-step prefill chunk size in
+    *tokens* for both engines — the mixed step's piggyback cap and the
+    alternating stream's chunk length (None = ``prefill_chunk_pages``
+    worth), so the engines stay chunk-for-chunk comparable. It is
+    rounded down to a page multiple (min one page) so chunk starts stay
+    page-aligned — the ``append_prefill_chunk`` contract."""
 
     policy: str = "token_budget"
     headroom_pages: int = 1
@@ -244,6 +262,8 @@ class SchedulerConfig:
     steal_cooldown: int = 2
     prefill_chunk_pages: int = 4
     spill_budget_bytes: Optional[int] = None
+    engine: str = "mixed"
+    prefill_token_budget: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -595,6 +615,8 @@ class Server:
         sched = config.scheduler
         if sched.policy not in ("token_budget", "reserve"):
             raise ValueError(f"unknown scheduler policy {sched.policy!r}")
+        if sched.engine not in ("mixed", "alternating"):
+            raise ValueError(f"unknown scheduler engine {sched.engine!r}")
         self.config = config
         slots, max_seq = config.slots, config.max_seq
         policy, page_size = config.cache, config.page_size
@@ -615,6 +637,14 @@ class Server:
         self.steal_cooldown = sched.steal_cooldown
         self.prefill_chunk_pages = sched.prefill_chunk_pages
         self.spill_budget_bytes = sched.spill_budget_bytes
+        # mixed-step prefill piggyback budget, in tokens: rounded down to a
+        # page multiple (min one page) so chunk starts stay page-aligned —
+        # the append_prefill_chunk contract every pool invariant rides on
+        budget = sched.prefill_token_budget
+        if budget is None:
+            budget = sched.prefill_chunk_pages * config.page_size
+        self.prefill_token_budget = max(
+            config.page_size, (budget // config.page_size) * config.page_size)
         self.strict = config.strict
         self.audit_every = config.audit_every
         self.faults = faults
@@ -624,6 +654,7 @@ class Server:
         self.finished: List[Request] = []
         self.stats = {
             "steps": 0, "slot_steps": 0, "decoded_tokens": 0,
+            "programs": 0,  # every jitted launch: encode/prefill/decode/mixed
             "prefill_tokens": 0, "preemptions": 0, "resumes": 0,
             "pages_stolen": 0, "spill_evictions": 0, "truncated": 0,
             "prefix_hit_pages": 0, "prefix_hit_tokens": 0,
@@ -795,6 +826,15 @@ class Server:
         # recurrent state cannot mask pad tokens out of its carry, so
         # slab-holding families stream exact chunk lengths instead
         self._bucket_prefill = not self._has_slabs
+        # resolved step architecture: the mixed (fused prefill+decode) step
+        # applies to pure single-device page families only — recurrent
+        # state cannot ride a padded fused row, enc-dec admission runs the
+        # encoder eagerly, and the sharded engine keeps the alternating
+        # shape its token-identity suite pins down. Everything else falls
+        # back to alternating steps (Server.engine reports the choice).
+        self._mixed_step = (sched.engine == "mixed" and self._has_pages
+                            and not self._has_slabs and not self._encdec
+                            and self._mesh is None)
         if self._mesh is not None:
             self._shard_state(cfg, a_fmt)
 
@@ -840,16 +880,29 @@ class Server:
         # a real mask; reused so the no-fault path allocates nothing)
         self._no_poison = jnp.zeros((slots,), jnp.bool_)
         self._no_poison1 = jnp.zeros((1,), jnp.bool_)
+        self._no_poison_m = jnp.zeros((slots + 1,), jnp.bool_)
         # per-slot sampling params threaded into the jitted step as five
         # flat arrays (greedy defaults on idle rows); refreshed from the
         # active requests every step — fixed-trace, never a retrace key
         self._samp = smp.slot_arrays(slots)
+        # the mixed step's sampling rows: one per slot plus the prefill row
+        self._samp_m = smp.slot_arrays(slots + 1)
         # engine emissions for the streaming front-end: decoded-token and
         # terminal events, buffered only while ``collect_events`` is on
         # (a sync run_until_drained caller would otherwise grow the
         # buffer unboundedly with nobody draining it)
         self.collect_events = False
         self._events: List[TokenEvent] = []
+
+    @property
+    def engine(self) -> str:
+        """The *resolved* step architecture: ``"mixed"`` when the fused
+        prefill+decode step is in effect, ``"alternating"`` when the
+        engine fell back (recurrent/slab and enc-dec families, meshes) or
+        was configured that way. May differ from
+        ``config.scheduler.engine`` — that is the request, this is what
+        actually runs."""
+        return "mixed" if self._mixed_step else "alternating"
 
     @property
     def _null_page(self) -> int:
@@ -1324,7 +1377,25 @@ class Server:
                 self._alloc_cross(slot)
         if self._has_slabs:
             self._alloc_slab(slot)
-        self._prefill_slot(slot, req)
+        if self._mixed_step:
+            # mixed engine: the context streams through subsequent fused
+            # engine steps (one budgeted chunk piggybacked per step), so
+            # admission only maps/allocates pages. Run the write-target
+            # freeze check here — the stream's pages were just mapped and
+            # stay private (only this slot's own _register_prefix can
+            # freeze them) until the stream completes.
+            if self._prefix is not None:
+                self._prefix.assert_unfrozen(
+                    self.slot_pages[slot][
+                        int(self.lengths[slot]) // self.page_size:
+                        kvc.pages_needed(ctx_len, self.page_size)],
+                    frozen_base=self._frozen_base)
+            # the mixed step derives the stream context and fresh-ness from
+            # the request itself (prompt + out[:-1]; fresh iff no out), so
+            # a resume marker has nothing left to carry
+            req.resume_ctx = None
+        else:
+            self._prefill_slot(slot, req)
         return True
 
     # -- streaming paged prefill ----------------------------------------------
@@ -1341,6 +1412,33 @@ class Server:
             slabs=(jnp.asarray(self.slab_table[rows])
                    if self._has_slabs else None),
         )
+
+    def _chunk_plan(self, slot: int, n: int, pos: int, budget: int):
+        """Plan one streaming-prefill chunk for ``slot`` at stream position
+        ``pos`` of an ``n``-token context: the true chunk length ``take``,
+        its power-of-two bucketed pad length ``padded``, the bucketed page
+        table width ``w`` and the (1, w) trimmed table. Shared by the
+        serial prefill loop and the mixed engine step, so both compile the
+        same O(log max_seq) family of chunk shapes. Only pages holding
+        real data up to the chunk's true end are mapped: a bucketed
+        chunk's zeroed pad writes overhang the last data page, and
+        append_prefill_chunk's contract is that those positions must point
+        at the null page — not at allocated headroom (harmless while
+        private, corruption once shared)."""
+        page = self.page_size
+        take = min(budget, n - pos)
+        if self._bucket_prefill:
+            padded = min(_next_pow2(take), budget)
+            w = _next_pow2(pos // page + kvc.pages_needed(padded, page))
+        else:
+            padded = take
+            w = (kvc.pages_needed(pos + take, page) if self._has_pages
+                 else 1)
+        own = self.slot_pages[slot]
+        table = np.full((1, w), self._null_page, np.int32)
+        m = min(w, len(own), kvc.pages_needed(pos + take, page))
+        table[0, :m] = own[:m]
+        return take, padded, w, table
 
     def _prefill_slot(self, slot: int, req: Request):
         """Prefill a (re)admitted request: stream its context through the
@@ -1368,17 +1466,18 @@ class Server:
                 self.pools = _encode_cross_jit(self.params, frames,
                                                self.pools, table,
                                                cfg=self.cfg, a_fmt=self.a_fmt)
+            self.stats["programs"] += 1
             self.enc_lengths[slot] = self.cfg.encoder_seq
 
-        chunk = self.prefill_chunk_pages * page
-        own = self.slot_pages[slot]
+        chunk = self.prefill_token_budget
         start = int(self.lengths[slot])  # > 0: shared prefix already mapped
         if self._prefix is not None:
             # the stream writes pages [start/page, ceil(n/page)) — none of
             # them may be shared-frozen (boundary pages stay private), and
             # in a mixed pool none may be a packed FP4 logical id
             self._prefix.assert_unfrozen(
-                own[start // page: kvc.pages_needed(n, page)],
+                self.slot_pages[slot][start // page:
+                                      kvc.pages_needed(n, page)],
                 frozen_base=self._frozen_base)
         # the final chunk's in-graph sample seeds the stream (emitted-token
         # index = len(out): 0 for a fresh prefill; a resume re-prefill
@@ -1390,23 +1489,8 @@ class Server:
         ok = True
         pos = start
         while pos < n:
-            take = min(chunk, n - pos)
-            if self._bucket_prefill:
-                padded = min(_next_pow2(take), chunk)
-                w = _next_pow2(pos // page + kvc.pages_needed(padded, page))
-            else:
-                padded = take
-                w = (kvc.pages_needed(pos + take, page) if self._has_pages
-                     else 1)
+            take, padded, w, table = self._chunk_plan(slot, n, pos, chunk)
             toks = ctx[pos: pos + take] + [0] * (padded - take)
-            table = np.full((1, w), self._null_page, np.int32)
-            # map only pages holding real data up to this chunk's true end:
-            # a bucketed chunk's zeroed pad writes overhang the last data
-            # page, and append_prefill_chunk's contract is that those
-            # positions must point at the null page — not at allocated
-            # headroom (harmless while private, corruption once shared)
-            m = min(w, len(own), kvc.pages_needed(pos + take, page))
-            table[0, :m] = own[:m]
             # chunk_len rides along for every prefill chunk (not just
             # bucketed ones): models use it both to mask pad positions and
             # to tell a 1-token chunk apart from a decode step
@@ -1419,6 +1503,7 @@ class Server:
                     self.params, self.pools, jnp.asarray([toks], jnp.int32),
                     state, self._no_poison1, samp1)
             self.pools = pools
+            self.stats["programs"] += 1
             ok = ok and bool(np.asarray(row_ok)[0])
             self.prefill_traces.add((padded, w))
             pos += take
@@ -1591,8 +1676,12 @@ class Server:
         req = sp.req
         # KV context at preemption = prompt + out[:-1] (the newest token
         # was produced but not yet fed back); re-prefilling exactly that
-        # context lets decode continue by feeding out[-1] as usual
-        req.resume_ctx = list(req.prompt) + list(req.out[:-1])
+        # context lets decode continue by feeding out[-1] as usual. A
+        # request spilled mid-prefill (no tokens out yet, mixed engine)
+        # re-enters as fresh — marking it resumed would swallow the seed
+        # token its first completed prefill is supposed to emit
+        req.resume_ctx = (list(req.prompt) + list(req.out[:-1])
+                          if req.out else None)
         req.evictions += 1
         self.stats["spill_evictions"] += 1
         self._enqueue(req)
@@ -1856,12 +1945,95 @@ class Server:
         return diag
 
     # -- engine step ----------------------------------------------------------
+    @staticmethod
+    def _ctx_target(req: Request) -> int:
+        """The KV length at which ``req`` is fully prefilled and decoding:
+        its prompt plus every emitted token except the newest (produced but
+        not yet fed back). A slot below this target is mid-prefill."""
+        return len(req.prompt) + max(len(req.out) - 1, 0)
+
+    def _extend_shared(self, slot: int, ctx: List[int]):
+        """Stream-start prefix re-walk for the mixed engine. Between this
+        request's admission and the first chunk of its stream, a sibling
+        stream may have registered exactly the prefix this slot is about
+        to recompute — a window the alternating engine never has (its
+        prefill completes inside admission, so the walk and the stream
+        are atomic). Re-walk the index and adopt any newly frozen pages:
+        map each over the private page admission allocated for the same
+        position (released back to the pool — or appended, when a spill
+        restored fewer pages than the walk now covers) and advance the
+        stream past them. Adopted content is bit-identical to what the
+        stream would have written, by the same determinism argument
+        admission-time hits rely on."""
+        page = self.page_size
+        shared = self.slot_shared[slot]
+        req = self.active[slot]
+        hits = self._prefix.walk(ctx, max_pages=(len(ctx) - 1) // page,
+                                 root=self._prefix_root(req))
+        if len(hits) <= shared:
+            return
+        own = self.slot_pages[slot]
+        for i in range(shared, len(hits)):
+            pid = hits[i]
+            if self.page_refs[pid] == 0:
+                self._prefix.unpark(pid)
+            self.page_refs[pid] += 1
+            if i < len(own):
+                self._release_page(own[i])
+                own[i] = pid
+            else:
+                own.append(pid)
+            self.page_table[slot, i] = pid
+        self.slot_shared[slot] = len(hits)
+        self.lengths[slot] = len(hits) * page
+        self.stats["prefix_hit_pages"] += len(hits) - shared
+        self.stats["prefix_hit_tokens"] += (len(hits) - shared) * page
+
+    def _grow_for_chunk(self, slot: int):
+        """Make sure ``slot`` owns every page its next prefill chunk will
+        write. Fresh admission allocates the whole context up front, but a
+        request resumed from a mid-prefill spill only got its already-
+        written pages restored — the remaining stream pages are allocated
+        here, chunk by chunk, with the same reclaim-then-steal ladder
+        ``_grow`` uses (the needer itself is a valid victim)."""
+        page = self.page_size
+        while self.active[slot] is not None:
+            req = self.active[slot]
+            end = min(int(self.lengths[slot]) + self.prefill_token_budget,
+                      self._ctx_target(req))
+            if kvc.pages_needed(end, page) <= len(self.slot_pages[slot]):
+                break
+            if self._free_capacity():
+                self._alloc(slot, 1)
+            elif not self._steal_for(slot):
+                break  # pragma: no cover — needer itself is a candidate
+
+    def _pick_prefill_slot(self) -> Optional[int]:
+        """The mixed engine's per-step prefill decision: the mid-prefill
+        slot whose request has waited longest (the same longest-waiting-
+        first key admission uses), or None when every active row is
+        decoding. One slot per step — the chunk budget is the fused
+        program's prefill lane and it is not split across requests."""
+        best = None
+        for s, req in enumerate(self.active):
+            if req is None or int(self.lengths[s]) >= self._ctx_target(req):
+                continue
+            key = (req.since, req.seq)
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
     def step(self):
-        """One decode step for all active slots. Per-slot true lengths, the
-        page table (and for enc-dec the cross table / for recurrent
-        families the slab ids) ride into the jitted step as inputs —
-        per-row positions and length masks, one fixed-shape program.
-        Returns True if any slot decoded."""
+        """One engine step. Alternating engine (or a mixed step with
+        nothing streaming): one decode token for every active slot.
+        Mixed engine with a request mid-prefill: the same decode rows
+        PLUS up to ``prefill_token_budget`` tokens of that request's next
+        chunk ride in one fused jitted program — decode never stalls
+        behind a long prompt. Per-slot true lengths, the page table (and
+        for enc-dec the cross table / for recurrent families the slab
+        ids) ride into the jitted step as inputs — per-row positions and
+        length masks, one fixed-shape program per (chunk bucket, table
+        bucket). Returns True if any slot made progress."""
         self._tick += 1
         self._alloc_faulted = (self.faults is not None
                                and self.faults.alloc_blocked(self._tick))
@@ -1869,19 +2041,49 @@ class Server:
         self._admit()
         if self.scheduler == "token_budget":
             self._grow()
+        pf_slot = self._pick_prefill_slot() if self._mixed_step else None
+        if pf_slot is not None:
+            r = self.active[pf_slot]
+            if (self._prefix is not None
+                    and int(self.lengths[pf_slot])
+                    == self.slot_shared[pf_slot] * self.page_size):
+                self._extend_shared(
+                    pf_slot, list(r.prompt) + list(r.out[:-1]))
+            self._grow_for_chunk(pf_slot)
+            pf_slot = self._pick_prefill_slot()  # a steal may have hit it
         if not any(self.active):
             return False
         self._step_no += 1
         self.stats["steps"] += 1
-        self.stats["slot_steps"] += sum(r is not None for r in self.active)
+        # decoding rows are the active slots at their context target; in
+        # the alternating engine that is every active slot (prefill runs
+        # to completion inside admission), in the mixed engine mid-prefill
+        # slots are excluded — they stream, they don't decode yet
+        decoding = [s for s, r in enumerate(self.active) if r is not None
+                    and int(self.lengths[s]) >= self._ctx_target(r)]
+        self.stats["slot_steps"] += len(decoding)
         if self._prefix is not None:
             # copy-on-write invariant: the page each row's append will
-            # requantize (its boundary page) must be private — a shared
+            # requantize (its boundary page — for a mid-prefill row, the
+            # first page its next chunk writes) must be private — a shared
             # frozen page in that position would corrupt every other owner
             self._prefix.assert_unfrozen(
                 (self.slot_pages[s][int(self.lengths[s]) // self.page_size]
                  for s, r in enumerate(self.active) if r is not None),
                 frozen_base=self._frozen_base)
+        pmask = (self.faults.poison_rows(self._step_no, self.slots)
+                 if self.faults is not None else None)
+        if pf_slot is not None:
+            self._step_mixed(pf_slot, decoding, pmask)
+        else:
+            self._step_decode(pmask)
+        if self.audit_every and self._step_no % self.audit_every == 0:
+            self.audit()
+        return True
+
+    def _step_decode(self, pmask):
+        """Pure-decode engine step: every active row is at its context
+        target and decodes one token."""
         tok = np.zeros((self.slots, 1), dtype=np.int32)
         for s, req in enumerate(self.active):
             if req is not None and req.out:
@@ -1893,8 +2095,6 @@ class Server:
                 smp.fill_slot(self._samp, s, req.sampling, len(req.out))
             else:
                 smp.clear_slot(self._samp, s)
-        pmask = (self.faults.poison_rows(self._step_no, self.slots)
-                 if self.faults is not None else None)
         poison = (jnp.asarray(pmask) if pmask is not None and pmask.any()
                   else self._no_poison)
         state = self._state_for(slice(None), self.lengths)
@@ -1902,36 +2102,124 @@ class Server:
             nxt_dev, row_ok, self.pools = self._decode(
                 self.params, self.pools, jnp.asarray(tok), state, poison,
                 smp.as_tuple(self._samp))
+        self.stats["programs"] += 1
         nxt = np.asarray(nxt_dev)
         okrow = np.asarray(row_ok)
         for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            if not okrow[s]:
-                # the in-graph isfinite sentinel tripped for this row:
-                # quarantine exactly this request (its garbage token is
-                # never appended; pages/slab retire through the normal
-                # path) while the rest of the batch keeps going
-                if pmask is not None and pmask[s]:
-                    self.faults.note_nan(self._step_no, s, req.rid)
-                self._fail_slot(s, req,
-                                f"non-finite logits at decode step "
-                                f"{self._step_no} (slot {s})")
-                continue
-            self._emit_token(req, int(nxt[s]))
-            self.lengths[s] += 1
-            self.stats["decoded_tokens"] += 1
-            if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
-                if len(req.out) < req.max_new:
-                    # hit the max_seq - 1 context bound: the request ends
-                    # short of its token budget — flag it instead of
-                    # retiring silently as if it were satisfied
-                    req.status = "truncated"
-                    self.stats["truncated"] += 1
-                self._retire(s, req)
-        if self.audit_every and self._step_no % self.audit_every == 0:
-            self.audit()
-        return True
+            if req is not None:
+                self._finish_decode_row(s, req, okrow[s], nxt[s], pmask)
+
+    def _finish_decode_row(self, s: int, req: Request, ok: bool, nxt,
+                           pmask):
+        """Commit one decode row's step result: emit / retire, or
+        quarantine exactly this request when the in-graph isfinite
+        sentinel tripped (its garbage token is never appended; pages/slab
+        retire through the normal path) while the rest of the batch keeps
+        going."""
+        if not ok:
+            if pmask is not None and pmask[s]:
+                self.faults.note_nan(self._step_no, s, req.rid)
+            self._fail_slot(s, req,
+                            f"non-finite logits at decode step "
+                            f"{self._step_no} (slot {s})")
+            return
+        self._emit_token(req, int(nxt))
+        self.lengths[s] += 1
+        self.stats["decoded_tokens"] += 1
+        if len(req.out) >= req.max_new or self.lengths[s] >= self.max_seq - 1:
+            if len(req.out) < req.max_new:
+                # hit the max_seq - 1 context bound: the request ends
+                # short of its token budget — flag it instead of
+                # retiring silently as if it were satisfied
+                req.status = "truncated"
+                self.stats["truncated"] += 1
+            self._retire(s, req)
+
+    def _step_mixed(self, pf_slot: int, decoding: List[int], pmask):
+        """The fused mixed engine step: one jitted program carrying every
+        decoding row's next token plus up to ``prefill_token_budget``
+        tokens of ``pf_slot``'s next prefill chunk.
+
+        Anatomy: the token row is ``(1, slots + padded)`` — one decode
+        token per slot (garbage for non-decoding slots) followed by the
+        bucketed chunk. The cache index is the full-batch decode
+        PagedState with a nested batch-1 ``prefill`` state for the chunk;
+        mid-prefill slots (including ``pf_slot`` itself) ride with their
+        lengths zeroed so their garbage decode-lane appends null-redirect
+        instead of requantizing a page mid-stream. Logits come back
+        ``(slots + 1, V)``: one row per slot plus the chunk's last true
+        token, each sampled by its own fixed-trace sampling row and
+        covered by its own isfinite quarantine sentinel. Chunk and table
+        sizes are power-of-two bucketed by the same _chunk_plan the
+        serial loop uses, so trace count stays O(log max_seq)."""
+        req = self.active[pf_slot]
+        ctx = list(req.prompt) + list(req.out[:-1])
+        n = len(ctx)
+        pos = int(self.lengths[pf_slot])
+        take, padded, w, table = self._chunk_plan(
+            pf_slot, n, pos, self.prefill_token_budget)
+        is_decoding = np.zeros((self.slots,), bool)
+        is_decoding[decoding] = True
+        tok = np.zeros((1, self.slots + padded), np.int32)
+        dec_lengths = np.where(is_decoding, self.lengths, 0).astype(np.int32)
+        for s in range(self.slots):
+            r = self.active[s]
+            if r is not None and is_decoding[s]:
+                tok[0, s] = r.out[-1]
+                smp.fill_slot(self._samp_m, s, r.sampling, len(r.out))
+            else:
+                smp.clear_slot(self._samp_m, s)
+        tok[0, self.slots: self.slots + take] = ctx[pos: pos + take]
+        # the chunk row samples at RNG index len(out): consumed as the
+        # stream's seed token only by a fresh request's final chunk —
+        # intermediate (and resume re-prefill) draws are discarded, and
+        # the stateless fold_in keying means the index is never burned
+        smp.fill_slot(self._samp_m, self.slots, req.sampling, len(req.out))
+        if pmask is not None and pmask.any():
+            # the chunk row inherits pf_slot's poison: a fault injected
+            # into the streaming request mid-prefill must trip the chunk
+            # row's sentinel (its decode-lane row is garbage and ignored)
+            poison = jnp.asarray(
+                np.concatenate([pmask, pmask[pf_slot:pf_slot + 1]]))
+        else:
+            poison = self._no_poison_m
+        pre_state = kvc.PagedState(
+            page_table=jnp.asarray(table),
+            lengths=jnp.asarray([pos], np.int32),
+            chunk_len=jnp.asarray([take], jnp.int32))
+        state = self._state_for(slice(None), dec_lengths)
+        state = state._replace(prefill=pre_state)
+        with self._trace_scope():
+            nxt_dev, row_ok, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(tok), state, poison,
+                smp.as_tuple(self._samp_m))
+        self.stats["programs"] += 1
+        self.prefill_traces.add((padded, w))
+        nxt = np.asarray(nxt_dev)
+        okrow = np.asarray(row_ok)
+        self.lengths[pf_slot] = pos + take
+        self.stats["prefill_tokens"] += take
+        if not okrow[self.slots]:
+            # non-finite logits in the chunk row: quarantine the streaming
+            # request alone. Its pages are NOT registered in the prefix
+            # index (frozen garbage would poison every future hit) and no
+            # seed token is appended — retire through the normal path so
+            # pages/slab accounting stays intact
+            if pmask is not None and pmask[pf_slot]:
+                self.faults.note_nan(self._step_no, pf_slot, req.rid)
+            self._fail_slot(pf_slot, req,
+                            f"non-finite logits during prefill of request "
+                            f"{req.rid} ({n} context tokens)",
+                            scrub_null=True)
+        elif pos + take == n:
+            if self._prefix is not None:
+                self._register_prefix(pf_slot, req)
+            if not req.out:  # fresh: the final chunk's draw seeds decode
+                self._emit_token(req, int(nxt[self.slots]))
+        for s in decoding:
+            r = self.active[s]
+            if r is not None:
+                self._finish_decode_row(s, r, okrow[s], nxt[s], pmask)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestResult]:
         """Step until queue, preempted set and slots are all empty; returns
@@ -2122,6 +2410,19 @@ class Server:
         if not self.stats["steps"]:
             return 0.0
         return self.stats["slot_steps"] / (self.stats["steps"] * self.slots)
+
+    def engine_utilization(self) -> float:
+        """Decoded tokens per jitted program launch, normalized by slot
+        count — the whole-engine number the mixed step raises over the
+        alternating engine. The alternating engine spends entire programs
+        on serial prefill chunks that decode nothing; the mixed engine
+        piggybacks those chunks on decode steps, so every launch carries
+        the full decode batch. Counts every launch: encode, prefill
+        chunks, decode and mixed steps."""
+        if not self.stats["programs"]:
+            return 0.0
+        return (self.stats["decoded_tokens"]
+                / (self.stats["programs"] * self.slots))
 
     @property
     def reusable_pages(self) -> List[int]:

@@ -379,7 +379,14 @@ class TestMixedServer:
         small for the workload, auditing every decode step. Three waves
         with two distinct prefixes force parks (wave drain), unparks
         (warm wave), reclaims (prefix rotation on a full frozen region)
-        and page-steal preempt/resume of slots holding mixed tables."""
+        and page-steal preempt/resume of slots holding mixed tables.
+
+        Pinned to the alternating engine: the reclaim assertion depends on
+        its wave timing (the first prefix's pages must hit refcount 0
+        before the second registers, so registration rotates the full
+        frozen region). The mixed engine overlaps those lifecycles — its
+        fp4 transition coverage lives in test_steal_resume_token_identity_
+        mixed and tests/test_mixed_engine.py."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(11)
         prefixes = [rng.integers(1, cfg.vocab_size, size=24).tolist()
@@ -389,7 +396,8 @@ class TestMixedServer:
             cache=CachePolicy(active_fmt="fp8_e4m3", frozen_fmt="fp4_e2m1",
                               frozen_pages=4),
             audit_every=1,
-            scheduler=SchedulerConfig(headroom_pages=1, steal_cooldown=1)))
+            scheduler=SchedulerConfig(headroom_pages=1, steal_cooldown=1,
+                                      engine="alternating")))
         reqs = []
         for wave in range(3):
             for i in range(6):

@@ -1,0 +1,264 @@
+"""Unified mixed prefill+decode engine step (chunked-prefill piggyback).
+
+Covers: greedy token-identity of the mixed engine vs the alternating
+baseline on GQA / MLA / MoE (bf16 + fp8 pages) under a steal-happy pool;
+mid-prefill NaN quarantine hitting only the streaming request; every
+decode row emitting a token on every engine step while a 4-page prompt
+streams in; the O(log max_seq) trace bound under a high-entropy workload
+of random prompt lengths; the family fallback matrix (recurrent-slab and
+enc-dec servers run the alternating engine even when mixed is requested);
+the ``prefill_token_budget`` knob's page rounding; and the mixed engine's
+whole-engine utilization beating the alternating baseline on a
+long-prompt / short-decode mix.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import tiny_lm_cfg
+
+from repro import models
+from repro.configs import get_smoke
+from repro.runtime.faults import FaultPlan
+from repro.runtime.serve import (Request, SchedulerConfig, Server,
+                                 ServerConfig)
+
+
+def _run_engine(params, cfg, prompts, engine, *, kv_fmt="fp8_e4m3",
+                slots=3, max_seq=48, page_size=4, pool_pages=None,
+                max_new=8, budget=None):
+    srv = Server(params, cfg, ServerConfig(
+        slots=slots, max_seq=max_seq, page_size=page_size, a_fmt=None,
+        pool_pages=pool_pages, kv_fmt=kv_fmt,
+        scheduler=SchedulerConfig(engine=engine,
+                                  prefill_token_budget=budget)))
+    assert srv.engine == engine
+    reqs = [Request(rid=i, prompt=list(p), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert srv.audit()["violations"] == 0
+    return srv, reqs
+
+
+class TestTokenIdentity:
+    """Greedy token streams must be bit-identical between the mixed and
+    alternating engines: the mixed step's per-row numerics (decode lanes
+    and the piggybacked chunk) match the dedicated programs exactly."""
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_gqa_steal_happy(self, trained_tiny, kv_fmt):
+        """A pool tight enough to force steals + resumes mid-run: both
+        engines still produce identical outputs for every request."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(17)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(t)).tolist()
+                   for t in rng.integers(3, 18, size=6)]
+        outs = {}
+        for engine in ("alternating", "mixed"):
+            srv, reqs = _run_engine(params, cfg, prompts, engine,
+                                    kv_fmt=kv_fmt, pool_pages=12,
+                                    max_new=12)
+            assert srv.stats["preemptions"] >= 1, "scenario must steal"
+            outs[engine] = [r.out for r in reqs]
+        assert outs["mixed"] == outs["alternating"]
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_mla(self, trained_tiny_mla, kv_fmt):
+        cfg, params = trained_tiny_mla
+        rng = np.random.default_rng(23)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(t)).tolist()
+                   for t in rng.integers(3, 14, size=4)]
+        outs = {}
+        for engine in ("alternating", "mixed"):
+            _, reqs = _run_engine(params, cfg, prompts, engine,
+                                  kv_fmt=kv_fmt, slots=2, max_new=6)
+            outs[engine] = [r.out for r in reqs]
+        assert outs["mixed"] == outs["alternating"]
+
+    @pytest.mark.parametrize("kv_fmt", [None, "fp8_e4m3"])
+    def test_moe(self, kv_fmt):
+        """Expert routing is per-token, so the fused row must route each
+        token identically to the dedicated programs (engine-vs-engine
+        identity needs no training — both runs share the weights)."""
+        cfg = get_smoke("olmoe-1b-7b")
+        params = models.init_params(cfg, jax.random.PRNGKey(2))
+        rng = np.random.default_rng(29)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(t)).tolist()
+                   for t in rng.integers(3, 14, size=4)]
+        outs = {}
+        for engine in ("alternating", "mixed"):
+            _, reqs = _run_engine(params, cfg, prompts, engine,
+                                  kv_fmt=kv_fmt, slots=2, max_new=6)
+            outs[engine] = [r.out for r in reqs]
+        assert outs["mixed"] == outs["alternating"]
+
+
+class TestMidPrefillQuarantine:
+    def test_nan_mid_prefill_quarantines_streaming_request(
+            self, trained_tiny):
+        """A NaN injected while a request's prompt is still streaming
+        through the fused step fails exactly that request — its chunk-row
+        sentinel trips, its pages are scrubbed and never registered, and
+        every batchmate keeps decoding token-identically."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(31)
+        short = rng.integers(1, cfg.vocab_size, size=5).tolist()
+        long = rng.integers(1, cfg.vocab_size, size=16).tolist()
+        # step 1-2: rid 0 streams (4+1 tokens); steps 3..6: rid 1 streams
+        # 4 chunks of 4 while rid 0 decodes — step 4 poisons rid 1's slot
+        # mid-stream (8 of 16 prompt tokens written)
+        plan = FaultPlan(nan_logits=((4, 1),))
+        srv = Server(params, cfg, ServerConfig(
+            slots=2, max_seq=48, page_size=4, pool_pages=16, a_fmt=None,
+            kv_fmt="fp8_e4m3",
+            scheduler=SchedulerConfig(engine="mixed",
+                                      prefill_token_budget=4)),
+            faults=plan)
+        r0 = Request(rid=0, prompt=list(short), max_new=8)
+        r1 = Request(rid=1, prompt=list(long), max_new=8)
+        srv.submit(r0)
+        srv.submit(r1)
+        srv.run_until_drained()
+        assert r1.done and r1.status == "failed"
+        assert "during prefill" in r1.error
+        assert plan.nan_hits == [(4, 1, 1)]
+        assert srv.stats["failed"] == 1
+        assert r0.status == "ok" and r0.error is None
+        solo, ref = _run_engine(params, cfg, [short], "mixed", slots=1,
+                                budget=4)
+        assert r0.out == ref[0].out
+        assert srv.audit()["violations"] == 0
+        assert sorted(srv.free_pages + srv.reusable_pages) == \
+            list(range(srv._n_pages))
+
+
+class TestDecodeNeverStalls:
+    def test_every_decode_row_emits_while_prompt_streams(self,
+                                                         trained_tiny):
+        """The regression the mixed engine exists to fix: while a 4-page
+        prompt streams in, every already-decoding row emits one token on
+        every engine step — decode never waits for the prefill."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(37)
+        srv = Server(params, cfg, ServerConfig(
+            slots=3, max_seq=64, page_size=4, pool_pages=24, a_fmt=None,
+            kv_fmt="fp8_e4m3",
+            scheduler=SchedulerConfig(engine="mixed",
+                                      prefill_token_budget=4)))
+        early = [Request(rid=i,
+                         prompt=rng.integers(1, 64, size=3).tolist(),
+                         max_new=30) for i in range(2)]
+        for r in early:
+            srv.submit(r)
+        while not all(r.out for r in early):
+            srv.step()
+        late = Request(rid=9, prompt=rng.integers(1, 64, 16).tolist(),
+                       max_new=4)
+        srv.submit(late)
+        stream_steps = 0
+        while not late.out:  # late's prompt (16 tokens, 4 pages) streams
+            before = [len(r.out) for r in early]
+            assert srv.step()
+            stream_steps += 1
+            after = [len(r.out) for r in early]
+            assert after == [b + 1 for b in before], \
+                "a decode row stalled behind the streaming prompt"
+        assert stream_steps >= 4  # 16 tokens at 4/step, then the seed
+        assert srv.audit()["violations"] == 0
+
+
+class TestTraceBudget:
+    def test_trace_count_logarithmic_high_entropy(self, trained_tiny):
+        """Random prompt lengths across the whole context range compile
+        only the power-of-two bucketed family of fused chunk programs:
+        O(log max_seq), not one per distinct length."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(41)
+        lengths = rng.integers(1, 44, size=24)
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(t)).tolist()
+                   for t in lengths]
+        srv, _ = _run_engine(params, cfg, prompts, "mixed", max_seq=64,
+                             pool_pages=48, max_new=3, budget=8)
+        page = srv.page_size
+        chunk_buckets = (8).bit_length()           # padded in {1,2,4,8}
+        table_buckets = (64 // page).bit_length()  # w in {1,2,...,16}
+        assert len({int(t) for t in lengths}) > chunk_buckets * 2
+        for padded, w in srv.prefill_traces:
+            assert padded & (padded - 1) == 0 and padded <= 8
+            assert w & (w - 1) == 0 and w <= 64 // page
+        assert len(srv.prefill_traces) <= chunk_buckets * table_buckets
+
+
+class TestFamilyFallback:
+    def test_encdec_falls_back_to_alternating(self):
+        cfg = get_smoke("whisper-tiny")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(params, cfg, ServerConfig(
+            slots=2, max_seq=32, page_size=4, a_fmt=None,
+            scheduler=SchedulerConfig(engine="mixed")))
+        assert srv.engine == "alternating"
+
+    def test_recurrent_slabs_fall_back_to_alternating(self):
+        cfg = get_smoke("xlstm-125m")
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(params, cfg, ServerConfig(
+            slots=2, max_seq=32, page_size=4, a_fmt=None,
+            scheduler=SchedulerConfig(engine="mixed")))
+        assert srv.engine == "alternating"
+
+    def test_dense_paged_runs_mixed_by_default(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = Server(params, cfg, ServerConfig(
+            slots=2, max_seq=32, page_size=4, a_fmt=None))
+        assert srv.engine == "mixed"
+        alt = Server(params, cfg, ServerConfig(
+            slots=2, max_seq=32, page_size=4, a_fmt=None,
+            scheduler=SchedulerConfig(engine="alternating")))
+        assert alt.engine == "alternating"
+
+    def test_unknown_engine_rejected(self, trained_tiny):
+        cfg, params = trained_tiny
+        with pytest.raises(ValueError, match="engine"):
+            Server(params, cfg, ServerConfig(
+                slots=2, max_seq=32, page_size=4, a_fmt=None,
+                scheduler=SchedulerConfig(engine="fused")))
+
+
+class TestBudgetKnob:
+    def test_budget_rounds_down_to_page_multiple(self, trained_tiny):
+        cfg, params = trained_tiny
+        srv = Server(params, cfg, ServerConfig(
+            slots=1, max_seq=32, page_size=4, a_fmt=None,
+            scheduler=SchedulerConfig(prefill_token_budget=6)))
+        assert srv.prefill_token_budget == 4
+        tiny = Server(params, cfg, ServerConfig(
+            slots=1, max_seq=32, page_size=4, a_fmt=None,
+            scheduler=SchedulerConfig(prefill_token_budget=1)))
+        assert tiny.prefill_token_budget == 4  # min one page
+        dflt = Server(params, cfg, ServerConfig(
+            slots=1, max_seq=32, page_size=4, a_fmt=None))
+        assert dflt.prefill_token_budget == \
+            dflt.prefill_chunk_pages * dflt.page_size
+
+
+class TestEngineUtilization:
+    def test_mixed_beats_alternating_on_prefill_heavy_mix(self,
+                                                          trained_tiny):
+        """Long prompts + short decodes: the alternating engine burns
+        whole programs on chunks that decode nothing, so the mixed
+        engine's decoded-tokens-per-launch is strictly higher."""
+        cfg, params = trained_tiny
+        rng = np.random.default_rng(43)
+        prompts = [rng.integers(1, cfg.vocab_size, size=20).tolist()
+                   for _ in range(6)]
+        util = {}
+        for engine in ("alternating", "mixed"):
+            srv, _ = _run_engine(params, cfg, prompts, engine,
+                                 max_seq=48, pool_pages=48, max_new=4,
+                                 budget=8)
+            util[engine] = srv.engine_utilization()
+            assert srv.stats["programs"] > 0
+        assert util["mixed"] > util["alternating"]

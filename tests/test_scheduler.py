@@ -523,7 +523,13 @@ class TestPrefixCacheServing:
     def test_refcounts_and_parking_lifecycle(self, trained_tiny):
         """Two concurrent requests map the same physical prefix pages
         (refcount 2); retirement parks them at refcount 0 in the reusable
-        LRU instead of the free list; a third request re-acquires them."""
+        LRU instead of the free list; a third request re-acquires them.
+
+        Pinned to the alternating engine: the step-1 assertions require
+        admission to prefill+register the first request before the second
+        walks the prefix index; the mixed engine streams that prefill
+        across steps (its refcount/parking coverage is the steal-happy
+        identity fuzz in tests/test_mixed_engine.py)."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(3)
         page = 8
@@ -532,7 +538,9 @@ class TestPrefixCacheServing:
         mk = lambda rid: Request(rid=rid, prompt=shared + tail, max_new=3)
         srv = Server(params, cfg,
                      ServerConfig(slots=2, max_seq=64, kv_fmt="fp8_e4m3",
-                                  page_size=page, a_fmt=None))
+                                  page_size=page, a_fmt=None,
+                                  scheduler=SchedulerConfig(
+                                      engine="alternating")))
         a, b = mk(0), mk(1)
         srv.submit(a)
         srv.submit(b)
@@ -849,13 +857,20 @@ class TestPrefillTableContract:
         """Satellite: a bucketed chunk's zeroed pad writes overhang the
         last data page; ``append_prefill_chunk``'s contract is that those
         table positions point at the *null page* — never at allocated
-        headroom (a correctness hazard once pages are shared read-only)."""
+        headroom (a correctness hazard once pages are shared read-only).
+
+        Pinned to the alternating engine: the spy reads the serial chunk
+        loop's ``state.page_table``; the mixed step nests the same
+        _chunk_plan table under ``state.prefill`` (covered by
+        tests/test_mixed_engine.py)."""
         cfg, params = trained_tiny
         rng = np.random.default_rng(6)
         srv = Server(params, cfg,
                      ServerConfig(slots=1, max_seq=64, kv_fmt="fp8_e4m3",
                                   page_size=4, a_fmt=None,
-                                  scheduler=SchedulerConfig(prefill_chunk_pages=4)))
+                                  scheduler=SchedulerConfig(
+                                      prefill_chunk_pages=4,
+                                      engine="alternating")))
         tables = []
         orig = srv._decode
 
